@@ -1,0 +1,42 @@
+"""Table 1 (structural): the EquiformerV2 Gaunt-Selfmix layer — per-call cost
+of the added Equivariant Feature Interaction at L=4 and L=6, Gaunt vs CG.
+(OC20 training is out of scope for this container; the paper's claim we
+reproduce computationally is that the *added layer* is affordable only with
+the Gaunt parameterization.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.irreps import num_coeffs
+from repro.models.equivariant import SelfmixLayer
+
+from .common import time_fn
+
+NODES = 128
+CHANNELS = 16
+
+
+def run(L_list=(2, 4, 6), csv=True):
+    rows = []
+    for L in L_list:
+        x = jnp.asarray(
+            np.random.default_rng(0).normal(size=(NODES, CHANNELS, num_coeffs(L))),
+            jnp.float32)
+        out = []
+        for impl in ("cg", "gaunt", "gaunt_fused"):
+            layer = SelfmixLayer(L=L, channels=CHANNELS, tp_impl=impl)
+            params = layer.init(jax.random.PRNGKey(0))
+            t = time_fn(jax.jit(lambda p, a, layer=layer: layer(p, a)), params, x)
+            out.append((impl, t))
+        base = out[0][1]
+        rows.append((L, out))
+        if csv:
+            for impl, t in out:
+                print(f"table1_selfmix_L{L}_{impl},{t:.1f},speedup={base/t:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Fig 1(b): Equivariant Convolution — Gaunt+eSCN-sparsity conv vs the general
+Gaunt conv vs the CG conv (feature (x) SH filter), across L."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cg import cg_full_tensor_product
+from repro.core.conv import EquivariantConv
+from repro.core.irreps import num_coeffs
+from repro.core.so3 import real_sph_harm_jax
+
+from .common import time_fn
+
+EDGES = 256
+
+
+def run(L_list=(1, 2, 3, 4, 5, 6), csv=True):
+    rows = []
+    for L in L_list:
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(EDGES, num_coeffs(L))), jnp.float32)
+        r = rng.normal(size=(EDGES, 3))
+        r = jnp.asarray(r / np.linalg.norm(r, axis=-1, keepdims=True), jnp.float32)
+
+        def cg_conv(x, r):
+            filt = real_sph_harm_jax(L, r).astype(x.dtype)
+            return cg_full_tensor_product(x, filt, L, L, L)
+
+        t_cg = time_fn(jax.jit(cg_conv), x, r)
+
+        gen = EquivariantConv(L, L, L, method="general")
+        t_gen = time_fn(jax.jit(gen.__call__), x, r)
+
+        escn = EquivariantConv(L, L, L, method="escn")
+        t_escn = time_fn(jax.jit(escn.__call__), x, r)
+
+        rows.append((L, t_cg, t_gen, t_escn))
+        if csv:
+            print(f"fig1b_equiv_conv_L{L}_cg,{t_cg:.1f},speedup=1.00")
+            print(f"fig1b_equiv_conv_L{L}_gaunt_general,{t_gen:.1f},speedup={t_cg/t_gen:.2f}")
+            print(f"fig1b_equiv_conv_L{L}_gaunt_escn,{t_escn:.1f},speedup={t_cg/t_escn:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

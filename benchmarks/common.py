@@ -1,0 +1,21 @@
+"""Benchmark utilities: stable wall-time of jitted callables on CPU."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_fn"]
+
+
+def time_fn(fn, *args, iters: int = 10, warmup: int = 3) -> float:
+    """Median microseconds per call of a jitted fn (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6

@@ -1,0 +1,404 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape), single-pod 16x16 mesh, per chip:
+
+    compute    = HLO_FLOPs / 197e12          (bf16 peak, TPU v5e-class)
+    memory     = HLO_bytes / 819e9           (HBM bw)
+    collective = collective_bytes / 50e9     (per-link ICI)
+
+Sources & method:
+  * XLA's cost_analysis counts a while-loop body ONCE (verified), so the
+    full-step numbers from the dry run undercount scanned layers.  We therefore
+    lower ONE layer block per cell, scan-free (full attention — identical
+    FLOPs to the flash path, which computes all tiles), on the same mesh with
+    the same shardings, and account  total = n_layers x block + head.
+    Recurrent-chunk scans (mamba2/wkv6) are linear in T: a 3-point fit over T
+    recovers (per-token, per-chunk-body, const) exactly.
+  * memory bytes from the same lowering; for chunked-attention cells the
+    score-materialization bytes are an upper bound (flash keeps tiles in
+    VMEM) — we report both raw and score-adjusted bytes.
+  * collective bytes from the *full-step* compiled HLO (dry-run record),
+    while-body ops scaled by layer count.
+  * MODEL_FLOPS = 6 N_active D (train) / 2 N_active D (prefill/decode).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SHAPES, get_config
+from repro.configs import ALL_LM_ARCHS, SUBQUADRATIC
+from repro.distributed.sharding import batch_shardings, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import count_params
+from repro.models import transformer as T
+from repro.models.api import softmax_cross_entropy
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+# ---------------------------------------------------------------- analytic
+
+
+def active_params(cfg) -> int:
+    n = count_params(cfg)
+    if cfg.family == "moe":
+        ff = cfg.d_ff_expert or cfg.d_ff
+        expert = 3 * cfg.n_experts * cfg.d_model * ff * cfg.n_layers
+        active = 3 * cfg.top_k * cfg.d_model * ff * cfg.n_layers
+        n = n - expert + active
+    return n
+
+
+def model_flops(cfg, shape) -> float:
+    n = active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    return (6.0 if shape.kind == "train" else 2.0) * n * tokens
+
+
+# ---------------------------------------------------------------- lowering
+
+
+def _cost(lowered):
+    c = lowered.compile()
+    ca = c.cost_analysis() or {}
+    return float(ca.get("flops") or 0.0), float(ca.get("bytes accessed") or 0.0)
+
+
+def _mesh_sds(cfg, mesh, stacked_params):
+    """one-layer param SDS + shardings (drop the stack axis)."""
+    one = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), stacked_params)
+    sh = param_shardings(one, mesh)  # rules match unstacked names equally
+    return one, sh
+
+
+@functools.lru_cache(maxsize=None)
+def block_costs(arch: str, shape_name: str):
+    """(flops, bytes) per chip for one layer block (+head), corrected."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    B = shape.global_batch
+    S = shape.seq_len if shape.kind != "decode" else 1
+    dt = jnp.dtype(cfg.dtype)
+    # scan-free: full attention (same flops as flash), single recurrent chunk
+    cfgx = dataclasses.replace(cfg, attn_chunk=1 << 30, remat=False)
+
+    params_sds = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfgx))
+    dp = ("data",)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def act_sh(*trail):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        ok = B % int(np.prod([sizes[a] for a in dp])) == 0
+        return NamedSharding(mesh, P(dp if ok else None, *trail))
+
+    pos_full = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    x_sds = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+
+    out = {}
+
+    def lower_block(fn, *sds, in_sh):
+        return jax.jit(fn, in_shardings=in_sh).lower(*sds)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        key = "layers"
+        one_sds, one_sh = _mesh_sds(cfgx, mesh, params_sds[key])
+        if shape.kind == "train":
+            def blk(p, x, positions):
+                y, aux = T._block_apply(p, x, positions, cfgx)
+                return jnp.sum(y.astype(jnp.float32)) + aux
+
+            f = jax.value_and_grad(blk, argnums=(0, 1))
+            lw = lower_block(f, one_sds, x_sds, pos_full,
+                             in_sh=(one_sh, act_sh(None, None), act_sh(None)))
+        elif shape.kind == "prefill":
+            def blk(p, x, positions):
+                return T._block_apply(p, x, positions, cfgx)[0]
+
+            lw = lower_block(blk, one_sds, x_sds, pos_full,
+                             in_sh=(one_sh, act_sh(None, None), act_sh(None)))
+        else:  # decode
+            cache_sds = {
+                "k": jax.ShapeDtypeStruct((B, shape.seq_len, cfg.kv_heads, cfg.hd), dt),
+                "v": jax.ShapeDtypeStruct((B, shape.seq_len, cfg.kv_heads, cfg.hd), dt),
+            }
+            x1 = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+            pos1 = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+            def blk(p, c, x, pos):
+                return T._block_decode(p, c, x, pos, cfgx)
+
+            from repro.distributed.sharding import cache_shardings
+
+            c_sh = cache_shardings(cache_sds, mesh)
+            lw = lower_block(blk, one_sds, cache_sds, x1, pos1,
+                             in_sh=(one_sh, c_sh, act_sh(None, None), act_sh()))
+        fl, by = _cost(lw)
+        n_blocks = cfg.n_layers
+        out["block"] = (fl, by, n_blocks)
+        if fam == "encdec" and shape.kind != "decode":
+            # encoder blocks on the source length
+            xe = jax.ShapeDtypeStruct((B, cfg.max_source_len, cfg.d_model), dt)
+            pe = jax.ShapeDtypeStruct((B, cfg.max_source_len), jnp.int32)
+            enc_sds, enc_sh = _mesh_sds(cfgx, mesh, params_sds["enc_layers"])
+
+            def eblk(p, x, positions):
+                y, _ = T._block_apply(p, x, positions, cfgx, causal=False)
+                return jnp.sum(y.astype(jnp.float32)) if shape.kind == "train" else y
+
+            f = jax.grad(eblk, argnums=(0, 1)) if shape.kind == "train" else eblk
+            lwe = lower_block(f, enc_sds, xe, pe, in_sh=(enc_sh, act_sh(None, None), act_sh(None)))
+            fe, be = _cost(lwe)
+            out["enc_block"] = (fe, be, cfg.n_enc_layers)
+    elif fam in ("ssm", "hybrid"):
+        key = "layers" if fam == "ssm" else "mamba"
+        one_sds, one_sh = _mesh_sds(cfgx, mesh, params_sds[key])
+        chunk = 64
+
+        def block_fn(p, x):
+            if fam == "ssm":
+                from repro.models.ssm import rwkv6_apply
+
+                return rwkv6_apply(p, x, cfgx)
+            from repro.models.ssm import mamba2_apply
+            from repro.models.layers import norm_apply
+
+            return x + mamba2_apply(p["m"], norm_apply(p["ln"], x, cfgx.norm), cfgx)
+
+        if shape.kind == "decode":
+            from repro.models import ssm as ssm_mod
+
+            x1 = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+            if fam == "ssm":
+                st = jax.eval_shape(lambda: ssm_mod.rwkv6_state_init(cfgx, B, dt))
+
+                def dblk(p, x, s):
+                    return ssm_mod.rwkv6_decode_step(p, x, s, cfgx)
+            else:
+                st = jax.eval_shape(lambda: ssm_mod.mamba2_state_init(cfgx, B, dt))
+
+                def dblk(p, x, s):
+                    from repro.models.layers import norm_apply
+
+                    d, s2 = ssm_mod.mamba2_decode_step(
+                        p["m"], norm_apply(p["ln"], x, cfgx.norm), s, cfgx)
+                    return x + d, s2
+
+            lw = jax.jit(dblk).lower(one_sds, x1, st)
+            fl, by = _cost(lw)
+            out["block"] = (fl, by, cfg.n_layers)
+        else:
+            # 3-point fit over T: lowered(T) = lin*T + body + const;
+            # true(T) = lin*T + (T/chunk)*body + const
+            sizes = [2 * chunk, 4 * chunk, 8 * chunk]
+            costs = []
+            for Tn in sizes:
+                xT = jax.ShapeDtypeStruct((B, Tn, cfg.d_model), dt)
+                if shape.kind == "train":
+                    f = jax.grad(lambda p, x: jnp.sum(block_fn(p, x).astype(jnp.float32)),
+                                 argnums=(0, 1))
+                else:
+                    f = block_fn
+                lw = jax.jit(f, in_shardings=(one_sh, act_sh(None, None))).lower(one_sds, xT)
+                costs.append(_cost(lw))
+            M = np.array([[s, 1.0, 1.0] for s in sizes])  # [T, body(=1x), const]
+            sol_f = np.linalg.lstsq(M, np.array([c[0] for c in costs]), rcond=None)[0]
+            sol_b = np.linalg.lstsq(M, np.array([c[1] for c in costs]), rcond=None)[0]
+            Tt = S
+
+            def true_cost(sol):
+                lin, body, const = sol
+                return lin * Tt + (Tt / chunk) * max(body, 0.0) + max(const, 0.0)
+
+            out["block"] = (true_cost(sol_f), true_cost(sol_b), cfg.n_layers)
+        if fam == "hybrid":
+            # shared attention block every attn_every layers
+            n_stages = cfg.n_layers // cfg.attn_every
+            one_sh2 = param_shardings(params_sds["shared"], mesh)
+            if shape.kind == "decode":
+                cache_sds = {
+                    "k": jax.ShapeDtypeStruct((B, shape.seq_len, cfg.kv_heads, cfg.hd), dt),
+                    "v": jax.ShapeDtypeStruct((B, shape.seq_len, cfg.kv_heads, cfg.hd), dt),
+                }
+                x1 = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+                pos1 = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+                def sblk(p, c, x, pos):
+                    return T._block_decode(p, c, x, pos, cfgx)
+
+                lw = jax.jit(sblk).lower(params_sds["shared"], cache_sds, x1, pos1)
+            else:
+                def sblk(p, x, positions):
+                    y, _ = T._block_apply(p, x, positions, cfgx)
+                    return jnp.sum(y.astype(jnp.float32)) if shape.kind == "train" else y
+
+                f = (jax.grad(sblk, argnums=(0, 1)) if shape.kind == "train" else sblk)
+                lw = jax.jit(f, in_shardings=(one_sh2, act_sh(None, None), act_sh(None))
+                             ).lower(params_sds["shared"], x_sds, pos_full)
+            fs, bs = _cost(lw)
+            out["shared"] = (fs, bs, n_stages)
+    # ---- head (final norm + logits (+ CE grad for train))
+    head_params = {k: params_sds[k] for k in ("embed", "ln_f") if k in params_sds}
+    if "unembed" in params_sds:
+        head_params["unembed"] = params_sds["unembed"]
+    hp_sh = param_shardings(head_params, mesh)
+    hx = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    lab = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def head_train(hp, h, labels):
+        logits = T._logits(hp, cfgx, h)
+        return softmax_cross_entropy(logits[:, :-1], labels[:, 1:])
+
+    def head_fwd(hp, h):
+        return T._logits(hp, cfgx, h)
+
+    if shape.kind == "train":
+        lwh = jax.jit(jax.grad(head_train, argnums=(0, 1)),
+                      in_shardings=(hp_sh, act_sh(None, None), act_sh(None))
+                      ).lower(head_params, hx, lab)
+    else:
+        lwh = jax.jit(head_fwd, in_shardings=(hp_sh, act_sh(None, None))
+                      ).lower(head_params, hx)
+    fh, bh = _cost(lwh)
+    out["head"] = (fh, bh, 1)
+    return out
+
+
+def analytic_hbm_bytes(cfg, shape, n_dev: int, model_ways: int = 16,
+                       data_ways: int = 16) -> float:
+    """Transparent HBM-traffic model per chip per step (documented in
+    EXPERIMENTS.md §Method).  The raw HLO 'bytes accessed' models zero
+    fusion and overcounts HBM traffic by 1-2 orders of magnitude; this model
+    is used for dominant-term identification, both are reported.
+
+    train:  weights bf16 read 3x (fwd, dgrad, wgrad) of the device's
+            TP-shard (FSDP gathers land in HBM once: +1 write), fp32
+            grad + master + m + v read/write, bf16 weight write;
+            activations: (16 d + 4 ff_active) bytes per token-layer
+            (remat write+read + matmul intermediates with partial fusion).
+    prefill: weights 1x, activations 1 pass, + KV-cache write.
+    decode:  weights 1x + full KV/state cache read + tiny activations.
+    """
+    n_par = count_params(cfg)
+    par_local = n_par / n_dev
+    w_shard = n_par / model_ways * 2  # bf16 bytes of the TP shard
+    ff_act = cfg.top_k * (cfg.d_ff_expert or cfg.d_ff) if cfg.family == "moe" else cfg.d_ff
+    tokens_local = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    tokens_local /= min(data_ways, shape.global_batch) if shape.kind != "decode" else n_dev
+    if shape.kind == "decode":
+        tokens_local = max(shape.global_batch / n_dev, 1 / n_dev * shape.global_batch)
+    L = cfg.n_layers
+    act = (16 * cfg.d_model + 4 * ff_act) * tokens_local * L
+    if shape.kind == "train":
+        w = w_shard * (3 + 1) + par_local * (4 * 2 * 4 + 2)  # grads+master+m+v rw
+        return w + 3 * act  # fwd + remat-recompute + bwd passes
+    if shape.kind == "prefill":
+        kv_dim = cfg.kv_heads * cfg.hd if cfg.n_heads else cfg.d_model  # attn-free: state
+        cache_w = 2 * tokens_local * kv_dim * 2 * L
+        return w_shard + act + cache_w
+    # decode: weights + cache read dominate
+    if cfg.family == "ssm":
+        cache = L * (cfg.d_model // cfg.rwkv_head_k) * cfg.rwkv_head_k**2 * 4
+        cache *= shape.global_batch / n_dev if shape.global_batch >= n_dev else 1
+    elif cfg.family == "hybrid":
+        d_in = cfg.ssm_expand * cfg.d_model
+        ssm = L * (d_in // cfg.ssm_headdim) * cfg.ssm_headdim * cfg.ssm_state * 4
+        kv = (L // cfg.attn_every) * shape.seq_len * cfg.kv_heads * cfg.hd * 2 * 2
+        cache = (ssm + kv) * max(shape.global_batch, 1)
+        cache /= n_dev
+    else:
+        cache = L * shape.seq_len * cfg.kv_heads * cfg.hd * 2 * 2 * shape.global_batch
+        cache /= n_dev
+    return w_shard + cache + act
+
+
+def roofline_cell(arch: str, shape_name: str, dryrun_rec: dict) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    costs = block_costs(arch, shape_name)
+    flops = sum(f * n for f, _, n in costs.values())
+    bytes_hlo = sum(b * n for _, b, n in costs.values())
+    n_dev = dryrun_rec["devices"]
+    bytes_model = analytic_hbm_bytes(cfg, shape, n_dev)
+    coll = dryrun_rec["collectives"]["total_bytes"]  # already layer-scaled
+    t_comp = flops / PEAK_FLOPS
+    t_mem_hlo = bytes_hlo / HBM_BW
+    t_mem = bytes_model / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))[1]
+    mf = model_flops(cfg, shape) / n_dev
+    return {
+        "arch": arch, "shape": shape_name,
+        "flops_per_chip": flops, "bytes_per_chip_hlo": bytes_hlo,
+        "bytes_per_chip_model": bytes_model,
+        "collective_bytes_per_chip": coll,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_memory_hlo_s": t_mem_hlo,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_flop_ratio": mf / flops if flops else None,
+        "roofline_fraction": (
+            mf / PEAK_FLOPS / max(t_comp, t_mem, t_coll) if flops else None),
+        "peak_hbm_gb": dryrun_rec["memory"]["peak_per_device_gb"],
+        "block_detail": {k: {"flops": f, "bytes": b, "count": n}
+                         for k, (f, b, n) in costs.items()},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--arch", default="all")
+    args = ap.parse_args()
+    dr = json.load(open(args.dryrun))
+    results = {}
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    archs = ALL_LM_ARCHS if args.arch == "all" else args.arch.split(",")
+    for arch in archs:
+        for shape_name in SHAPES:
+            key = f"{arch}|{shape_name}"
+            dkey = f"{arch}|{shape_name}|16x16"
+            rec = dr.get(dkey)
+            if rec is None or rec.get("status") == "error":
+                continue
+            if rec.get("status") == "skipped":
+                results[key] = {"arch": arch, "shape": shape_name, "status": "skipped",
+                                "reason": rec["reason"]}
+                continue
+            if key in results and "t_memory_hlo_s" in results[key]:
+                continue
+            print("===", key, flush=True)
+            try:
+                results[key] = roofline_cell(arch, shape_name, rec)
+            except Exception as e:  # noqa: BLE001
+                results[key] = {"arch": arch, "shape": shape_name, "status": "error",
+                                "error": f"{type(e).__name__}: {e}"}
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    # print table
+    print(f"{'arch':<18}{'shape':<13}{'t_comp(ms)':>11}{'t_mem(ms)':>11}"
+          f"{'t_coll(ms)':>11}{'dominant':>11}{'useful':>8}{'roofline%':>10}")
+    for k, r in results.items():
+        if "t_compute_s" not in r:
+            print(f"{r['arch']:<18}{r['shape']:<13}{'skip' if r.get('status')=='skipped' else 'ERR':>11}")
+            continue
+        print(f"{r['arch']:<18}{r['shape']:<13}{r['t_compute_s']*1e3:>11.2f}"
+              f"{r['t_memory_s']*1e3:>11.2f}{r['t_collective_s']*1e3:>11.2f}"
+              f"{r['dominant']:>11}{(r['useful_flop_ratio'] or 0):>8.2f}"
+              f"{100*(r['roofline_fraction'] or 0):>10.1f}")
+
+
+if __name__ == "__main__":
+    main()

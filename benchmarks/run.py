@@ -1,0 +1,56 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1a,table2] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    ap.add_argument("--fast", action="store_true", help="smaller L sweeps")
+    args = ap.parse_args()
+    only = None if args.only == "all" else set(args.only.split(","))
+
+    from . import (
+        bench_equiformer_selfmix,
+        bench_equivariant_conv,
+        bench_feature_interaction,
+        bench_manybody,
+        bench_mace_gaunt,
+        bench_sanity_nbody,
+    )
+
+    jobs = {
+        "fig1a": lambda: bench_feature_interaction.run(
+            L_list=(1, 2, 3, 4) if args.fast else (1, 2, 3, 4, 5, 6, 8)),
+        "fig1b": lambda: bench_equivariant_conv.run(
+            L_list=(1, 2, 3) if args.fast else (1, 2, 3, 4, 5, 6)),
+        "fig1cd": bench_manybody.run,
+        "fig1e": bench_sanity_nbody.run,
+        "table1": lambda: bench_equiformer_selfmix.run(
+            L_list=(2, 4) if args.fast else (2, 4, 6)),
+        "table2": bench_mace_gaunt.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        try:
+            job()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

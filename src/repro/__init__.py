@@ -1,0 +1,8 @@
+"""repro — the Gaunt Tensor Product paper as a production JAX framework.
+
+Layers: core (the paper), kernels (Pallas), models (10 LM archs +
+equivariant nets), optim/data/checkpoint/train/serve (substrate),
+distributed (sharding/fault tolerance), launch (mesh/dryrun/train/serve).
+"""
+
+__version__ = "1.0.0"

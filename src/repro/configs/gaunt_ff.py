@@ -1,0 +1,33 @@
+"""The paper's own model configs: Gaunt-accelerated equivariant networks."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EquivariantConfig:
+    name: str
+    kind: str  # mace | segnn | equiformer_selfmix
+    L: int = 2           # max feature degree
+    L_edge: int = 2      # SH filter degree
+    channels: int = 64
+    n_layers: int = 2
+    n_species: int = 8
+    nu: int = 3          # many-body order (MACE)
+    cutoff: float = 5.0
+    n_radial: int = 8
+    tp_impl: str = "gaunt"  # gaunt | cg | gaunt_fused
+    conv_impl: str = "escn"  # escn | general
+    hidden: int = 128
+
+
+gaunt_mace_ff = EquivariantConfig(
+    name="gaunt-mace-ff", kind="mace", L=2, L_edge=3, channels=64, n_layers=2, nu=3
+)
+gaunt_segnn_nbody = EquivariantConfig(
+    name="gaunt-segnn-nbody", kind="segnn", L=1, L_edge=1, channels=32, n_layers=4
+)
+gaunt_equiformer_selfmix = EquivariantConfig(
+    name="gaunt-equiformer-selfmix", kind="equiformer_selfmix", L=4, L_edge=4,
+    channels=32, n_layers=2
+)

@@ -1,0 +1,8 @@
+"""Arch config: rwkv6-3b (see package __init__ for the registry)."""
+from repro.config import ModelConfig, register
+
+rwkv6_3b = register(ModelConfig(
+    name="rwkv6-3b", family="ssm",
+    n_layers=32, d_model=2560, n_heads=0, d_ff=8960, vocab=65536,
+    rwkv_head_k=64, norm="layernorm",
+))  # [arXiv:2404.05892] — Finch, attention-free

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: Gaunt Tensor Products in JAX.
+
+Public API:
+    GauntTensorProduct      full O(L^3) tensor product (FFT / direct / packed)
+    EquivariantConv         x (x) Y(rhat) with the eSCN-sparsity fast path
+    manybody_gaunt_product  nu-fold products (divide-and-conquer)
+    cg_full_tensor_product  the e3nn-style O(L^6) baseline
+    gaunt_einsum_reference  dense real-Gaunt oracle
+"""
+from .cg import cg_full_tensor_product, gaunt_einsum_reference  # noqa: F401
+from .conv import EquivariantConv  # noqa: F401
+from .gaunt import GauntTensorProduct, expand_degree_weights  # noqa: F401
+from .irreps import Irreps, num_coeffs  # noqa: F401
+from .manybody import manybody_gaunt_product, manybody_selfmix  # noqa: F401

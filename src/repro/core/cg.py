@@ -1,0 +1,65 @@
+"""Clebsch-Gordan tensor products — the paper's O(L^6) baseline (e3nn-style),
+plus the dense real-Gaunt einsum that serves as the *oracle* for every fast
+Gaunt path in this repo.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .irreps import num_coeffs
+from .so3 import real_clebsch_gordan_block, real_gaunt_tensor
+
+__all__ = [
+    "cg_full_tensor_product",
+    "gaunt_einsum_reference",
+    "gaunt_dense_tensor_jnp",
+]
+
+
+@lru_cache(maxsize=None)
+def _cg_paths(L1: int, L2: int, Lout: int):
+    """All (l1, l2, l3) paths with their real CG blocks (numpy)."""
+    paths = []
+    for l1 in range(L1 + 1):
+        for l2 in range(L2 + 1):
+            for l3 in range(abs(l1 - l2), min(Lout, l1 + l2) + 1):
+                paths.append((l1, l2, l3, real_clebsch_gordan_block(l1, l2, l3)))
+    return paths
+
+
+def cg_full_tensor_product(x1, x2, L1: int, L2: int, Lout: int | None = None, weights=None):
+    """e3nn-style full CG tensor product over all (l1,l2)->l3 paths.
+
+    x1: [..., (L1+1)^2], x2: [..., (L2+1)^2] -> [..., (Lout+1)^2].
+    weights: optional dict (l1,l2,l3) -> scalar (or [...]-broadcastable).
+    This is the baseline the paper benchmarks against (Fig. 1): per-path 3D
+    contractions, O(L^6) total.
+    """
+    Lout = L1 + L2 if Lout is None else Lout
+    out = jnp.zeros(x1.shape[:-1] + (num_coeffs(Lout),), dtype=x1.dtype)
+    for l1, l2, l3, C in _cg_paths(L1, L2, Lout):
+        xa = x1[..., l1 * l1 : (l1 + 1) ** 2]
+        xb = x2[..., l2 * l2 : (l2 + 1) ** 2]
+        blk = jnp.einsum("...i,...j,ijk->...k", xa, xb, jnp.asarray(C, dtype=x1.dtype))
+        if weights is not None:
+            blk = blk * weights[(l1, l2, l3)]
+        out = out.at[..., l3 * l3 : (l3 + 1) ** 2].add(blk)
+    return out
+
+
+@lru_cache(maxsize=None)
+def gaunt_dense_tensor_jnp(L1: int, L2: int, Lout: int, dtype_str: str = "float32"):
+    # numpy in the cache (jnp constants must not be created inside traces)
+    return real_gaunt_tensor(L1, L2, Lout).astype(dtype_str)
+
+
+def gaunt_einsum_reference(x1, x2, L1: int, L2: int, Lout: int | None = None):
+    """Dense einsum with the exact real Gaunt tensor — the correctness oracle
+    (O(L^6) like the CG baseline, different coefficients)."""
+    Lout = L1 + L2 if Lout is None else Lout
+    G = jnp.asarray(gaunt_dense_tensor_jnp(L1, L2, Lout, str(np.dtype(x1.dtype))))
+    return jnp.einsum("...i,...j,ijk->...k", x1, x2, G)

@@ -1,0 +1,201 @@
+"""SH <-> 2D Fourier basis conversion tensors (the paper's Section 3.2).
+
+Forward (`y` coefficients): every real SH S_{l,m}, extended to the torus
+double cover of the sphere (theta in [0, 2pi)), is an exactly bandlimited
+2D trigonometric polynomial:
+    S_{l,m}(t, p) = sum_{|u|<=l, v = +-m} y^{l,m}_{u,v} e^{i(u t + v p)}.
+We obtain y *exactly* by sampling the analytic continuation
+(sin^m t  poly(cos t)  trig(m p) — our Cartesian SH formula continues
+automatically) on an (N x N) grid with N > 2L and taking a 2D FFT.
+
+Backward (`z` coefficients): SH coefficients of a function known by its torus
+Fourier series are given by sphere-domain *projection*
+    z^{l,m}_{u,v} = int_0^{2pi} int_0^pi e^{i(u t + v p)} S_{l,m} sin t dt dp,
+which separates:  psi-integral is a closed-form delta on v = +-m; the
+theta-integral  int_0^pi e^{iut} Theta_{l,m}(t) sin t dt  is computed exactly
+by expanding Theta sin t in its (finite) theta-Fourier series and using
+    int_0^pi e^{int} dt = pi delta_{n,0} + (1-(-1)^n) i/n.
+
+Both tensors are numpy float64/complex128 precompute, lru-cached; `packed`
+variants expose the v = +-m block sparsity as stacked per-|m| matmuls (the
+O(L^3) path; the dense einsum is the O(L^4)-but-MXU-friendly path).
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+from .irreps import idx, num_coeffs
+from .so3 import _legendre_sinm_poly, _sh_norms, real_sph_harm
+
+__all__ = [
+    "sh_to_fourier_dense",
+    "fourier_to_sh_dense",
+    "sh_to_fourier_packed",
+    "fourier_to_sh_packed",
+]
+
+
+def _torus_samples(L: int) -> tuple[np.ndarray, int]:
+    """Sample all real SH (analytically continued) on an N x N torus grid."""
+    N = 2 * L + 2  # > bandlimit 2L+1
+    t = 2 * math.pi * np.arange(N) / N
+    p = 2 * math.pi * np.arange(N) / N
+    tt, pp = np.meshgrid(t, p, indexing="ij")
+    # Cartesian continuation: sin t may be negative for t > pi — exactly the
+    # torus extension (see module docstring).
+    xyz = np.stack(
+        [np.sin(tt) * np.cos(pp), np.sin(tt) * np.sin(pp), np.cos(tt)], axis=-1
+    )
+    S = real_sph_harm(L, xyz.reshape(-1, 3)).reshape(N, N, num_coeffs(L))
+    return S, N
+
+
+@lru_cache(maxsize=None)
+def sh_to_fourier_dense(L: int) -> np.ndarray:
+    """y[(L+1)^2, 2L+1 (u), 2L+1 (v)] complex128, centered (index L <-> freq 0)."""
+    S, N = _torus_samples(L)
+    F = np.fft.fft2(S, axes=(0, 1)) / (N * N)
+    # h[n] = sum_k c_k e^{+2pi i k n/N}  =>  c_k = fft(h)[k mod N] / N.
+    out = np.zeros((num_coeffs(L), 2 * L + 1, 2 * L + 1), dtype=np.complex128)
+    for u in range(-L, L + 1):
+        for v in range(-L, L + 1):
+            out[:, L + u, L + v] = F[u % N, v % N, :]
+    out[np.abs(out) < 1e-14] = 0.0
+    return out
+
+
+@lru_cache(maxsize=None)
+def _theta_fourier_integrals(L: int, u_max: int) -> np.ndarray:
+    """I[l, m, L+u... wait shape] = int_0^pi e^{iut} Theta_{l,m}(t) sin t dt.
+
+    Returns array [L+1, L+1, 2*u_max+1] complex (index u + u_max), valid for
+    m <= l.  Exact (finite trig expansion + closed-form integrals).
+    """
+    # sample h_{l,m}(t) = Theta_{l,m}(t) sin(t), analytically continued, on a
+    # circle grid; it is a trig polynomial of degree <= L+1.
+    N = 2 * (L + 2) + 1
+    t = 2 * math.pi * np.arange(N) / N
+    ct, st = np.cos(t), np.sin(t)
+    P = _legendre_sinm_poly(L, ct)  # [L+1, L+1, N]
+    norms = _sh_norms(L)
+    # Theta_{l,m} = norm * P~ * sin^m t ; h = Theta * sin t
+    h = np.zeros((L + 1, L + 1, N))
+    for l in range(L + 1):
+        for m in range(l + 1):
+            h[l, m] = norms[l, m] * P[l, m] * st ** m * st
+    hk = np.fft.fft(h, axis=-1) / N  # coeff of e^{+ikt} at index k % N
+    # E(n) = int_0^pi e^{int} dt
+    def E(n: int) -> complex:
+        if n == 0:
+            return math.pi
+        if n % 2 == 0:
+            return 0.0
+        return 2j / n
+    ks = np.arange(-(L + 1), L + 2)
+    hk_c = np.zeros((L + 1, L + 1, len(ks)), dtype=np.complex128)
+    for i, k in enumerate(ks):
+        hk_c[:, :, i] = hk[:, :, k % N]
+    out = np.zeros((L + 1, L + 1, 2 * u_max + 1), dtype=np.complex128)
+    for ui, u in enumerate(range(-u_max, u_max + 1)):
+        Evec = np.array([E(u + k) for k in ks])
+        out[:, :, ui] = hk_c @ Evec
+    return out
+
+
+@lru_cache(maxsize=None)
+def fourier_to_sh_dense(Lf: int, Lout: int) -> np.ndarray:
+    """z[2Lf+1 (u), 2Lf+1 (v), (Lout+1)^2] complex128 (centered u,v).
+
+    x^{(l)}_m = Re( sum_{u,v} F[u, v] z[u, v, idx(l,m)] )  for F the centered
+    torus-Fourier coefficient grid of a real spherical function.
+    """
+    I = _theta_fourier_integrals(Lout, Lf)  # [Lout+1, Lout+1, 2Lf+1]
+    z = np.zeros((2 * Lf + 1, 2 * Lf + 1, num_coeffs(Lout)), dtype=np.complex128)
+    sq2 = math.sqrt(2.0)
+    for l in range(Lout + 1):
+        for m in range(0, l + 1):
+            if m > Lf:
+                continue
+            th = I[l, m]  # [2Lf+1] over u
+            if m == 0:
+                # psi integral of e^{ivp} * 1: 2pi delta_{v,0}
+                z[:, Lf + 0, idx(l, 0)] += 2 * math.pi * th
+            else:
+                # S_{l,m} has sqrt(2) cos(mp): int e^{ivp} sqrt2 cos(mp) dp
+                #   = sqrt2 pi (delta_{v,m} + delta_{v,-m})
+                z[:, Lf + m, idx(l, m)] += sq2 * math.pi * th
+                z[:, Lf - m, idx(l, m)] += sq2 * math.pi * th
+                # S_{l,-m} has sqrt(2) sin(mp): int e^{ivp} sqrt2 sin(mp) dp
+                #   = sqrt2 i pi (delta_{v,m} - delta_{v,-m})
+                z[:, Lf + m, idx(l, -m)] += sq2 * 1j * math.pi * th
+                z[:, Lf - m, idx(l, -m)] += -sq2 * 1j * math.pi * th
+    z[np.abs(z) < 1e-14] = 0.0
+    return z
+
+
+# --------------------------------------------------------------------------
+# packed (block-sparse, O(L^3)) forms
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def sh_to_fourier_packed(L: int) -> tuple[np.ndarray, np.ndarray]:
+    """Exploit v = +-m sparsity as per-|m| stacked matmuls.
+
+    Returns (yp, yn):
+      yp[mm, l, u] complex: coefficient of e^{i(ut + (+mm) p)} contributed by
+        packed input plane; input planes are x packed as
+        xp[mm, l] = x[idx(l, +mm)] and xn[mm, l] = x[idx(l, -mm)] (zero-padded
+        for l < mm).  Because y^{l,m}_{u,+m} and y^{l,-m}_{u,+m} are related,
+        we fold the +-m input planes into complex combination first:
+        for mm > 0,  c[mm, l] = xp[mm, l] + i * xn[mm, l]  and the v = +mm
+        column of F is  sum_l c[mm, l] * yp[mm, l, u]  with yp the coefficient
+        of the *cos* part minus-i times the sin part... (derived numerically
+        from the dense tensor — see build below; validated in tests).
+      The v = -mm column follows from Hermitian symmetry of real functions:
+        F[-u, -v] = conj(F[u, v]).
+    """
+    y = sh_to_fourier_dense(L)
+    n = 2 * L + 1
+    # For v = +mm: F[:, L+mm] = sum over inputs i with |m_i| = mm of
+    #   x_i * y[i, :, L+mm]. Pack per (mm, sign-plane, l).
+    yp = np.zeros((L + 1, 2, L + 1, n), dtype=np.complex128)  # [mm, plane, l, u]
+    for mm in range(L + 1):
+        for l in range(mm, L + 1):
+            yp[mm, 0, l] = y[idx(l, mm), :, L + mm]
+            if mm > 0:
+                yp[mm, 1, l] = y[idx(l, -mm), :, L + mm]
+    # v = -mm columns (only needed to rebuild the full grid; for real inputs
+    # they are conj-mirror, but we keep them explicit for generality)
+    yn = np.zeros((L + 1, 2, L + 1, n), dtype=np.complex128)
+    for mm in range(L + 1):
+        for l in range(mm, L + 1):
+            yn[mm, 0, l] = y[idx(l, mm), :, L - mm]
+            if mm > 0:
+                yn[mm, 1, l] = y[idx(l, -mm), :, L - mm]
+    return yp, yn
+
+
+@lru_cache(maxsize=None)
+def fourier_to_sh_packed(Lf: int, Lout: int) -> tuple[np.ndarray, np.ndarray]:
+    """Packed z: per-|m| matrices over u for the v=+m and v=-m columns.
+
+    zp[mm, plane, l, u]: x[idx(l, +-mm)] += Re( F[:, Lf+mm] . zp[mm, plane, l] )
+    zn likewise for the v = -mm column.
+    """
+    z = fourier_to_sh_dense(Lf, Lout)
+    n = 2 * Lf + 1
+    zp = np.zeros((Lout + 1, 2, Lout + 1, n), dtype=np.complex128)
+    zn = np.zeros((Lout + 1, 2, Lout + 1, n), dtype=np.complex128)
+    for mm in range(min(Lf, Lout) + 1):
+        for l in range(mm, Lout + 1):
+            zp[mm, 0, l] = z[:, Lf + mm, idx(l, mm)]
+            if mm > 0:
+                # mm = 0 would duplicate the v=0 column already in zp
+                zn[mm, 0, l] = z[:, Lf - mm, idx(l, mm)]
+                zp[mm, 1, l] = z[:, Lf + mm, idx(l, -mm)]
+                zn[mm, 1, l] = z[:, Lf - mm, idx(l, -mm)]
+    return zp, zn

@@ -1,0 +1,3 @@
+from .pipeline import LMTokenPipeline  # noqa: F401
+from .molecules import lj_dataset  # noqa: F401
+from .nbody import nbody_dataset  # noqa: F401

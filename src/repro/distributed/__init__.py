@@ -1,0 +1,7 @@
+from .sharding import (  # noqa: F401
+    param_shardings,
+    batch_shardings,
+    cache_shardings,
+    choose_pspec,
+    DP_AXES,
+)

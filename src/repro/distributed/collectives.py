@@ -1,0 +1,64 @@
+"""Distributed-optimization tricks.
+
+int8 error-feedback gradient compression for the cross-pod reduction: inside
+a shard_map over the 'pod' axis, gradients are quantized to int8 (per-tensor
+absmax scale), psum'ed over 'pod', dequantized, and the quantization residual
+is carried as error-feedback state so the compression is unbiased over time.
+The 'data'-axis reduce-scatter stays full precision (intra-pod ICI is cheap;
+the pod axis is the long DCN-ish hop — that is where compression pays).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["int8_ef_cross_pod_mean", "ef_state_init"]
+
+
+def ef_state_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quant(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_ef_cross_pod_mean(grads, ef, mesh):
+    """Mean-reduce grads over the 'pod' mesh axis with int8 + error feedback.
+
+    grads/ef: pytrees of arrays already reduced over 'data'.  Returns
+    (reduced_grads, new_ef).  No-op (identity, ef unchanged) if the mesh has
+    no pod axis.
+    """
+    if "pod" not in mesh.axis_names:
+        return grads, ef
+
+    npod = dict(zip(mesh.axis_names, mesh.devices.shape))["pod"]
+
+    def one(g, e):
+        spec = P(*([None] * g.ndim))  # replicated view within the shard_map
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
+            check_vma=False,
+        )
+        def body(gl, el):
+            x = gl.astype(jnp.float32) + el
+            q, scale = _quant(x)
+            deq = q.astype(jnp.float32) * scale
+            new_e = x - deq
+            total = jax.lax.psum(deq, axis_name="pod") / npod
+            return total, new_e
+
+        return body(g, e)
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(td, [o[0] for o in outs]),
+            jax.tree.unflatten(td, [o[1] for o in outs]))

@@ -1,0 +1,26 @@
+"""Elastic scaling: move a training state between meshes of different shape
+or device count (scale-up after repair, scale-down after failures).
+
+Mechanics: checkpoints are mesh-agnostic (host npz shards); restoring with
+the *new* mesh's shardings places every leaf correctly (CheckpointManager).
+For live in-memory resharding (no disk round trip) use `reshard_tree`.
+"""
+from __future__ import annotations
+
+import jax
+
+from .sharding import param_shardings
+
+__all__ = ["reshard_tree", "restore_on_mesh"]
+
+
+def reshard_tree(tree, new_mesh, layout: str = "default"):
+    """Re-place a live pytree onto `new_mesh` per the standard param rules."""
+    sh = param_shardings(jax.eval_shape(lambda: tree), new_mesh, layout=layout)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh)
+
+
+def restore_on_mesh(manager, step: int, target_tree, new_mesh, layout: str = "default"):
+    """Restore a checkpoint directly onto a (possibly different) mesh."""
+    sh = param_shardings(target_tree, new_mesh, layout=layout)
+    return manager.restore(step, target_tree, shardings=sh)

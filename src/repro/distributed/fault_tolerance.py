@@ -1,0 +1,72 @@
+"""Fault-tolerance plumbing: heartbeat, preemption trap, straggler monitor.
+
+On a real cluster every host runs these; in this container they are unit-
+tested directly.  The launcher (`repro.launch.train`) wires them together
+with the CheckpointManager: SIGTERM -> synchronous checkpoint -> exit 143,
+and the supervisor loop (`--supervise`) restarts from the latest committed
+step with exponential backoff.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+from collections import deque
+
+__all__ = ["Heartbeat", "PreemptionGuard", "StragglerMonitor"]
+
+
+class Heartbeat:
+    """Writes {step, t} to a file the cluster health-checker watches."""
+
+    def __init__(self, path: str, interval_s: float = 10.0):
+        self.path = path
+        self.interval = interval_s
+        self._last = 0.0
+
+    def beat(self, step: int, force: bool = False):
+        now = time.time()
+        if force or now - self._last >= self.interval:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"step": step, "t": now, "pid": os.getpid()}, f)
+            os.replace(tmp, self.path)
+            self._last = now
+
+
+class PreemptionGuard:
+    """SIGTERM/SIGINT -> set flag; the train loop checkpoints and exits."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.should_exit = False
+        self._signals = signals
+
+    def install(self):
+        for s in self._signals:
+            signal.signal(s, self._handler)
+        return self
+
+    def _handler(self, signum, frame):
+        self.should_exit = True
+
+
+class StragglerMonitor:
+    """Flags steps slower than `factor` x rolling median (straggler
+    mitigation hook: the launcher logs and can trigger re-balancing or host
+    cordoning; here it surfaces the signal)."""
+
+    def __init__(self, window: int = 50, factor: float = 2.0):
+        self.times = deque(maxlen=window)
+        self.factor = factor
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        slow = False
+        if len(self.times) >= 10:
+            med = sorted(self.times)[len(self.times) // 2]
+            slow = dt > self.factor * med
+            if slow:
+                self.flagged.append((step, dt))
+        self.times.append(dt)
+        return slow

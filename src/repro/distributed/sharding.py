@@ -1,0 +1,228 @@
+"""Partitioning rules: parameter/optimizer/activation/cache PartitionSpecs.
+
+Scheme (DESIGN.md §5): batch over ('pod','data'); FSDP shards params over
+'data'; TP (Megatron col/row) over 'model'; EP maps the expert dim onto
+'model' when divisible.  Rules are *candidate lists per tensor dim* resolved
+against actual shapes — non-divisible dims degrade gracefully to the next
+candidate or replication (e.g. qwen2-moe's 60 experts on a 16-way model axis
+fall back to sharding d_ff).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["choose_pspec", "param_shardings", "batch_shardings", "cache_shardings",
+           "DP_AXES", "set_activation_mesh", "constrain_batch"]
+
+DP_AXES = ("pod", "data")  # batch axes (pod missing on single-pod meshes)
+
+# --- activation sharding constraints ----------------------------------------
+# SPMD propagation loses batch sharding through scatter/gather-heavy code
+# (observed: MoE dispatch materializing full-batch [256, ...] tensors per
+# device).  Model code calls constrain_batch(x) at those points; launchers
+# opt in with set_activation_mesh(mesh) (no-op otherwise, e.g. smoke tests).
+_ACT_MESH: Mesh | None = None
+
+
+def set_activation_mesh(mesh: Mesh | None):
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def constrain_ep_weights(w):
+    """Pin expert weights [E, a, b] to their *compute* form: EP over 'model'
+    (when divisible), inner dims gathered.  Storage stays FSDP-sharded via the
+    param shardings; this constraint makes XLA materialize the (weight-sized)
+    all-gather instead of resharding the (much larger) dispatch activations —
+    the §Perf H6 fix for the H3/H4 interaction."""
+    if _ACT_MESH is None:
+        return w
+    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))
+    e_axis = "model" if ("model" in sizes and w.shape[-3] % sizes["model"] == 0) else None
+    spec = [None] * (w.ndim - 3) + [e_axis, None, None]
+    return jax.lax.with_sharding_constraint(w, NamedSharding(_ACT_MESH, P(*spec)))
+
+
+def constrain_batch(x, *trailing):
+    """Pin dim0 of x to the data-parallel axes (trailing dims per *trailing)."""
+    if _ACT_MESH is None:
+        return x
+    dp = _axes_in(_ACT_MESH, DP_AXES)
+    if not dp:
+        return x
+    sizes = dict(zip(_ACT_MESH.axis_names, _ACT_MESH.devices.shape))
+    n = int(np.prod([sizes[a] for a in dp]))
+    if x.shape[0] % n != 0:
+        return x
+    spec = [dp] + list(trailing) + [None] * (x.ndim - 1 - len(trailing))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, P(*spec)))
+
+
+def _axes_in(mesh: Mesh, names) -> tuple:
+    return tuple(n for n in names if n in mesh.axis_names)
+
+
+def choose_pspec(shape, mesh: Mesh, prefs: list[list[str]]) -> P:
+    """prefs[i]: ordered candidate mesh-axis names for dim i ([] = replicate).
+    First candidate that exists in the mesh, divides the dim size, and is not
+    already used wins."""
+    used: set[str] = set()
+    spec = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, cands in zip(shape, list(prefs) + [[]] * (len(shape) - len(prefs))):
+        pick = None
+        for c in cands:
+            if c in sizes and c not in used and dim % sizes[c] == 0 and sizes[c] > 1:
+                pick = c
+                used.add(c)
+                break
+        spec.append(pick)
+    return P(*spec)
+
+
+# per-leaf-name rules: list of per-dim candidate lists (for the *unstacked*
+# shape; a leading scan-stack axis is detected and prepended as replicated)
+_RULES: list[tuple[str, list[list[str]]]] = [
+    # embeddings / unembedding
+    (r"embed/embedding$", [["model"], ["data"]]),
+    (r"unembed/w$", [["data"], ["model"]]),
+    (r"dec_pos$", [[], ["data"]]),
+    # attention (col-parallel qkv, row-parallel o)
+    (r"(attn|xattn)/wq/w$", [["data"], ["model"]]),
+    (r"(attn|xattn)/wk/w$", [["data"], ["model"]]),
+    (r"(attn|xattn)/wv/w$", [["data"], ["model"]]),
+    (r"(attn|xattn)/w[qkv]/b$", [["model"]]),
+    (r"(attn|xattn)/wo/w$", [["model"], ["data"]]),
+    # dense mlp
+    (r"mlp/w_(up|gate)/w$", [["data"], ["model"]]),
+    (r"mlp/w_down/w$", [["model"], ["data"]]),
+    # moe: EP on model if divisible, else shard ff on model + d on data
+    (r"moe/router/w$", [["data"], []]),
+    (r"moe/we_(gate|up)$", [["model"], ["data"], ["model"]]),
+    (r"moe/we_down$", [["model", "data"], ["model"], ["data"]]),
+    (r"moe/shared/w_(up|gate)/w$", [["data"], ["model"]]),
+    (r"moe/shared/w_down/w$", [["model"], ["data"]]),
+    # mamba2
+    (r"in_proj/w$", [["data"], ["model"]]),
+    (r"out_proj/w$", [["model"], ["data"]]),
+    (r"conv_w$", [[], ["model"]]),
+    (r"conv_b$", [["model"]]),
+    # rwkv6
+    (r"tm/w[rkvg]/w$", [["data"], ["model"]]),
+    (r"tm/wo/w$", [["model"], ["data"]]),
+    (r"tm/maa_w1$", [["data"], []]),
+    (r"tm/maa_w2$", [[], [], ["data"]]),
+    (r"tm/decay_w1$", [["data"], []]),
+    (r"tm/decay_w2$", [[], ["data"]]),
+    (r"cm/cm_k/w$", [["data"], ["model"]]),
+    (r"cm/cm_v/w$", [["model"], ["data"]]),
+    (r"cm/cm_r/w$", [["data"], ["model"]]),
+    # zamba2 glue
+    (r"cat_proj/w$", [["data"], ["model"]]),
+]
+
+_STACK_PREFIXES = ("layers/", "mamba/", "enc_layers/")
+
+# --- layout variants (the §Perf hillclimb levers) ---------------------------
+# default     : FSDP('data') x TP('model'), EP on 'model' where divisible
+# dp_heavy    : for small models — params replicated over 'model' (only
+#               FSDP over 'data'); kills per-layer TP all-reduces at the cost
+#               of replicated compute ... batch stays on ('pod','data').
+# moe_expert_tp: MoE expert weights NOT FSDP-gathered; d_ff sharded over
+#               'data' (TP *within* each expert) — swaps the per-layer weight
+#               all-gather volume for activation-sized all-reduces.
+_MOE_EXPERT_TP = [
+    (r"moe/we_(gate|up)$", [["model"], [], ["data"]]),
+    (r"moe/we_down$", [["model"], ["data"], []]),
+]
+
+
+def _leaf_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspec(key: str, shape, mesh: Mesh, layout: str = "default") -> P:
+    stacked = key.startswith(_STACK_PREFIXES)
+    base_shape = shape[1:] if stacked else shape
+    rules = _RULES
+    if layout == "moe_expert_tp":
+        rules = _MOE_EXPERT_TP + _RULES
+    for pat, prefs in rules:
+        if re.search(pat, key):
+            if layout == "dp_heavy":
+                prefs = [[c for c in cand if c != "model"] for cand in prefs]
+            spec = choose_pspec(base_shape, mesh, prefs)
+            return P(None, *spec) if stacked else spec
+    # default: replicate small things; FSDP-shard big 2D+ tensors on 'data'
+    if len(base_shape) >= 2 and np.prod(base_shape) >= 1 << 20:
+        spec = choose_pspec(base_shape, mesh, [["data"], ["model"]])
+        return P(None, *spec) if stacked else spec
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(param_tree, mesh: Mesh, layout: str = "default"):
+    """pytree of NamedSharding matching param_tree (works on ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        return NamedSharding(mesh, param_pspec(_leaf_key(path), leaf.shape, mesh, layout))
+
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Shard leading (batch) dim over ('pod','data')."""
+    dp = _axes_in(mesh, DP_AXES)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        bsz = leaf.shape[0]
+        n = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in dp])) if dp else 1
+        if dp and bsz % n == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    """KV/recurrent caches: [L, B, S, KV, hd]-style. Prefer batch over
+    ('pod','data'), then heads over 'model', then sequence over 'model'."""
+    dp = _axes_in(mesh, DP_AXES)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_dp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+
+    def one(leaf):
+        nd = leaf.ndim
+        if nd < 3:
+            return NamedSharding(mesh, P(*([None] * nd)))
+        spec = [None] * nd
+        used = set()
+        # dim1 = batch
+        if dp and leaf.shape[1] % n_dp == 0:
+            spec[1] = dp
+            used.update(dp)
+        elif "data" in sizes and leaf.shape[1] % sizes["data"] == 0:
+            spec[1] = "data"
+            used.add("data")
+        # prefer model on a heads-like dim (>=4D: dim3), else the seq dim 2
+        if "model" in sizes and sizes["model"] > 1:
+            if nd >= 4 and leaf.shape[3] % sizes["model"] == 0:
+                spec[3] = "model"
+            elif leaf.shape[2] % sizes["model"] == 0:
+                spec[2] = "model"
+        # long-context single-batch: also spread seq over data if unused
+        if spec[1] is None and "data" not in used and "data" in sizes and nd >= 3:
+            if leaf.shape[2] % (sizes["data"] * sizes.get("model", 1)) == 0 and spec[2] == "model":
+                spec[2] = ("data", "model")
+            elif spec[2] is None and leaf.shape[2] % sizes["data"] == 0:
+                spec[2] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_tree)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ arch SSM scans).
+
+Each kernel ships three layers: <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd dispatch wrappers), ref.py (pure-jnp oracles).  On CPU
+the kernels run in interpret mode (tests); model code defaults to the jnp
+chunked forms which are math-identical.
+"""
+from .ops import (  # noqa: F401
+    gaunt_tp_channel_mix,
+    gaunt_tp_fused,
+    gaunt_tp_fused_xla,
+    mamba2_ssd,
+    wkv6,
+)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cg import gaunt_einsum_reference
+
+
+def gaunt_fused_ref(x1, x2, T1, T2, P):
+    """Sample-multiply-project Gaunt TP, unfused.
+
+    x1 [B, d1], x2 [B, d2]; T1 [d1, G], T2 [d2, G] torus sample matrices;
+    P [G, dout] projection.  out[B, dout] = ((x1 T1) * (x2 T2)) P.
+    """
+    v1 = x1 @ T1
+    v2 = x2 @ T2
+    return (v1 * v2) @ P
+
+
+def gaunt_oracle(x1, x2, L1, L2, Lout):
+    """Ground truth: dense einsum with the exact real Gaunt tensor."""
+    return gaunt_einsum_reference(x1, x2, L1, L2, Lout)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """Naive RWKV6 recurrence (fp32), the oracle for the chunked kernel.
+
+    Shapes: r,k,w [B, T, H, K]; v [B, T, H, V]; u [H, K].
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    S = jnp.zeros((B, H, K, V), dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        kt, vt, rt, wt = k[:, t], v[:, t], r[:, t], w[:, t]
+        kv = kt[..., :, None] * vt[..., None, :]  # [B,H,K,V]
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        outs.append(o)
+        S = wt[..., :, None] * S + kv
+    return jnp.stack(outs, axis=1)  # [B, T, H, V]
+
+
+def mamba2_ssd_ref(x, dt, A, B, C, D):
+    """Naive Mamba-2 SSD recurrence oracle.
+
+    x [Bt, T, H, P] (heads x headdim), dt [Bt, T, H] (post-softplus),
+    A [H] (negative), B,C [Bt, T, G, N] (groups), D [H].
+    h_t = exp(A dt_t) h_{t-1} + dt_t * B_t x_t^T ; y_t = C_t h_t + D x_t
+    (single group broadcast over heads).
+    """
+    Bt, T, H, Pd = x.shape
+    G, N = B.shape[2], B.shape[3]
+    heads_per_group = H // G
+    h = jnp.zeros((Bt, H, Pd, N), dtype=jnp.float32)
+    ys = []
+    for t in range(T):
+        dts = dt[:, t][..., None, None]  # [Bt,H,1,1]
+        decay = jnp.exp(A[None, :, None, None] * dts)
+        Bg = jnp.repeat(B[:, t], heads_per_group, axis=1)  # [Bt,H,N]
+        Cg = jnp.repeat(C[:, t], heads_per_group, axis=1)
+        xt = x[:, t]  # [Bt,H,P]
+        h = decay * h + dts * xt[..., :, None] * Bg[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, Cg) + D[None, :, None] * xt
+        ys.append(y)
+    return jnp.stack(ys, axis=1)

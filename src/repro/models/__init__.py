@@ -1,0 +1,1 @@
+from .api import Model, build_model, count_params, input_specs  # noqa: F401

@@ -1,0 +1,99 @@
+"""Public model API: build_model(cfg) -> Model with init/forward/loss/prefill/
+decode_step, plus input_specs() producing ShapeDtypeStruct stand-ins for every
+(shape x step) cell — the dry-run contract (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+from . import transformer as T
+
+__all__ = ["Model", "build_model", "input_specs", "count_params"]
+
+
+def softmax_cross_entropy(logits, labels, ignore_id: int = -1):
+    """logits [B,S,V] fp32, labels [B,S] int32; mean over non-ignored."""
+    mask = (labels != ignore_id).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / denom
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key):
+        return T.init_params(key, self.cfg)
+
+    def forward(self, params, batch):
+        return T.forward(params, self.cfg, batch)
+
+    def loss(self, params, batch):
+        # chunked LM-head CE: never materializes [B,S,V] logits (§Perf H1)
+        h, aux = T.forward(params, self.cfg, batch, return_hidden=True)
+        ce = T.chunked_cross_entropy(params, self.cfg, h, batch["labels"])
+        total = ce + self.cfg.router_aux_loss * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, max_len: int):
+        return T.prefill(params, self.cfg, batch, max_len)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return T.decode_step(params, self.cfg, cache, tokens, pos)
+
+    def init_cache(self, batch: int, max_len: int):
+        return T.init_cache(self.cfg, batch, max_len)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count without allocating (eval_shape over init)."""
+    m = build_model(cfg)
+    tree = jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0)))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function of `shape.kind`.
+
+    train   -> {"tokens", "labels", (+family extras)}
+    prefill -> {"tokens", (+family extras)}
+    decode  -> {"cache", "tokens" [B,1], "pos" [B]}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    fam = cfg.family
+    if shape.kind in ("train", "prefill"):
+        d = {"tokens": _sds((B, S), jnp.int32)}
+        if shape.kind == "train":
+            d["labels"] = _sds((B, S), jnp.int32)
+        if fam == "vlm":
+            d["positions3"] = _sds((B, S, 3), jnp.int32)
+        if fam == "encdec":
+            d["source_embeds"] = _sds((B, cfg.max_source_len, cfg.d_model), jnp.float32)
+        return d
+    # decode: one new token against a cache of length S
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    d = {
+        "cache": cache,
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((B,), jnp.int32),
+    }
+    return d

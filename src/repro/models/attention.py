@@ -1,0 +1,95 @@
+"""Attention: GQA/MQA with flash-style blockwise computation (pure JAX online
+softmax — memory O(block^2) instead of O(T^2), the TPU-production pattern for
+long context), plus single-token decode against a KV cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init
+
+__all__ = ["attn_init", "attn_project_qkv", "full_attention", "blockwise_attention",
+           "decode_attention", "attn_out"]
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, n_heads: int, kv_heads: int, hd: int, bias: bool, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, n_heads * hd, bias, dtype=dtype),
+        "wk": dense_init(kk, d, kv_heads * hd, bias, dtype=dtype),
+        "wv": dense_init(kv, d, kv_heads * hd, bias, dtype=dtype),
+        "wo": dense_init(ko, n_heads * hd, d, dtype=dtype),
+    }
+
+
+def attn_project_qkv(p, x, n_heads: int, kv_heads: int, hd: int, dtype=None):
+    B, T = x.shape[:2]
+    q = dense(p["wq"], x, dtype).reshape(B, T, n_heads, hd)
+    k = dense(p["wk"], x, dtype).reshape(B, T, kv_heads, hd)
+    v = dense(p["wv"], x, dtype).reshape(B, T, kv_heads, hd)
+    return q, k, v
+
+
+def attn_out(p, o, dtype=None):
+    B, T = o.shape[:2]
+    return dense(p["wo"], o.reshape(B, T, -1), dtype)
+
+
+def _group(q, kv_heads):
+    """[B,T,H,hd] -> [B,T,KV,G,hd] for GQA einsums."""
+    B, T, H, hd = q.shape
+    return q.reshape(B, T, kv_heads, H // kv_heads, hd)
+
+
+def full_attention(q, k, v, causal: bool = True, q_offset: int = 0):
+    """Materialized-scores attention (small T).  q [B,Tq,H,hd], k/v [B,Tk,KV,hd]."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    qg = _group(q, KV)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32) / math.sqrt(hd)
+    if causal:
+        qi = jnp.arange(Tq)[:, None] + q_offset
+        ki = jnp.arange(Tk)[None, :]
+        s = jnp.where((ki <= qi)[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgts,bskh->btkgh", p, v)
+    return o.reshape(B, Tq, H, hd)
+
+
+def blockwise_attention(q, k, v, causal: bool = True, q_chunk: int = 1024, kv_chunk: int = 1024,
+                        q_offset: int = 0):
+    """Flash-style attention with a custom flash backward (models/flash.py):
+    O(tile) memory in forward AND backward (a naive scan-AD saves every tile's
+    residuals — observed 116 GB temp on a 0.5B train cell); numerically
+    identical to full_attention (tested)."""
+    from .flash import flash_attention_grouped
+
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    qc = min(q_chunk, Tq)
+    kc = min(kv_chunk, Tk)
+    if Tq % qc or Tk % kc:
+        return full_attention(q, k, v, causal, q_offset)
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd)
+    o = flash_attention_grouped(qg, k, v, causal, qc, kc, q_offset)
+    return o.reshape(B, Tq, H, hd)
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token decode.  q [B,1,H,hd]; caches [B,S,KV,hd]; pos [B] = index
+    of the new token (cache already updated at pos)."""
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    qg = _group(q, KV)[:, 0]  # [B,KV,G,hd]
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache).astype(jnp.float32) / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]  # [B,S]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache)
+    return o.reshape(B, 1, H, hd)

@@ -1,0 +1,126 @@
+"""Shared neural layers: norms, rotary embeddings (incl. M-RoPE), MLPs,
+embeddings.  Functional style: params are plain dicts (pytrees); every
+initializer is deterministic in its PRNG key.  Naming is load-bearing —
+`distributed/sharding.py` pattern-matches leaf paths to PartitionSpecs.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "dense",
+    "norm_init", "norm_apply",
+    "rope", "rope_mrope", "embed_init",
+    "mlp_init", "mlp_apply",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: float | None = None,
+               dtype=jnp.float32):
+    std = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), dtype) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, dtype=None):
+    w = p["w"] if dtype is None else p["w"].astype(dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + (p["b"] if dtype is None else p["b"].astype(dtype))
+    return y
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(p, x, kind: str = "rmsnorm", eps: float = 1e-6, one_offset: bool = False):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+        s = p["scale"].astype(jnp.float32)
+        y = y * (1.0 + s) if one_offset else y * s
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions [...]; returns cos/sin [..., dim/2]."""
+    half = dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x, positions, theta: float = 10000.0, rotary_frac: float = 1.0):
+    """x [B, T, H, hd]; positions [B, T].  Half-split (GPT-NeoX style) rotary
+    on the first rotary_frac * hd dims."""
+    hd = x.shape[-1]
+    rot = int(hd * rotary_frac)
+    if rot == 0:
+        return x
+    rot -= rot % 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = _rope_angles(positions, rot, theta)  # [B,T,rot/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+def rope_mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """Qwen2-VL M-RoPE.  x [B,T,H,hd]; positions3 [B,T,3] (t,h,w ids);
+    sections: per-axis frequency-section sizes summing to hd/2."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # assign each frequency index to a section -> pick that axis' position id
+    sec_id = np.repeat(np.arange(len(sections)), sections)  # [half]
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.asarray(sec_id)[None, None, :].repeat(positions3.shape[0], 0).repeat(positions3.shape[1], 1),
+        axis=-1,
+    )  # [B,T,half]
+    ang = pos * freqs[None, None, :]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"embedding": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def mlp_init(key, d: int, ff: int, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d, ff, dtype=dtype), "w_down": dense_init(k2, ff, d, dtype=dtype)}
+    if act in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(k3, d, ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, act: str, dtype=None):
+    up = dense(p["w_up"], x, dtype)
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["w_gate"], x, dtype)) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(dense(p["w_gate"], x, dtype), approximate=True) * up
+    else:  # gelu_mlp
+        h = jax.nn.gelu(up, approximate=True)
+    return dense(p["w_down"], h, dtype)

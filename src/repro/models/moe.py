@@ -1,0 +1,145 @@
+"""Mixture-of-Experts: top-k router + sort-based capacity dispatch.
+
+Scalable formulation (no [T, E, C] one-hot): routing, sorting and capacity are
+**per batch row** (GShard-style groups) so every dispatch tensor keeps the
+batch dim leading and shards over ('pod','data') like the activations — no
+global argsort / all-gather at scale.  Per row: flatten (token, choice)
+pairs, stable-sort by expert, rank within expert from segment starts, drop
+beyond static capacity C = ceil(S k / E * cf), scatter to [E, C, d] expert
+batches, one batched expert einsum (expert dim EP-shardable over 'model'),
+weighted scatter-add back.  Matches the dense reference exactly for undropped
+tokens (tested).  Shared experts (Qwen-MoE) are a gated dense branch.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_batch, constrain_ep_weights
+
+from .layers import dense, dense_init
+
+__all__ = ["moe_init", "moe_apply", "moe_capacity"]
+
+
+def moe_capacity(T: int, E: int, k: int, cf: float) -> int:
+    c = int(math.ceil(T * k / E * cf))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_init(key, d: int, E: int, ff: int, n_shared: int, act: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, dtype=jnp.float32),
+        "we_gate": jax.random.normal(ks[1], (E, d, ff), dtype) * std,
+        "we_up": jax.random.normal(ks[2], (E, d, ff), dtype) * std,
+        "we_down": jax.random.normal(ks[3], (E, ff, d), dtype) / math.sqrt(ff),
+    }
+    if n_shared:
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d, ff * n_shared, dtype=dtype),
+            "w_up": dense_init(ks[4], d, ff * n_shared, dtype=dtype),
+            "w_down": dense_init(ks[5], ff * n_shared, d, dtype=dtype),
+            "w_shared_gate": dense_init(ks[5], d, 1, dtype=dtype),
+        }
+    return p
+
+
+def moe_apply(p, x, E: int, k: int, cf: float, act: str = "swiglu", dtype=None):
+    """x [B, T, d] -> (y [B, T, d], aux_loss scalar).  Per-row dispatch."""
+    B, T, d = x.shape
+    C = moe_capacity(T, E, k, cf)
+    N = T * k
+
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])  # [B,T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [B,T,k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux (Switch): E * sum_e f_e P_e, averaged over rows
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2), axis=1)
+    pe = jnp.mean(probs, axis=1)
+    aux = jnp.mean(E * jnp.sum(ce / k * pe, axis=-1))
+
+    flat_e = gate_idx.reshape(B, N)
+    flat_g = gate_vals.reshape(B, N)
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(T), k)[None], (B, N))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    inv_order = jnp.argsort(order, axis=-1, stable=True)  # entry -> sorted pos
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    stok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    # segment starts per expert via sorted-order comparison (no bincount)
+    starts = jnp.sum(se[:, :, None] < jnp.arange(E)[None, None, :], axis=1)  # [B,E]
+    rank = jnp.arange(N)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)  # E*C = drop bin
+
+    # gather/scatter-free dispatch: every float tensor moves through batched
+    # take_along_axis (gather with batch dims — GSPMD partitions these along
+    # batch; 2D-index scatters do NOT partition and replicate the full batch,
+    # observed as 580 GB/device on dbrx).  The only scatter left is an int32
+    # slot->entry inverse map.
+    entry_of_slot = jnp.full((B, E * C + 1), N, jnp.int32).at[
+        jnp.arange(B)[:, None], slot].set(
+        jnp.where(keep, jnp.arange(N)[None, :], N).astype(jnp.int32),
+        mode="drop")
+    xg = constrain_batch(
+        jnp.take_along_axis(x, stok[..., None], axis=1))  # [B,N,d] sorted entries
+    xg_pad = jnp.concatenate([xg, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(xg_pad, entry_of_slot[:, : E * C, None], axis=1)
+    xe = constrain_batch(xe.reshape(B, E, C, d), "model")
+    # batched experts (EP-shardable einsums over the E dim)
+    wg = p["we_gate"] if dtype is None else p["we_gate"].astype(dtype)
+    wu = p["we_up"] if dtype is None else p["we_up"].astype(dtype)
+    wd = p["we_down"] if dtype is None else p["we_down"].astype(dtype)
+    # compute-form pin: gather FSDP weight shards (weight-sized collective)
+    # instead of letting SPMD reshard the dispatch activations (H6)
+    wg, wu, wd = (constrain_ep_weights(w) for w in (wg, wu, wd))
+    g = constrain_batch(jnp.einsum("becd,edf->becf", xe, wg), "model")
+    u = constrain_batch(jnp.einsum("becd,edf->becf", xe, wu), "model")
+    h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)) * u
+    out = constrain_batch(
+        jnp.einsum("becf,efd->becd", h, wd), "model").reshape(B, E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((B, 1, d), out.dtype)], axis=1)
+
+    out_ent = jnp.take_along_axis(out, slot[..., None], axis=1)  # [B,N,d] sorted
+    contrib = out_ent * jnp.where(keep, sg, 0.0)[..., None].astype(out.dtype)
+    # un-sort back to (token, choice) order and reduce over choices — no scatter
+    contrib = constrain_batch(
+        jnp.take_along_axis(contrib, inv_order[..., None], axis=1))
+    y = constrain_batch(contrib.reshape(B, T, k, d).sum(axis=2))
+
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(dense(sp["w_gate"], x, dtype)) * dense(sp["w_up"], x, dtype)
+        ys = dense(sp["w_down"], hs, dtype)
+        ys = ys * jax.nn.sigmoid(dense(sp["w_shared_gate"], x, dtype))
+        y = y + ys
+    return y.astype(x.dtype), aux
+
+
+def moe_dense_reference(p, x, E: int, k: int, act: str = "swiglu"):
+    """O(E) dense reference (no dropping): oracle for tests."""
+    B, T, d = x.shape
+    xt = x.reshape(B * T, d)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    gates = jnp.zeros((xt.shape[0], E), probs.dtype)
+    gates = gates.at[jnp.arange(xt.shape[0])[:, None], gate_idx].set(gate_vals)
+    g = jnp.einsum("td,edf->tef", xt, p["we_gate"])
+    u = jnp.einsum("td,edf->tef", xt, p["we_up"])
+    h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g, approximate=True)) * u
+    out = jnp.einsum("tef,efd->ted", h, p["we_down"])
+    y = jnp.einsum("te,ted->td", gates.astype(out.dtype), out)
+    if "shared" in p:
+        sp = p["shared"]
+        hs = jax.nn.silu(dense(sp["w_gate"], xt)) * dense(sp["w_up"], xt)
+        ys = dense(sp["w_down"], hs) * jax.nn.sigmoid(dense(sp["w_shared_gate"], xt))
+        y = y + ys
+    return y.reshape(B, T, d)

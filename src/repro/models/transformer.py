@@ -1,0 +1,583 @@
+"""Model assembly for all assigned LM families.
+
+Every family is built scan-over-layers (stacked per-layer params, O(1) HLO in
+depth — the production pattern that keeps 80-layer/132B compiles tractable)
+with optional per-block remat.  Three entry points per model:
+
+    forward(params, batch)                 train/eval logits (+ MoE aux loss)
+    prefill(params, batch)                 populate KV/recurrent caches
+    decode_step(params, cache, tok, pos)   one token against the cache
+
+Families: dense | moe | vlm (M-RoPE) | ssm (RWKV6) | hybrid (Zamba2) |
+encdec (Whisper, stub frontend).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ssm as ssm_mod
+from .attention import (
+    attn_init,
+    attn_out,
+    attn_project_qkv,
+    blockwise_attention,
+    decode_attention,
+    full_attention,
+)
+from .layers import (
+    dense,
+    dense_init,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    rope,
+    rope_mrope,
+)
+from .moe import moe_apply, moe_init
+from repro.distributed.sharding import constrain_batch
+
+__all__ = ["init_params", "forward", "prefill", "decode_step", "init_cache"]
+
+
+def _adt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------- blocks
+
+
+def _block_init(key, cfg, cross: bool = False):
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": norm_init(cfg.d_model, cfg.norm, pd),
+        "attn": attn_init(ks[0], cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.qkv_bias, pd),
+        "ln2": norm_init(cfg.d_model, cfg.norm, pd),
+    }
+    if cross:
+        p["ln_x"] = norm_init(cfg.d_model, cfg.norm, pd)
+        p["xattn"] = attn_init(ks[1], cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd, False, pd)
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[2], cfg.d_model, cfg.n_experts, cfg.d_ff_expert or cfg.d_ff,
+                            cfg.n_shared_experts, cfg.act, pd)
+    else:
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.act, pd)
+    return p
+
+
+def _apply_rope(cfg, q, k, positions):
+    if cfg.mrope_sections is not None:
+        if positions.ndim == 2:  # text-only: t = h = w
+            positions = jnp.stack([positions] * 3, axis=-1)
+        return (rope_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections),
+                rope_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections))
+    if cfg.partial_rotary <= 0:
+        return q, k
+    return (rope(q, positions, cfg.rope_theta, cfg.partial_rotary),
+            rope(k, positions, cfg.rope_theta, cfg.partial_rotary))
+
+
+def _attention_seq(cfg, q, k, v, causal=True):
+    T = q.shape[1]
+    if T > cfg.attn_chunk:
+        return blockwise_attention(q, k, v, causal=causal,
+                                   q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+    return full_attention(q, k, v, causal=causal)
+
+
+def _block_apply(p, x, positions, cfg, causal=True, enc=None):
+    """Full-sequence block.  Returns (x, aux)."""
+    dt = _adt(cfg)
+    h = norm_apply(p["ln1"], x, cfg.norm, one_offset=cfg.rms_one_offset)
+    q, k, v = attn_project_qkv(p["attn"], h, cfg.n_heads, cfg.kv_heads, cfg.hd, dt)
+    q, k = _apply_rope(cfg, q, k, positions)
+    o = _attention_seq(cfg, q, k, v, causal=causal)
+    x = x + attn_out(p["attn"], o, dt)
+    if enc is not None:  # cross attention (enc-dec)
+        h = norm_apply(p["ln_x"], x, cfg.norm)
+        qx = dense(p["xattn"]["wq"], h, dt).reshape(*h.shape[:2], cfg.n_heads, cfg.hd)
+        kx = dense(p["xattn"]["wk"], enc, dt).reshape(*enc.shape[:2], cfg.kv_heads, cfg.hd)
+        vx = dense(p["xattn"]["wv"], enc, dt).reshape(*enc.shape[:2], cfg.kv_heads, cfg.hd)
+        ox = _attention_seq(cfg, qx, kx, vx, causal=False)
+        x = x + attn_out(p["xattn"], ox, dt)
+    h = norm_apply(p["ln2"], x, cfg.norm, one_offset=cfg.rms_one_offset)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = moe_apply(p["moe"], h, cfg.n_experts, cfg.top_k, cfg.capacity_factor,
+                           cfg.act, dt)
+    else:
+        y = mlp_apply(p["mlp"], h, cfg.act, dt)
+    return x + y, aux
+
+
+def _quant_kv(x):
+    """[B,KV,hd] -> int8 values + f16 per-head absmax scale."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def _block_decode(p, cache, x, pos, cfg, enc_kv=None):
+    """One-token block against KV cache. cache: {"k","v"[, "*_scale"]}."""
+    dt = _adt(cfg)
+    B = x.shape[0]
+    h = norm_apply(p["ln1"], x, cfg.norm, one_offset=cfg.rms_one_offset)
+    q, k, v = attn_project_qkv(p["attn"], h, cfg.n_heads, cfg.kv_heads, cfg.hd, dt)
+    q, k = _apply_rope(cfg, q, k, pos[:, None])
+    bidx = jnp.arange(B)
+    if "k_scale" in cache:
+        kq, ks = _quant_kv(k[:, 0])
+        vq, vs = _quant_kv(v[:, 0])
+        kc8 = cache["k"].at[bidx, pos].set(kq)
+        vc8 = cache["v"].at[bidx, pos].set(vq)
+        ksc = cache["k_scale"].at[bidx, pos].set(ks)
+        vsc = cache["v_scale"].at[bidx, pos].set(vs)
+        kc = (kc8.astype(dt) * ksc.astype(dt)[..., None])
+        vc = (vc8.astype(dt) * vsc.astype(dt)[..., None])
+        new_cache = {"k": kc8, "v": vc8, "k_scale": ksc, "v_scale": vsc}
+    else:
+        kc = cache["k"].at[bidx, pos].set(k[:, 0])
+        vc = cache["v"].at[bidx, pos].set(v[:, 0])
+        new_cache = {"k": kc, "v": vc}
+    o = decode_attention(q, kc, vc, pos)
+    x = x + attn_out(p["attn"], o, dt)
+    if enc_kv is not None:
+        h = norm_apply(p["ln_x"], x, cfg.norm)
+        qx = dense(p["xattn"]["wq"], h, dt).reshape(B, 1, cfg.n_heads, cfg.hd)
+        ke, ve = enc_kv
+        ox = decode_attention(qx, ke, ve, jnp.full((B,), ke.shape[1] - 1, jnp.int32))
+        x = x + attn_out(p["xattn"], ox, dt)
+    h = norm_apply(p["ln2"], x, cfg.norm, one_offset=cfg.rms_one_offset)
+    if cfg.family == "moe":
+        y, _ = moe_apply(p["moe"], h, cfg.n_experts, cfg.top_k, cfg.capacity_factor,
+                         cfg.act, dt)
+    else:
+        y = mlp_apply(p["mlp"], h, cfg.act, dt)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------- params
+
+
+def init_params(key, cfg):
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p = {"embed": embed_init(ks[0], cfg.vocab, cfg.d_model, pd),
+         "ln_f": norm_init(cfg.d_model, cfg.norm, pd)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], cfg.d_model, cfg.vocab, dtype=pd)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        p["layers"] = _stack_init(ks[2], cfg.n_layers, lambda k: _block_init(k, cfg))
+    elif fam == "ssm":  # rwkv6
+        p["layers"] = _stack_init(ks[2], cfg.n_layers,
+                                  lambda k: ssm_mod.rwkv6_block_init(k, cfg, pd))
+    elif fam == "hybrid":  # zamba2
+        n_stages = cfg.n_layers // cfg.attn_every
+        p["mamba"] = _stack_init(ks[2], cfg.n_layers,
+                                 lambda k: {"ln": norm_init(cfg.d_model, cfg.norm, pd),
+                                            "m": ssm_mod.mamba2_init(k, cfg, pd)})
+        p["shared"] = _block_init(ks[3], cfg)
+        p["cat_proj"] = dense_init(ks[4], 2 * cfg.d_model, cfg.d_model, dtype=pd)
+        del n_stages
+    elif fam == "encdec":
+        p["enc_layers"] = _stack_init(ks[2], cfg.n_enc_layers, lambda k: _block_init(k, cfg))
+        p["layers"] = _stack_init(ks[3], cfg.n_layers, lambda k: _block_init(k, cfg, cross=True))
+        p["enc_ln_f"] = norm_init(cfg.d_model, cfg.norm, pd)
+        p["dec_pos"] = jax.random.normal(ks[5], (cfg.max_seq, cfg.d_model), pd) * 0.01
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _embed_tokens(p, cfg, tokens):
+    h = p["embed"]["embedding"][tokens].astype(_adt(cfg))
+    if cfg.embed_scale:
+        h = h * math.sqrt(cfg.d_model)
+    return h
+
+
+def _logits(p, cfg, h):
+    h = norm_apply(p["ln_f"], h, cfg.norm, one_offset=cfg.rms_one_offset)
+    if cfg.tie_embeddings:
+        logits = h @ p["embed"]["embedding"].astype(_adt(cfg)).T
+    else:
+        logits = dense(p["unembed"], h, _adt(cfg))
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits.astype(jnp.float32)
+
+
+def _scan_blocks(layers, x, body, cfg, extra=None):
+    """scan over stacked layer params; body(params_l, x) -> (x, aux).
+
+    The block-boundary constrain_batch pins the carried hidden state (and
+    therefore the checkpoint-saved residual stack) to the data-parallel axes
+    — SPMD otherwise loses batch sharding through flash/MoE internals and
+    saves *unsharded* [L, B, S, d] stacks (observed, §Perf H1)."""
+
+    def f(carry, pl_):
+        x, aux = carry
+        x, a = body(pl_, x)
+        return (constrain_batch(x), aux + a), None
+
+    if cfg.remat:
+        f = jax.checkpoint(f, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(f, (x, jnp.zeros((), jnp.float32)), layers)
+    return x, aux
+
+
+def _sinusoid_pos(T, d, dtype):
+    pos = np.arange(T)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype=dtype)
+
+
+def _encode(p, cfg, source_embeds):
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    h = source_embeds.astype(_adt(cfg))
+    h = h + _sinusoid_pos(h.shape[1], cfg.d_model, h.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(h.shape[1])[None], h.shape[:2])
+    h, _ = _scan_blocks(
+        p["enc_layers"], h,
+        lambda pl_, x: _block_apply(pl_, x, pos, cfg, causal=False), cfg)
+    return norm_apply(p["enc_ln_f"], h, cfg.norm)
+
+
+def forward(p, cfg, batch, return_hidden: bool = False):
+    """batch: tokens [B,S] (+ positions3 for vlm, source_embeds for encdec,
+    embeds override for stub frontends).  Returns (logits, aux) — or
+    (hidden, aux) with return_hidden (the chunked-CE path never materializes
+    the full [B,S,V] logits)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if "embeds" in batch:
+        h = batch["embeds"].astype(_adt(cfg))
+    else:
+        h = _embed_tokens(p, cfg, tokens)
+    positions = batch.get("positions", jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+    if fam == "vlm" and "positions3" in batch:
+        positions = batch["positions3"]
+
+    if fam in ("dense", "moe", "vlm"):
+        h, aux = _scan_blocks(
+            p["layers"], h, lambda pl_, x: _block_apply(pl_, x, positions, cfg), cfg)
+    elif fam == "ssm":
+        def body(pl_, x):
+            return ssm_mod.rwkv6_apply(pl_, x, cfg), jnp.zeros((), jnp.float32)
+        h, aux = _scan_blocks(p["layers"], h, body, cfg)
+    elif fam == "hybrid":
+        e0 = h
+        n_stages = cfg.n_layers // cfg.attn_every
+        mam = jax.tree.map(
+            lambda a: a.reshape(n_stages, cfg.attn_every, *a.shape[1:]), p["mamba"])
+
+        def stage(carry, mam_s):
+            x, aux = carry
+
+            def inner(xc, pl_):
+                return xc + ssm_mod.mamba2_apply(
+                    pl_["m"], norm_apply(pl_["ln"], xc, cfg.norm), cfg), None
+
+            inner_f = jax.checkpoint(inner, prevent_cse=False) if cfg.remat else inner
+            x, _ = jax.lax.scan(inner_f, x, mam_s)
+            inp = dense(p["cat_proj"], jnp.concatenate([x, e0], axis=-1), _adt(cfg))
+            y, a = _block_apply(p["shared"], inp, positions, cfg)
+            return (constrain_batch(x + y - inp), aux + a), None  # residual block delta
+
+        (h, aux), _ = jax.lax.scan(stage, (h, jnp.zeros((), jnp.float32)), mam)
+    elif fam == "encdec":
+        enc = _encode(p, cfg, batch["source_embeds"])
+        h = h + p["dec_pos"][:S].astype(h.dtype)[None]
+
+        def body(pl_, x):
+            return _block_apply(pl_, x, positions, cfg, causal=True, enc=enc)
+
+        h, aux = _scan_blocks(p["layers"], h, body, cfg)
+    else:
+        raise ValueError(fam)
+    if return_hidden:
+        return h, aux
+    return _logits(p, cfg, h), aux
+
+
+def chunked_cross_entropy(p, cfg, h, labels, chunk: int = 256,
+                          ignore_id: int = -1):
+    """Next-token CE without materializing [B,S,V] logits.
+
+    Scans the sequence in `chunk`-token slices; each slice's logits are
+    (re)computed inside a checkpointed body, so both forward and backward
+    peak at B x chunk x V — the production LM-head memory fix (§Perf H1).
+    """
+    hs = h[:, :-1]
+    ys = labels[:, 1:]
+    B, S, d = hs.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        hs = jnp.pad(hs, ((0, 0), (0, pad), (0, 0)))
+        ys = jnp.pad(ys, ((0, 0), (0, pad)), constant_values=ignore_id)
+    n = (S + pad) // C
+    hs = hs.reshape(B, n, C, d).transpose(1, 0, 2, 3)
+    ys = ys.reshape(B, n, C).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hc, yc = xs
+        logits = _logits(p, cfg, hc)  # [B, C, V] fp32
+        mask = (yc != ignore_id).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None], axis=-1)[..., 0]
+        nll, cnt = acc
+        return (nll + jnp.sum((lse - ll) * mask), cnt + jnp.sum(mask)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2, (hs, ys))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------- caches
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    dt = _adt(cfg)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        if cfg.kv_cache_dtype == "int8":
+            # quantized cache (§Perf H10): int8 values + per-(pos, head) f16
+            # absmax scales — halves the decode memory term
+            c = {
+                "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd), jnp.int8),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd), jnp.int8),
+                "k_scale": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_heads), jnp.float16),
+                "v_scale": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_heads), jnp.float16),
+            }
+        else:
+            c = {
+                "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd), dt),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_heads, cfg.hd), dt),
+            }
+        if fam == "encdec":
+            c["xk"] = jnp.zeros((cfg.n_layers, batch, cfg.max_source_len, cfg.kv_heads, cfg.hd), dt)
+            c["xv"] = jnp.zeros((cfg.n_layers, batch, cfg.max_source_len, cfg.kv_heads, cfg.hd), dt)
+        return c
+    if fam == "ssm":
+        proto = ssm_mod.rwkv6_state_init(cfg, batch, dt)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), proto)
+    if fam == "hybrid":
+        n_stages = cfg.n_layers // cfg.attn_every
+        proto = ssm_mod.mamba2_state_init(cfg, batch, dt)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), proto),
+            "k": jnp.zeros((n_stages, batch, max_len, cfg.kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((n_stages, batch, max_len, cfg.kv_heads, cfg.hd), dt),
+        }
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------- decode
+
+
+def decode_step(p, cfg, cache, tokens, pos):
+    """tokens [B,1], pos [B] -> (logits [B,1,V], cache')."""
+    fam = cfg.family
+    B = tokens.shape[0]
+    h = _embed_tokens(p, cfg, tokens)
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(x, xs):
+            pl_, c = xs
+            x, new = _block_decode(pl_, c, x, pos, cfg)
+            return x, new
+
+        h, cache = jax.lax.scan(body, h, (p["layers"], cache))
+    elif fam == "encdec":
+        self_keys = [k for k in cache if not k.startswith("x")]
+
+        def body(x, xs):
+            pl_, c, xk, xv = xs
+            x, new = _block_decode(pl_, c, x, pos, cfg, enc_kv=(xk, xv))
+            return x, new
+
+        h = h + p["dec_pos"][pos][:, None].astype(h.dtype)
+        h, new_self = jax.lax.scan(
+            body, h, (p["layers"], {k: cache[k] for k in self_keys},
+                      cache["xk"], cache["xv"]))
+        cache = dict(cache, **new_self)
+    elif fam == "ssm":
+        def body(x, xs):
+            pl_, st = xs
+            x, st = ssm_mod.rwkv6_decode_step(pl_, x, st, cfg)
+            return x, st
+
+        h, st = jax.lax.scan(body, h, (p["layers"], cache))
+        cache = st
+    elif fam == "hybrid":
+        e0 = h
+        n_stages = cfg.n_layers // cfg.attn_every
+        mam = jax.tree.map(
+            lambda a: a.reshape(n_stages, cfg.attn_every, *a.shape[1:]), p["mamba"])
+        mst = jax.tree.map(
+            lambda a: a.reshape(n_stages, cfg.attn_every, *a.shape[1:]), cache["mamba"])
+
+        def stage(x, xs):
+            mam_s, mst_s, kc, vc = xs
+
+            def inner(xc, xs2):
+                pl_, st = xs2
+                d, st = ssm_mod.mamba2_decode_step(
+                    pl_["m"], norm_apply(pl_["ln"], xc, cfg.norm), st, cfg)
+                return xc + d, st
+
+            x, mst_s = jax.lax.scan(inner, x, (mam_s, mst_s))
+            inp = dense(p["cat_proj"], jnp.concatenate([x, e0], axis=-1), _adt(cfg))
+            y, new = _block_decode(p["shared"], {"k": kc, "v": vc}, inp, pos, cfg)
+            return x + y - inp, (mst_s, new["k"], new["v"])
+
+        h, (mst, ks, vs) = jax.lax.scan(stage, h, (mam, mst, cache["k"], cache["v"]))
+        cache = {"mamba": jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), mst), "k": ks, "v": vs}
+    else:
+        raise ValueError(fam)
+    return _logits(p, cfg, h), cache
+
+
+# ---------------------------------------------------------------- prefill
+
+
+def prefill(p, cfg, batch, max_len: int):
+    """Run the sequence path, returning (last-token logits, populated cache)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len)
+    h = _embed_tokens(p, cfg, tokens)
+    positions = batch.get("positions", jnp.broadcast_to(jnp.arange(S)[None], (B, S)))
+
+    if fam in ("dense", "moe", "vlm", "encdec"):
+        enc = None
+        if fam == "encdec":
+            enc = _encode(p, cfg, batch["source_embeds"])
+            h = h + p["dec_pos"][:S].astype(h.dtype)[None]
+        dt = _adt(cfg)
+
+        def body(x, xs):
+            pl_ = xs
+            hn = norm_apply(pl_["ln1"], x, cfg.norm, one_offset=cfg.rms_one_offset)
+            q, k, v = attn_project_qkv(pl_["attn"], hn, cfg.n_heads, cfg.kv_heads, cfg.hd, dt)
+            q, k = _apply_rope(cfg, q, k, positions)
+            o = _attention_seq(cfg, q, k, v, causal=True)
+            x = x + attn_out(pl_["attn"], o, dt)
+            ys = {"k": k, "v": v}
+            if fam == "encdec":
+                hx = norm_apply(pl_["ln_x"], x, cfg.norm)
+                qx = dense(pl_["xattn"]["wq"], hx, dt).reshape(B, S, cfg.n_heads, cfg.hd)
+                kx = dense(pl_["xattn"]["wk"], enc, dt).reshape(B, -1, cfg.kv_heads, cfg.hd)
+                vx = dense(pl_["xattn"]["wv"], enc, dt).reshape(B, -1, cfg.kv_heads, cfg.hd)
+                ox = _attention_seq(cfg, qx, kx, vx, causal=False)
+                x = x + attn_out(pl_["xattn"], ox, dt)
+                ys["xk"], ys["xv"] = kx, vx
+            hn = norm_apply(pl_["ln2"], x, cfg.norm, one_offset=cfg.rms_one_offset)
+            if cfg.family == "moe":
+                y, _ = moe_apply(pl_["moe"], hn, cfg.n_experts, cfg.top_k,
+                                 cfg.capacity_factor, cfg.act, dt)
+            else:
+                y = mlp_apply(pl_["mlp"], hn, cfg.act, dt)
+            return constrain_batch(x + y), ys
+
+        body_f = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+        h, kvs = jax.lax.scan(body_f, h, p["layers"])
+        if "k_scale" in cache:  # int8 cache (§Perf H10)
+            kq, ks2 = _quant_kv(kvs["k"])
+            vq, vs2 = _quant_kv(kvs["v"])
+            cache["k"] = cache["k"].at[:, :, :S].set(kq)
+            cache["v"] = cache["v"].at[:, :, :S].set(vq)
+            cache["k_scale"] = cache["k_scale"].at[:, :, :S].set(ks2)
+            cache["v_scale"] = cache["v_scale"].at[:, :, :S].set(vs2)
+        else:
+            cache["k"] = cache["k"].at[:, :, :S].set(kvs["k"])
+            cache["v"] = cache["v"].at[:, :, :S].set(kvs["v"])
+        if fam == "encdec":
+            cache["xk"] = kvs["xk"]
+            cache["xv"] = kvs["xv"]
+    elif fam == "ssm":
+        def body(x, pl_):
+            hn = norm_apply(pl_["ln1"], x, "layernorm")
+            o, tm_state = ssm_mod.rwkv6_time_mix(pl_["tm"], hn, cfg)
+            x = x + o
+            h2 = norm_apply(pl_["ln2"], x, "layernorm")
+            o2, _ = ssm_mod.rwkv6_channel_mix(pl_["cm"], h2)
+            st = dict(tm_state, cm_last_x=h2[:, -1])
+            return x + o2, st
+
+        body_f = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+        h, cache = jax.lax.scan(body_f, h, p["layers"])
+    elif fam == "hybrid":
+        e0 = h
+        n_stages = cfg.n_layers // cfg.attn_every
+        mam = jax.tree.map(
+            lambda a: a.reshape(n_stages, cfg.attn_every, *a.shape[1:]), p["mamba"])
+        dt_ = _adt(cfg)
+
+        def stage(x, mam_s):
+            def inner(xc, pl_):
+                d_in, H, N, G = ssm_mod._m2_dims(cfg)
+                hn = norm_apply(pl_["ln"], xc, cfg.norm)
+                y = dense(pl_["m"]["in_proj"], hn, dt_)
+                z, xcv, Bm, Cm, dtv = ssm_mod._split_in_proj(y, cfg)
+                conv_in = jnp.concatenate([xcv, Bm, Cm], axis=-1)
+                conv_out = jax.nn.silu(ssm_mod._causal_conv(
+                    conv_in, pl_["m"]["conv_w"].astype(dt_), pl_["m"]["conv_b"].astype(dt_)))
+                xcv, Bm, Cm = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+                dtp = jax.nn.softplus(dtv.astype(jnp.float32) + pl_["m"]["dt_bias"])
+                A = -jnp.exp(pl_["m"]["A_log"])
+                from repro.kernels.mamba2 import mamba2_ssd_chunked
+
+                ych, hfin = mamba2_ssd_chunked(
+                    xcv.reshape(B, S, H, cfg.ssm_headdim), dtp, A,
+                    Bm.reshape(B, S, G, N), Cm.reshape(B, S, G, N),
+                    pl_["m"]["D"], chunk=min(64, S), return_state=True)
+                yc = ych.reshape(B, S, d_in).astype(xc.dtype)
+                yc = norm_apply(pl_["m"]["out_norm"], yc * jax.nn.silu(z), "rmsnorm")
+                out = dense(pl_["m"]["out_proj"], yc, dt_)
+                st = {"conv": conv_in[:, S - (cfg.ssm_conv - 1):], "ssm": hfin}
+                return xc + out, st
+
+            x, mstates = jax.lax.scan(inner, x, mam_s)
+            inp = dense(p["cat_proj"], jnp.concatenate([x, e0], axis=-1), dt_)
+            hn = norm_apply(p["shared"]["ln1"], inp, cfg.norm)
+            q, k, v = attn_project_qkv(p["shared"]["attn"], hn, cfg.n_heads,
+                                       cfg.kv_heads, cfg.hd, dt_)
+            q, k = _apply_rope(cfg, q, k, positions)
+            o = _attention_seq(cfg, q, k, v, causal=True)
+            y = inp + attn_out(p["shared"]["attn"], o, dt_)
+            hn = norm_apply(p["shared"]["ln2"], y, cfg.norm)
+            y = y + mlp_apply(p["shared"]["mlp"], hn, cfg.act, dt_)
+            return x + y - inp, (mstates, k, v)
+
+        h, (mst, ks, vs) = jax.lax.scan(stage, h, mam)
+        cache["mamba"] = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), mst)
+        cache["k"] = cache["k"].at[:, :, :S].set(ks)
+        cache["v"] = cache["v"].at[:, :, :S].set(vs)
+    else:
+        raise ValueError(fam)
+    return _logits(p, cfg, h[:, -1:]), cache

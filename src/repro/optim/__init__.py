@@ -1,0 +1,2 @@
+from .optimizers import adamw, lion, sgd, clip_by_global_norm, apply_updates  # noqa: F401
+from .schedules import cosine_schedule, linear_schedule, constant_schedule  # noqa: F401

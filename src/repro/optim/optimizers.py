@@ -1,0 +1,120 @@
+"""Optimizers (no optax in this environment — a small, tested, optax-shaped
+implementation).  All state is a pytree; master/optimizer state is fp32
+regardless of param dtype (mixed-precision convention)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "lion", "sgd", "clip_by_global_norm", "apply_updates", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), n
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, decay_mask: Callable | None = None) -> Optimizer:
+    """AdamW with decoupled weight decay.  lr_fn: step -> lr."""
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": z, "nu": jax.tree.map(jnp.copy, z), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        b1c = 1 - b1**step.astype(jnp.float32)
+        b2c = 1 - b2**step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1c
+            vh = v / b2c
+            u = -lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * _maybe_decay(p))
+            return u, m, v
+
+        def _maybe_decay(p):
+            return p.astype(jnp.float32) if p.ndim >= 2 else jnp.zeros_like(p, jnp.float32)
+
+        flat_u, flat_m, flat_v = [], [], []
+        gl, ml, vl, pl = (jax.tree.leaves(t) for t in (grads, state["mu"], state["nu"], params))
+        for g, m, v, p in zip(gl, ml, vl, pl):
+            u, m2, v2 = upd(g, m, v, p)
+            flat_u.append(u)
+            flat_m.append(m2)
+            flat_v.append(v2)
+        treedef = jax.tree.structure(grads)
+        return (
+            jax.tree.unflatten(treedef, flat_u),
+            {"mu": jax.tree.unflatten(treedef, flat_m),
+             "nu": jax.tree.unflatten(treedef, flat_v),
+             "step": step},
+        )
+
+    return Optimizer(init, update)
+
+
+def lion(lr_fn, b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            u = -lr * (jnp.sign(b1 * m + (1 - b1) * g)
+                       + (weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0))
+            m2 = b2 * m + (1 - b2) * g
+            return u, m2
+
+        us, ms = zip(*[upd(g, m, p) for g, m, p in zip(
+            jax.tree.leaves(grads), jax.tree.leaves(state["mu"]), jax.tree.leaves(params))])
+        td = jax.tree.structure(grads)
+        return jax.tree.unflatten(td, list(us)), {"mu": jax.tree.unflatten(td, list(ms)),
+                                                  "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr_fn, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        updates = jax.tree.map(lambda m: -lr * m, mu)
+        return updates, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)

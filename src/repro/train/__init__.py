@@ -1,0 +1,1 @@
+from .loop import TrainState, make_train_step, train_loop  # noqa: F401

@@ -1,0 +1,148 @@
+"""Training loop: jit'd step (grad accumulation via scan, global-norm clip,
+AdamW), sharded state, checkpoint/restore/heartbeat/preemption/straggler
+hooks.  Works identically on 1 CPU device and on the production mesh (the
+step function is built once with in/out shardings when a mesh is given).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.config import TrainConfig
+from repro.distributed.fault_tolerance import Heartbeat, PreemptionGuard, StragglerMonitor
+from repro.optim import adamw, apply_updates, clip_by_global_norm, cosine_schedule
+
+__all__ = ["TrainState", "make_train_step", "train_loop"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+def make_train_step(loss_fn: Callable, tcfg: TrainConfig, optimizer=None):
+    """loss_fn(params, batch) -> (loss, metrics dict).  Returns
+    step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt = optimizer or adamw(
+        cosine_schedule(tcfg.lr, tcfg.warmup_steps, tcfg.total_steps),
+        tcfg.b1, tcfg.b2, tcfg.eps, tcfg.weight_decay,
+    )
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            mb = tcfg.microbatch
+
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+            batches = jax.tree.map(split, batch)
+
+            def acc_fn(carry, b):
+                loss_a, grads_a = carry
+                loss, metrics, grads = grads_of(params, b)
+                return (loss_a + loss / mb,
+                        jax.tree.map(lambda a, g: a + g.astype(jnp.float32) / mb,
+                                     grads_a, grads)), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(acc_fn, (0.0, zero), batches)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return step, opt
+
+
+def train_loop(
+    loss_fn: Callable,
+    init_params: Any,
+    data_iter,
+    tcfg: TrainConfig,
+    ckpt_dir: str | None = None,
+    mesh=None,
+    shardings=None,
+    hooks: dict | None = None,
+):
+    """Run tcfg.total_steps steps with full fault-tolerance plumbing.
+
+    Resumes from the latest committed checkpoint in ckpt_dir if present
+    (params + optimizer + data-pipeline state).
+    """
+    hooks = hooks or {}
+    step_fn, opt = make_train_step(loss_fn, tcfg)
+    params = init_params
+    opt_state = opt.init(params)
+    start_step = 0
+
+    mgr = CheckpointManager(ckpt_dir, keep=tcfg.keep_checkpoints) if ckpt_dir else None
+    if mgr is not None and mgr.latest_step() is not None:
+        s = mgr.latest_step()
+        tree = {"params": params, "opt": opt_state}
+        (restored, extra) = mgr.restore(s, jax.eval_shape(lambda: tree), shardings=None)
+        params, opt_state = restored["params"], restored["opt"]
+        params = jax.tree.map(jnp.asarray, params)
+        opt_state = jax.tree.map(jnp.asarray, opt_state)
+        start_step = s
+        if hasattr(data_iter, "restore") and "pipeline" in extra:
+            data_iter.restore(extra["pipeline"])
+
+    jit_kwargs = {}
+    if mesh is not None and shardings is not None:
+        jit_kwargs = dict(
+            in_shardings=(shardings["params"], shardings["opt"], shardings["batch"]),
+            out_shardings=(shardings["params"], shardings["opt"], None),
+        )
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1), **jit_kwargs)
+
+    guard = PreemptionGuard().install() if hooks.get("preemption", True) else None
+    hb = Heartbeat(hooks["heartbeat_path"]) if "heartbeat_path" in hooks else None
+    straggler = StragglerMonitor()
+    history = []
+    step = start_step - 1  # if already past total_steps (resume), no-op
+
+    for step in range(start_step, tcfg.total_steps):
+        batch = data_iter.next_batch() if hasattr(data_iter, "next_batch") else next(data_iter)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.time()
+        params, opt_state, metrics = jstep(params, opt_state, batch)
+        if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+            metrics = jax.tree.map(float, jax.device_get(metrics))
+            history.append({"step": step + 1, **metrics})
+            if hooks.get("log"):
+                hooks["log"](history[-1])
+        dt = time.time() - t0
+        straggler.record(step, dt)
+        if hb:
+            hb.beat(step)
+        should_ckpt = mgr is not None and (
+            (step + 1) % tcfg.checkpoint_every == 0
+            or step == tcfg.total_steps - 1
+            or (guard and guard.should_exit)
+        )
+        if should_ckpt:
+            extra = {}
+            if hasattr(data_iter, "state"):
+                extra["pipeline"] = data_iter.state()
+            mgr.save(step + 1, {"params": params, "opt": opt_state}, extra=extra,
+                     blocking=(guard and guard.should_exit) or step == tcfg.total_steps - 1)
+        if guard and guard.should_exit:
+            break
+    if mgr:
+        mgr.wait()
+    return TrainState(params, opt_state, step + 1), history

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train-gradient step + one decode step on CPU; asserts shapes & finiteness.
+Also validates decode-vs-forward consistency for every cache implementation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.configs import ALL_LM_ARCHS
+from repro.models import build_model
+
+BATCH, SEQ = 2, 32
+
+
+def _batch_for(cfg, key, B=BATCH, S=SEQ):
+    rng = np.random.default_rng(0)
+    b = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        pos = np.stack([np.arange(S)] * 3, -1)[None].repeat(B, 0)
+        b["positions3"] = jnp.asarray(pos, jnp.int32)
+    if cfg.family == "encdec":
+        b["source_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.max_source_len, cfg.d_model)), jnp.float32
+        )
+    return b
+
+
+@pytest.mark.parametrize("arch", ALL_LM_ARCHS)
+def test_forward_and_grad(arch):
+    cfg = get_config(arch).reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, 0)
+
+    logits, aux = jax.jit(m.forward)(params, batch)
+    assert logits.shape == (BATCH, SEQ, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+
+    loss, metrics = m.loss(params, batch)
+    g = jax.jit(jax.grad(lambda p: m.loss(p, batch)[0]))(params)
+    gn = jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree.leaves(g)))
+    assert bool(jnp.isfinite(loss)) and bool(jnp.isfinite(gn)), arch
+    assert float(gn) > 0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ALL_LM_ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill must reproduce the forward logits at the next
+    position (same math through the cache path)."""
+    # lossless MoE capacity: token-dropping legitimately differs between the
+    # joint forward batch and the decode batch, so remove drops for this check
+    cfg = get_config(arch).reduced(capacity_factor=8.0)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    batch = _batch_for(cfg, 1)
+    S = SEQ
+
+    logits_all, _ = jax.jit(m.forward)(params, batch)
+    last, cache = jax.jit(lambda p, b: m.prefill(p, b, S + 8))(params, batch)
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0]), np.asarray(logits_all[:, -1]), atol=2e-2, rtol=2e-2
+    )
+
+    # feed token S (from the batch extended by one) — compare against forward
+    # of the full S+1 sequence
+    ext = jnp.concatenate(
+        [batch["tokens"], batch["tokens"][:, :1]], axis=1
+    )  # arbitrary next token
+    b2 = dict(batch, tokens=ext)
+    if cfg.family == "vlm":
+        pos = np.stack([np.arange(S + 1)] * 3, -1)[None].repeat(BATCH, 0)
+        b2["positions3"] = jnp.asarray(pos, jnp.int32)
+    logits_ext, _ = jax.jit(m.forward)(params, b2)
+    pos = jnp.full((BATCH,), S, jnp.int32)
+    step_logits, _ = jax.jit(m.decode_step)(params, cache, ext[:, -1:], pos)
+    np.testing.assert_allclose(
+        np.asarray(step_logits[:, 0]), np.asarray(logits_ext[:, -1]),
+        atol=3e-2, rtol=3e-2,
+    )
+
+
+def test_moe_dispatch_matches_dense_reference():
+    from repro.models.moe import moe_apply, moe_dense_reference, moe_init
+
+    key = jax.random.PRNGKey(2)
+    d, E, k, ff = 32, 8, 2, 64
+    p = moe_init(key, d, E, ff, n_shared=0, act="swiglu")
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, d))
+    y, aux = moe_apply(p, x, E, k, cf=8.0, act="swiglu")  # huge capacity: no drops
+    ref = moe_dense_reference(p, x, E, k, act="swiglu")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4, rtol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_are_bounded():
+    from repro.models.moe import moe_apply, moe_init
+
+    key = jax.random.PRNGKey(4)
+    d, E, k, ff = 16, 4, 2, 32
+    p = moe_init(key, d, E, ff, n_shared=0, act="swiglu")
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 64, d))
+    y, _ = moe_apply(p, x, E, k, cf=0.5, act="swiglu")  # forced drops
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_full_config_param_counts():
+    """Full (non-reduced) configs must hit their published scale (eval_shape,
+    no allocation)."""
+    from repro.models import count_params
+
+    expected = {
+        "dbrx-132b": (125e9, 140e9),
+        "qwen2-vl-72b": (65e9, 80e9),
+        "qwen1.5-32b": (30e9, 36e9),  # assignment spec kv=40 (MHA) > real model's GQA
+        "qwen2-moe-a2.7b": (12e9, 16e9),
+        "qwen2-0.5b": (0.4e9, 0.65e9),
+        "stablelm-3b": (2.5e9, 3.8e9),
+        "gemma-2b": (2.0e9, 3.2e9),
+        "zamba2-2.7b": (2.2e9, 3.5e9),
+        "whisper-base": (0.05e9, 0.12e9),
+        "rwkv6-3b": (2.5e9, 3.5e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = count_params(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9},{hi/1e9}]"

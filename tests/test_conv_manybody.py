@@ -1,0 +1,145 @@
+"""Equivariant convolution (general + eSCN-sparsity) and many-body products."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import so3
+from repro.core.cg import gaunt_einsum_reference
+from repro.core.conv import (
+    EquivariantConv,
+    align_rotation,
+    apply_wigner_blocks,
+    wigner_blocks_from_rotmat,
+)
+from repro.core.irreps import num_coeffs
+from repro.core.manybody import manybody_gaunt_product, manybody_selfmix
+from repro.core.so3 import real_sph_harm, real_sph_harm_jax
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype=jnp.float32)
+
+
+def _rand_dirs(n, seed=0):
+    v = np.random.default_rng(seed).normal(size=(n, 3))
+    return jnp.asarray(v / np.linalg.norm(v, axis=-1, keepdims=True), dtype=jnp.float32)
+
+
+def test_align_rotation():
+    r = _rand_dirs(32, 1)
+    R = align_rotation(r)
+    z = jnp.einsum("...ij,...j->...i", R, r)
+    np.testing.assert_allclose(np.asarray(z), np.tile([0, 0, 1.0], (32, 1)), atol=1e-5)
+    det = np.linalg.det(np.asarray(R))
+    np.testing.assert_allclose(det, 1.0, atol=1e-5)
+
+
+def test_wigner_blocks_from_rotmat_vs_exact():
+    rng = np.random.default_rng(2)
+    a, b, g = 0.4, 1.0, -0.8
+    R = so3.rotation_matrix_zyz(a, b, g).astype(np.float32)
+    Ds = wigner_blocks_from_rotmat(4, jnp.asarray(R))
+    for l in range(5):
+        ref = so3.wigner_D_real(l, a, b, g)
+        np.testing.assert_allclose(np.asarray(Ds[l]), ref, atol=1e-4)
+
+
+def test_apply_wigner_matches_sh_rotation():
+    r = _rand_dirs(8, 3)
+    R = align_rotation(r)
+    Ds = wigner_blocks_from_rotmat(3, R)
+    S = real_sph_harm_jax(3, r)
+    S_rot = apply_wigner_blocks(Ds, S)
+    ref = real_sph_harm_jax(3, jnp.einsum("...ij,...j->...i", R, r))
+    np.testing.assert_allclose(np.asarray(S_rot), np.asarray(ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("L1,L2,Lout", [(2, 2, 4), (3, 2, 3), (2, 3, 5), (1, 4, 5)])
+def test_escn_conv_matches_general_and_oracle(L1, L2, Lout):
+    x = _rand((16, num_coeffs(L1)), 4)
+    r = _rand_dirs(16, 5)
+    general = EquivariantConv(L1, L2, Lout, method="general")
+    escn = EquivariantConv(L1, L2, Lout, method="escn")
+    filt = real_sph_harm_jax(L2, r).astype(jnp.float32)
+    ref = gaunt_einsum_reference(x, filt, L1, L2, Lout)
+    np.testing.assert_allclose(np.asarray(general(x, r)), np.asarray(ref), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(escn(x, r)), np.asarray(ref), atol=3e-4)
+
+
+def test_escn_conv_weights():
+    L1, L2, Lout = 2, 2, 3
+    x = _rand((6, num_coeffs(L1)), 6)
+    r = _rand_dirs(6, 7)
+    w1 = _rand((6, L1 + 1), 8)
+    w2 = _rand((6, L2 + 1), 9)
+    w3 = _rand((6, Lout + 1), 10)
+    escn = EquivariantConv(L1, L2, Lout, method="escn")
+    general = EquivariantConv(L1, L2, Lout, method="general")
+    np.testing.assert_allclose(
+        np.asarray(escn(x, r, w1, w2, w3)),
+        np.asarray(general(x, r, w1, w2, w3)),
+        atol=3e-4,
+    )
+
+
+def test_conv_equivariance():
+    """Rotating inputs (feature + geometry) rotates the output."""
+    L1, L2 = 2, 2
+    Lout = 3
+    conv = EquivariantConv(L1, L2, Lout, method="escn")
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=num_coeffs(L1)).astype(np.float32)
+    r = rng.normal(size=3)
+    r /= np.linalg.norm(r)
+    a, b, g = 0.3, 0.9, -1.2
+    Rg = so3.rotation_matrix_zyz(a, b, g)
+    D1 = so3.wigner_D_real_packed(L1, a, b, g).astype(np.float32)
+    D3 = so3.wigner_D_real_packed(Lout, a, b, g).astype(np.float32)
+    out = np.asarray(conv(jnp.asarray(x)[None], jnp.asarray(r, dtype=jnp.float32)[None])[0])
+    out_rot = np.asarray(
+        conv(jnp.asarray(D1 @ x)[None], jnp.asarray(Rg @ r, dtype=jnp.float32)[None])[0]
+    )
+    np.testing.assert_allclose(out_rot, D3 @ out, atol=5e-4)
+
+
+def test_manybody_matches_fold():
+    L = 2
+    nu = 3
+    xs = [_rand((4, num_coeffs(L)), 20 + i) for i in range(nu)]
+    got = manybody_gaunt_product(xs, [L] * nu)
+    acc = gaunt_einsum_reference(xs[0], xs[1], L, L)
+    acc = gaunt_einsum_reference(acc, xs[2], 2 * L, L)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc), atol=1e-3)
+
+
+def test_manybody_four_operands_batched_tree():
+    L = 1
+    xs = [_rand((3, num_coeffs(L)), 30 + i) for i in range(4)]
+    got = manybody_gaunt_product(xs, [L] * 4)
+    acc = gaunt_einsum_reference(xs[0], xs[1], L, L)
+    acc = gaunt_einsum_reference(acc, xs[2], 2 * L, L)
+    acc = gaunt_einsum_reference(acc, xs[3], 3 * L, L)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc), atol=1e-3)
+
+
+def test_manybody_truncated_output():
+    L, nu, Lout = 2, 3, 2
+    x = _rand((5, num_coeffs(L)), 40)
+    got = manybody_selfmix(x, L, nu, Lout=Lout)
+    acc = gaunt_einsum_reference(x, x, L, L)
+    acc = gaunt_einsum_reference(acc, x, 2 * L, L, Lout)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc), atol=1e-3)
+    assert got.shape == (5, num_coeffs(Lout))
+
+
+def test_manybody_weights():
+    L, nu = 2, 2
+    x = _rand((3, num_coeffs(L)), 41)
+    w = [_rand((3, L + 1), 42 + i) for i in range(nu)]
+    got = manybody_gaunt_product([x, x], [L, L], weights=w)
+    from repro.core.gaunt import expand_degree_weights
+
+    ref = gaunt_einsum_reference(
+        x * expand_degree_weights(w[0], L), x * expand_degree_weights(w[1], L), L, L
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-3)

@@ -1,0 +1,175 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracles,
+swept over shapes and dtypes as required."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cg import gaunt_einsum_reference
+from repro.core.irreps import num_coeffs
+from repro.kernels import ref
+from repro.kernels.gaunt_fused import gaunt_fused_matrices, gaunt_fused_pallas
+from repro.kernels.mamba2 import mamba2_ssd_chunked, mamba2_ssd_pallas
+from repro.kernels.wkv6 import wkv6_chunked, wkv6_pallas
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- gaunt fused
+
+
+@pytest.mark.parametrize("L1,L2,Lout", [(1, 1, 2), (2, 2, 4), (3, 2, 3), (4, 4, 8)])
+@pytest.mark.parametrize("B", [1, 7, 300])
+def test_gaunt_fused_vs_oracle(L1, L2, Lout, B):
+    x1 = _rand((B, num_coeffs(L1)), 1)
+    x2 = _rand((B, num_coeffs(L2)), 2)
+    got = gaunt_fused_pallas(x1, x2, L1, L2, Lout, block_b=128, interpret=True)
+    want = gaunt_einsum_reference(x1, x2, L1, L2, Lout)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gaunt_fused_dtypes(dtype):
+    L1 = L2 = 2
+    x1 = _rand((64, num_coeffs(L1)), 3, dtype)
+    x2 = _rand((64, num_coeffs(L2)), 4, dtype)
+    got = gaunt_fused_pallas(x1, x2, L1, L2, 4, block_b=64, interpret=True)
+    want = gaunt_einsum_reference(x1.astype(jnp.float32), x2.astype(jnp.float32), L1, L2, 4)
+    tol = 3e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32), np.asarray(want), atol=tol)
+
+
+def test_gaunt_fused_matches_unfused_ref():
+    L1, L2, Lout = 3, 3, 6
+    T1, T2, P = (jnp.asarray(a) for a in gaunt_fused_matrices(L1, L2, Lout))
+    x1 = _rand((32, num_coeffs(L1)), 5)
+    x2 = _rand((32, num_coeffs(L2)), 6)
+    got = gaunt_fused_pallas(x1, x2, L1, L2, Lout, block_b=32, interpret=True)
+    want = ref.gaunt_fused_ref(x1, x2, T1, T2, P)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_gaunt_fused_leading_dims():
+    L1 = L2 = 2
+    x1 = _rand((2, 3, num_coeffs(L1)), 7)
+    x2 = _rand((2, 3, num_coeffs(L2)), 8)
+    out = gaunt_fused_pallas(x1, x2, L1, L2, None, block_b=8, interpret=True)
+    assert out.shape == (2, 3, num_coeffs(4))
+
+
+# ---------------------------------------------------------------- wkv6
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 16), (48, 16)])
+@pytest.mark.parametrize("K", [8, 16])
+def test_wkv6_chunked_vs_naive(T, chunk, K):
+    B, H, V = 2, 3, K
+    rng = np.random.default_rng(10)
+    r = jnp.asarray(rng.normal(size=(B, T, H, K)) * 0.5, dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, H, K)) * 0.5, dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, H, V)), dtype=jnp.float32)
+    w = jnp.asarray(rng.uniform(0.2, 0.999, size=(B, T, H, K)), dtype=jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)) * 0.3, dtype=jnp.float32)
+    want = ref.wkv6_ref(r, k, v, w, u)
+    got = wkv6_chunked(r, k, v, w, u, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_pallas_vs_naive():
+    B, T, H, K = 2, 32, 2, 8
+    rng = np.random.default_rng(11)
+    r = jnp.asarray(rng.normal(size=(B, T, H, K)) * 0.5, dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, H, K)) * 0.5, dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, H, K)), dtype=jnp.float32)
+    w = jnp.asarray(rng.uniform(0.2, 0.999, size=(B, T, H, K)), dtype=jnp.float32)
+    u = jnp.asarray(rng.normal(size=(H, K)) * 0.3, dtype=jnp.float32)
+    want = ref.wkv6_ref(r, k, v, w, u)
+    got = wkv6_pallas(r, k, v, w, u, chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_extreme_decay_stable():
+    """Very strong decay must not overflow/NaN (stability of masked exps)."""
+    B, T, H, K = 1, 64, 1, 8
+    rng = np.random.default_rng(12)
+    r = jnp.asarray(rng.normal(size=(B, T, H, K)), dtype=jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, T, H, K)), dtype=jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, T, H, K)), dtype=jnp.float32)
+    w = jnp.full((B, T, H, K), 1e-6, dtype=jnp.float32)  # near-total forget
+    u = jnp.zeros((H, K), dtype=jnp.float32)
+    got = wkv6_chunked(r, k, v, w, u, chunk=64)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    want = ref.wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# ---------------------------------------------------------------- mamba2 ssd
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 32)])
+def test_mamba2_chunked_vs_naive(T, chunk):
+    Bt, H, P, G, N = 2, 4, 8, 2, 16
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(Bt, T, H, P)), dtype=jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(Bt, T, H)), dtype=jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)), dtype=jnp.float32)
+    B = jnp.asarray(rng.normal(size=(Bt, T, G, N)), dtype=jnp.float32)
+    C = jnp.asarray(rng.normal(size=(Bt, T, G, N)), dtype=jnp.float32)
+    D = jnp.asarray(rng.normal(size=(H,)), dtype=jnp.float32)
+    want = ref.mamba2_ssd_ref(x, dt, A, B, C, D)
+    got = mamba2_ssd_chunked(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+def test_mamba2_pallas_vs_naive():
+    Bt, T, H, P, G, N = 1, 32, 2, 8, 1, 8
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.normal(size=(Bt, T, H, P)), dtype=jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(Bt, T, H)), dtype=jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, size=(H,)), dtype=jnp.float32)
+    B = jnp.asarray(rng.normal(size=(Bt, T, G, N)), dtype=jnp.float32)
+    C = jnp.asarray(rng.normal(size=(Bt, T, G, N)), dtype=jnp.float32)
+    D = jnp.asarray(rng.normal(size=(H,)), dtype=jnp.float32)
+    want = ref.mamba2_ssd_ref(x, dt, A, B, C, D)
+    got = mamba2_ssd_pallas(x, dt, A, B, C, D, chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+# ------------------------------------------------------- channel-mix gaunt
+
+
+def test_gaunt_channel_mix_matches_pairwise_oracle():
+    """Fused-domain channel mixing == explicit sum over channel-pair TPs."""
+    from repro.kernels.ops import gaunt_tp_channel_mix
+
+    L1, L2, Lout, C1, C2, E = 2, 2, 3, 3, 2, 4
+    rng = np.random.default_rng(40)
+    x1 = jnp.asarray(rng.normal(size=(5, C1, num_coeffs(L1))), jnp.float32)
+    x2 = jnp.asarray(rng.normal(size=(5, C2, num_coeffs(L2))), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(C1, C2, E)), jnp.float32)
+    got = gaunt_tp_channel_mix(x1, x2, w, L1, L2, Lout)
+    ref = jnp.zeros((5, E, num_coeffs(Lout)))
+    for c1 in range(C1):
+        for c2 in range(C2):
+            tp = gaunt_einsum_reference(x1[:, c1], x2[:, c2], L1, L2, Lout)
+            ref = ref + w[c1, c2][None, :, None] * tp[:, None, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-4,
+                               rtol=3e-4)
+
+
+def test_gaunt_channel_mix_equivariance():
+    from repro.core import so3
+    from repro.kernels.ops import gaunt_tp_channel_mix
+
+    L, C, E = 2, 3, 3
+    rng = np.random.default_rng(41)
+    x = jnp.asarray(rng.normal(size=(C, num_coeffs(L))), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(C, C, E)), jnp.float32)
+    D_in = jnp.asarray(so3.wigner_D_real_packed(L, 0.7, 0.9, -1.1), jnp.float32)
+    D_out = jnp.asarray(so3.wigner_D_real_packed(2 * L, 0.7, 0.9, -1.1), jnp.float32)
+    y = gaunt_tp_channel_mix(x[None], x[None], w, L, L)[0]
+    y_rot = gaunt_tp_channel_mix((x @ D_in.T)[None], (x @ D_in.T)[None], w, L, L)[0]
+    np.testing.assert_allclose(np.asarray(y @ D_out.T), np.asarray(y_rot),
+                               atol=3e-4, rtol=3e-4)

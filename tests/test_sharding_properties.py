@@ -1,0 +1,110 @@
+"""Property tests (hypothesis) for the distribution layer invariants."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import (
+    batch_shardings,
+    cache_shardings,
+    choose_pspec,
+    param_pspec,
+)
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+MESH = _mesh((1, 1))  # 1 CPU device; rules must still produce VALID specs
+
+
+@given(
+    st.lists(st.sampled_from([1, 2, 3, 8, 16, 60, 64, 128, 896, 6144]),
+             min_size=1, max_size=4),
+    st.lists(st.lists(st.sampled_from(["data", "model", "bogus"]), max_size=2),
+             max_size=4),
+)
+@settings(max_examples=50, deadline=None)
+def test_choose_pspec_always_valid(shape, prefs):
+    """Any shape x any preference list -> a spec whose sharded dims divide."""
+    mesh = MESH
+    spec = choose_pspec(tuple(shape), mesh, prefs)
+    assert len(spec) == len(shape)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = [a for a in spec if a is not None]
+    assert len(used) == len(set(used))  # no axis reuse
+    for dim, ax in zip(shape, spec):
+        if ax is not None:
+            assert dim % sizes[ax] == 0
+
+
+@given(
+    st.sampled_from([
+        "layers/attn/wq/w", "layers/mlp/w_down/w", "layers/moe/we_gate",
+        "embed/embedding", "unembed/w", "mamba/m/in_proj/w", "layers/tm/wo/w",
+        "cat_proj/w", "layers/ln1/scale", "shared/attn/wk/b",
+    ]),
+    st.lists(st.sampled_from([1, 2, 16, 64, 128, 896, 2048, 50304]),
+             min_size=1, max_size=4),
+    st.sampled_from(["default", "dp_heavy", "moe_expert_tp"]),
+)
+@settings(max_examples=80, deadline=None)
+def test_param_pspec_valid_for_any_leaf(key, shape, layout):
+    spec = param_pspec(key, tuple(shape), MESH, layout)
+    assert len(spec) == len(shape)
+    sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([sizes[a] for a in axes]))
+        assert dim % n == 0, (key, shape, spec)
+
+
+@given(st.integers(1, 8), st.integers(1, 1024))
+@settings(max_examples=30, deadline=None)
+def test_batch_shardings_never_invalid(b, s):
+    tree = {"tokens": jax.ShapeDtypeStruct((b, s), np.int32)}
+    sh = batch_shardings(tree, MESH)
+    # on a 1-device mesh everything is trivially valid; the contract we check
+    # is structural: same tree, NamedSharding leaves
+    assert set(sh) == {"tokens"}
+
+
+@given(
+    st.integers(1, 4),    # layers
+    st.sampled_from([1, 2, 8, 128]),   # batch
+    st.sampled_from([64, 4096, 32768]),  # seq
+    st.sampled_from([1, 2, 8, 40]),   # kv heads
+)
+@settings(max_examples=30, deadline=None)
+def test_cache_shardings_structural(L, B, S, KV):
+    tree = {"k": jax.ShapeDtypeStruct((L, B, S, KV, 64), np.float16)}
+    sh = cache_shardings(tree, MESH)
+    spec = sh["k"].spec
+    assert len(spec) == 5
+    # never shards the layer or head-dim axes
+    assert spec[0] is None and spec[4] is None
+
+
+def test_int8_ef_compression_roundtrip_unbiased():
+    """Error-feedback compression: mean over steps converges to true mean."""
+    import jax.numpy as jnp
+
+    from repro.distributed.collectives import _quant
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64,)) * 3.0, jnp.float32)
+    e = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    steps = 50
+    for _ in range(steps):
+        q, scale = _quant(x + e)
+        deq = q.astype(jnp.float32) * scale
+        e = (x + e) - deq
+        acc = acc + deq
+    np.testing.assert_allclose(np.asarray(acc / steps), np.asarray(x),
+                               atol=0.05, rtol=0.02)

@@ -1,0 +1,203 @@
+"""Unit + property tests for the exact SO(3) machinery."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import so3
+from repro.core.irreps import idx, num_coeffs
+
+
+def test_wigner_3j_vs_sympy():
+    from sympy.physics.wigner import wigner_3j as sp3j
+
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        l1, l2 = rng.integers(0, 5, size=2)
+        l3 = rng.integers(abs(l1 - l2), l1 + l2 + 1)
+        m1 = rng.integers(-l1, l1 + 1)
+        m2 = rng.integers(-l2, l2 + 1)
+        m3 = -(m1 + m2)
+        if abs(m3) > l3:
+            continue
+        ref = float(sp3j(int(l1), int(l2), int(l3), int(m1), int(m2), int(m3)))
+        got = so3.wigner_3j(int(l1), int(l2), int(l3), int(m1), int(m2), int(m3))
+        assert got == pytest.approx(ref, abs=1e-12)
+
+
+def test_gaunt_complex_vs_sympy():
+    from sympy.physics.wigner import gaunt as spg
+
+    rng = np.random.default_rng(1)
+    for _ in range(25):
+        l1, l2, l3 = rng.integers(0, 4, size=3)
+        m1 = rng.integers(-l1, l1 + 1)
+        m2 = rng.integers(-l2, l2 + 1)
+        m3 = -(m1 + m2)
+        if abs(m3) > l3:
+            continue
+        ref = float(spg(int(l1), int(l2), int(l3), int(m1), int(m2), int(m3)))
+        got = so3.gaunt_complex(int(l1), int(m1), int(l2), int(m2), int(l3), int(m3))
+        assert got == pytest.approx(ref, abs=1e-12)
+
+
+@given(st.integers(0, 4), st.integers(0, 4))
+@settings(max_examples=15, deadline=None)
+def test_cg_orthogonality(l1, l2):
+    """sum_{m1,m2} C^{l,m} C^{l',m'} = delta_ll' delta_mm'."""
+    for l3 in range(abs(l1 - l2), l1 + l2 + 1):
+        for l3p in range(abs(l1 - l2), l1 + l2 + 1):
+            for m3 in range(-l3, l3 + 1):
+                for m3p in range(-l3p, l3p + 1):
+                    s = 0.0
+                    for m1 in range(-l1, l1 + 1):
+                        m2, m2p = m3 - m1, m3p - m1
+                        if abs(m2) <= l2 and abs(m2p) <= l2 and m2 == m2p:
+                            s += so3.clebsch_gordan(l1, m1, l2, m2, l3, m3) * so3.clebsch_gordan(
+                                l1, m1, l2, m2p, l3p, m3p
+                            )
+                    want = 1.0 if (l3 == l3p and m3 == m3p) else 0.0
+                    assert s == pytest.approx(want, abs=1e-10)
+
+
+def test_real_sh_orthonormal():
+    L = 6
+    xyz, w = so3.sphere_quadrature(2 * L)
+    S = so3.real_sph_harm(L, xyz)  # [N, (L+1)^2]
+    gram = np.einsum("n,ni,nj->ij", w, S, S)
+    np.testing.assert_allclose(gram, np.eye(num_coeffs(L)), atol=1e-10)
+
+
+def test_real_sh_vs_scipy():
+    from scipy.special import sph_harm_y
+
+    rng = np.random.default_rng(3)
+    xyz = rng.normal(size=(10, 3))
+    xyz /= np.linalg.norm(xyz, axis=-1, keepdims=True)
+    theta = np.arccos(xyz[:, 2])
+    psi = np.arctan2(xyz[:, 1], xyz[:, 0])
+    S = so3.real_sph_harm(4, xyz)
+    for l in range(5):
+        for m in range(0, l + 1):
+            Y = sph_harm_y(l, m, theta, psi)  # includes CS phase
+            if m == 0:
+                ref = Y.real
+                np.testing.assert_allclose(S[:, idx(l, 0)], ref, atol=1e-12)
+            else:
+                ref_c = math.sqrt(2) * (-1) ** m * Y.real
+                ref_s = math.sqrt(2) * (-1) ** m * Y.imag
+                np.testing.assert_allclose(S[:, idx(l, m)], ref_c, atol=1e-12)
+                np.testing.assert_allclose(S[:, idx(l, -m)], ref_s, atol=1e-12)
+
+
+def test_real_sh_jax_matches_numpy():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(4)
+    xyz = rng.normal(size=(17, 3))
+    xyz /= np.linalg.norm(xyz, axis=-1, keepdims=True)
+    ref = so3.real_sph_harm(5, xyz)
+    got = np.asarray(so3.real_sph_harm_jax(5, jnp.asarray(xyz)))
+    np.testing.assert_allclose(got, ref, atol=1e-5, rtol=1e-5)
+
+
+def test_real_gaunt_tensor_vs_quadrature():
+    L1, L2, L3 = 2, 2, 3
+    G = so3.real_gaunt_tensor(L1, L2, L3)
+    xyz, w = so3.sphere_quadrature(L1 + L2 + L3 + 1)
+    S1 = so3.real_sph_harm(L1, xyz)
+    S2 = so3.real_sph_harm(L2, xyz)
+    S3 = so3.real_sph_harm(L3, xyz)
+    ref = np.einsum("n,ni,nj,nk->ijk", w, S1, S2, S3)
+    np.testing.assert_allclose(G, ref, atol=1e-10)
+
+
+def test_real_gaunt_proportional_to_cg():
+    """Eqn (3) of the paper: real-Gaunt block is a constant times the real CG
+    block for each (l1,l2,l3)."""
+    for (l1, l2, l3) in [(1, 1, 2), (2, 1, 1), (2, 2, 2), (3, 2, 1)]:
+        if (l1 + l2 + l3) % 2:
+            continue
+        G = so3.real_gaunt_tensor(l1, l2, l3)[
+            l1 * l1 : (l1 + 1) ** 2, l2 * l2 : (l2 + 1) ** 2, l3 * l3 : (l3 + 1) ** 2
+        ]
+        C = so3.real_clebsch_gordan_block(l1, l2, l3)
+        denom = np.abs(C).max()
+        mask = np.abs(C) > 1e-9 * denom
+        ratios = G[mask] / C[mask]
+        assert np.abs(ratios - ratios.flat[0]).max() < 1e-9
+
+
+def test_real_cg_block_orthogonality():
+    for (l1, l2, l3) in [(1, 1, 0), (1, 1, 1), (1, 1, 2), (2, 2, 1), (2, 1, 3)]:
+        C = so3.real_clebsch_gordan_block(l1, l2, l3)
+        gram = np.einsum("ijk,ijl->kl", C, C)
+        np.testing.assert_allclose(gram, np.eye(2 * l3 + 1), atol=1e-10)
+
+
+@given(
+    st.floats(-math.pi, math.pi),
+    st.floats(0.01, math.pi - 0.01),
+    st.floats(-math.pi, math.pi),
+)
+@settings(max_examples=20, deadline=None)
+def test_wigner_D_convention(alpha, beta, gamma):
+    """S^l(R r) == D^l_real(R) S^l(r) — the convention the whole stack uses."""
+    rng = np.random.default_rng(int(abs(alpha * 1e4)) % 100)
+    r = rng.normal(size=3)
+    r /= np.linalg.norm(r)
+    R = so3.rotation_matrix_zyz(alpha, beta, gamma)
+    for l in range(4):
+        S_r = so3.real_sph_harm(l, r)[l * l :]
+        S_Rr = so3.real_sph_harm(l, R @ r)[l * l :]
+        D = so3.wigner_D_real(l, alpha, beta, gamma)
+        np.testing.assert_allclose(S_Rr, D @ S_r, atol=1e-9)
+
+
+def test_wigner_D_is_orthogonal():
+    D = so3.wigner_D_real(3, 0.3, 1.1, -0.7)
+    np.testing.assert_allclose(D @ D.T, np.eye(7), atol=1e-10)
+
+
+def test_euler_roundtrip():
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        a, b, g = rng.uniform(-math.pi, math.pi), rng.uniform(0.05, math.pi - 0.05), rng.uniform(
+            -math.pi, math.pi
+        )
+        R = so3.rotation_matrix_zyz(a, b, g)
+        a2, b2, g2 = so3.euler_from_matrix_zyz(R)
+        np.testing.assert_allclose(so3.rotation_matrix_zyz(a2, b2, g2), R, atol=1e-10)
+
+
+def test_align_to_z():
+    rng = np.random.default_rng(8)
+    for _ in range(20):
+        r = rng.normal(size=3)
+        r /= np.linalg.norm(r)
+        a, b, g = so3.align_to_z_angles(r)
+        R = so3.rotation_matrix_zyz(a, b, g)
+        np.testing.assert_allclose(R @ r, [0, 0, 1], atol=1e-10)
+        # SH filter sparsity at the zenith: only m == 0 survives
+        S = so3.real_sph_harm(4, R @ r)
+        for l in range(5):
+            for m in range(-l, l + 1):
+                v = S[idx(l, m)]
+                if m == 0:
+                    assert abs(v - math.sqrt((2 * l + 1) / (4 * math.pi))) < 1e-9
+                else:
+                    assert abs(v) < 1e-9
+
+
+def test_parity():
+    """S^l(-r) = (-1)^l S^l(r)."""
+    rng = np.random.default_rng(9)
+    r = rng.normal(size=3)
+    r /= np.linalg.norm(r)
+    L = 5
+    Sp = so3.real_sph_harm(L, r)
+    Sm = so3.real_sph_harm(L, -r)
+    for l in range(L + 1):
+        sl = slice(l * l, (l + 1) ** 2)
+        np.testing.assert_allclose(Sm[sl], (-1) ** l * Sp[sl], atol=1e-12)
