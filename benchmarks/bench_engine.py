@@ -1,0 +1,60 @@
+"""Engine autotune sweep: what does the unified Gaunt engine pick, and how
+fast is the pick, per (kind, L, batch)?
+
+With ``backend='auto'`` the engine's measured autotuner chooses among all
+eligible backends (the heuristic cost-model pick is reported alongside, so
+divergence between model and measurement is visible in the record stream);
+any other value pins that backend for the whole sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core.irreps import num_coeffs
+
+from .common import record, time_fn
+
+
+def _rand(shape, seed):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), jnp.float32)
+
+
+def run(L_list=(1, 2, 3, 4, 6), B_list=(64, 1024), backend: str = "auto", csv=True):
+    records = []
+    eng = engine.get_engine()
+    for L in L_list:
+        for B in B_list:
+            x1 = _rand((B, num_coeffs(L)), 0)
+            x2 = _rand((B, num_coeffs(L)), 1)
+            kw = dict(batch_hint=B, requires_grad=False)
+            if backend == "auto":
+                p = eng.plan(L, L, L, tune="measure", **kw)
+            else:
+                p = eng.plan(L, L, L, backend=backend, **kw)
+            heuristic = eng.select(p.key)
+            t = time_fn(jax.jit(lambda a, b: p.apply(a, b)), x1, x2)
+            record(records, f"engine_pairwise_L{L}_B{B}", t, echo=csv,
+                   backend=p.backend, heuristic=heuristic)
+        # conv_filter: the message-passing hot path
+        B = B_list[-1]
+        x = _rand((B, num_coeffs(L)), 2)
+        v = np.random.default_rng(3).normal(size=(B, 3))
+        r = jnp.asarray(v / np.linalg.norm(v, axis=-1, keepdims=True), jnp.float32)
+        kw = dict(kind="conv_filter", batch_hint=B, requires_grad=False)
+        if backend == "auto":
+            p = eng.plan(L, L, L, tune="measure", **kw)
+        else:
+            be = backend if backend in engine.available_backends("conv_filter", requires_grad=False) else "escn_aligned"
+            p = eng.plan(L, L, L, backend=be, **kw)
+        heuristic = eng.select(p.key)
+        t = time_fn(jax.jit(lambda a, b: p.apply(a, b)), x, r)
+        record(records, f"engine_conv_L{L}_B{B}", t, echo=csv,
+               backend=p.backend, heuristic=heuristic)
+    return records
+
+
+if __name__ == "__main__":
+    run()

@@ -12,30 +12,29 @@ import numpy as np
 from repro.core.irreps import num_coeffs
 from repro.models.equivariant import SelfmixLayer
 
-from .common import time_fn
+from .common import record, time_fn
 
 NODES = 128
 CHANNELS = 16
 
 
 def run(L_list=(2, 4, 6), csv=True):
-    rows = []
+    records = []
     for L in L_list:
         x = jnp.asarray(
             np.random.default_rng(0).normal(size=(NODES, CHANNELS, num_coeffs(L))),
             jnp.float32)
         out = []
-        for impl in ("cg", "gaunt", "gaunt_fused"):
+        for impl in ("cg", "gaunt", "gaunt_fused", "gaunt_auto"):
             layer = SelfmixLayer(L=L, channels=CHANNELS, tp_impl=impl)
             params = layer.init(jax.random.PRNGKey(0))
             t = time_fn(jax.jit(lambda p, a, layer=layer: layer(p, a)), params, x)
             out.append((impl, t))
         base = out[0][1]
-        rows.append((L, out))
-        if csv:
-            for impl, t in out:
-                print(f"table1_selfmix_L{L}_{impl},{t:.1f},speedup={base/t:.2f}")
-    return rows
+        for impl, t in out:
+            record(records, f"table1_selfmix_L{L}_{impl}", t, echo=csv,
+                   speedup=round(base / t, 2))
+    return records
 
 
 if __name__ == "__main__":

@@ -13,13 +13,13 @@ from repro.core.conv import EquivariantConv
 from repro.core.irreps import num_coeffs
 from repro.core.so3 import real_sph_harm_jax
 
-from .common import time_fn
+from .common import record, time_fn
 
 EDGES = 256
 
 
-def run(L_list=(1, 2, 3, 4, 5, 6), csv=True):
-    rows = []
+def run(L_list=(1, 2, 3, 4, 5, 6), backend: str = "auto", csv=True):
+    records = []
     for L in L_list:
         rng = np.random.default_rng(0)
         x = jnp.asarray(rng.normal(size=(EDGES, num_coeffs(L))), jnp.float32)
@@ -38,12 +38,21 @@ def run(L_list=(1, 2, 3, 4, 5, 6), csv=True):
         escn = EquivariantConv(L, L, L, method="escn")
         t_escn = time_fn(jax.jit(escn.__call__), x, r)
 
-        rows.append((L, t_cg, t_gen, t_escn))
-        if csv:
-            print(f"fig1b_equiv_conv_L{L}_cg,{t_cg:.1f},speedup=1.00")
-            print(f"fig1b_equiv_conv_L{L}_gaunt_general,{t_gen:.1f},speedup={t_cg/t_gen:.2f}")
-            print(f"fig1b_equiv_conv_L{L}_gaunt_escn,{t_escn:.1f},speedup={t_cg/t_escn:.2f}")
-    return rows
+        # the engine's conv_filter pick for this size
+        auto_kw = dict(method="auto", batch_hint=EDGES) if backend == "auto" \
+            else dict(backend=backend)
+        auto = EquivariantConv(L, L, L, tune="measure" if backend == "auto" else "heuristic",
+                               **auto_kw)
+        t_auto = time_fn(jax.jit(auto.__call__), x, r)
+
+        record(records, f"fig1b_equiv_conv_L{L}_cg", t_cg, echo=csv, speedup=1.00)
+        record(records, f"fig1b_equiv_conv_L{L}_gaunt_general", t_gen, echo=csv,
+               speedup=round(t_cg / t_gen, 2), backend=gen.backend)
+        record(records, f"fig1b_equiv_conv_L{L}_gaunt_escn", t_escn, echo=csv,
+               speedup=round(t_cg / t_escn, 2), backend="escn_aligned")
+        record(records, f"fig1b_equiv_conv_L{L}_gaunt_engine", t_auto, echo=csv,
+               speedup=round(t_cg / t_auto, 2), backend=auto.backend)
+    return records
 
 
 if __name__ == "__main__":

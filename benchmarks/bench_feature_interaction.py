@@ -14,19 +14,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import engine
 from repro.core.cg import cg_full_tensor_product
 from repro.core.gaunt import GauntTensorProduct
 from repro.core.irreps import num_coeffs
 from repro.kernels.ops import gaunt_tp_fused_xla
 
-from .common import time_fn
+from .common import record, time_fn
 
 ROWS = 4
 CHANNELS = 128
 
 
-def run(L_list=(1, 2, 3, 4, 5, 6, 8), csv=True):
-    rows = []
+def run(L_list=(1, 2, 3, 4, 5, 6, 8), backend: str = "auto", csv=True):
+    records = []
     for L in L_list:
         x1 = jnp.asarray(np.random.default_rng(0).normal(size=(ROWS, CHANNELS, num_coeffs(L))),
                          jnp.float32)
@@ -44,13 +45,22 @@ def run(L_list=(1, 2, 3, 4, 5, 6, 8), csv=True):
 
         t_fused = time_fn(lambda a, b: gaunt_tp_fused_xla(a, b, L, L, L), x1, x2)
 
-        rows.append((L, t_cg, t_fft, t_dir, t_fused))
-        if csv:
-            print(f"fig1a_feature_interaction_L{L}_cg,{t_cg:.1f},speedup=1.00")
-            print(f"fig1a_feature_interaction_L{L}_gaunt_fft,{t_fft:.1f},speedup={t_cg/t_fft:.2f}")
-            print(f"fig1a_feature_interaction_L{L}_gaunt_direct,{t_dir:.1f},speedup={t_cg/t_dir:.2f}")
-            print(f"fig1a_feature_interaction_L{L}_gaunt_fused,{t_fused:.1f},speedup={t_cg/t_fused:.2f}")
-    return rows
+        # the engine's pick for this size (measured autotune unless pinned)
+        p = engine.plan(L, L, L, batch_hint=ROWS * CHANNELS, requires_grad=False,
+                        **({"tune": "measure"} if backend == "auto"
+                           else {"backend": backend}))
+        t_auto = time_fn(jax.jit(lambda a, b: p.apply(a, b)), x1, x2)
+
+        record(records, f"fig1a_feature_interaction_L{L}_cg", t_cg, echo=csv, speedup=1.00)
+        record(records, f"fig1a_feature_interaction_L{L}_gaunt_fft", t_fft, echo=csv,
+               speedup=round(t_cg / t_fft, 2), backend="fft")
+        record(records, f"fig1a_feature_interaction_L{L}_gaunt_direct", t_dir, echo=csv,
+               speedup=round(t_cg / t_dir, 2), backend="direct")
+        record(records, f"fig1a_feature_interaction_L{L}_gaunt_fused", t_fused, echo=csv,
+               speedup=round(t_cg / t_fused, 2), backend="fused_xla")
+        record(records, f"fig1a_feature_interaction_L{L}_gaunt_engine", t_auto, echo=csv,
+               speedup=round(t_cg / t_auto, 2), backend=p.backend)
+    return records
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@ from repro.core.cg import cg_full_tensor_product
 from repro.core.irreps import num_coeffs
 from repro.core.manybody import manybody_selfmix
 
-from .common import time_fn
+from .common import record, time_fn
 
 ROWS = 64
 
@@ -25,28 +25,42 @@ def _cg_fold(x, L, nu, Lout):
     return acc
 
 
-def run(csv=True):
-    rows = []
+def _gaunt_fn(L: int, nu: int, backend: str):
+    """jitted nu-fold self-product + the backend name actually used.
+
+    'auto' plans outside the jit so the measured autotune really runs
+    (inside a trace it would silently fall back to the cost model)."""
+    if backend == "auto":
+        from repro.core import engine
+
+        p = engine.plan(kind="manybody", Ls=(L,) * nu, batch_hint=ROWS,
+                        tune="measure")
+        return jax.jit(lambda a: p.apply([a] * nu)), p.backend
+    return jax.jit(lambda a: manybody_selfmix(a, L, nu, backend=backend)), backend
+
+
+def run(backend: str = "auto", csv=True):
+    records = []
     # (c) vary L at nu=3
     for L in (1, 2, 3, 4):
         x = jnp.asarray(np.random.default_rng(0).normal(size=(ROWS, num_coeffs(L))), jnp.float32)
         t_cg = time_fn(jax.jit(lambda a: _cg_fold(a, L, 3, 3 * L)), x)
-        t_g = time_fn(jax.jit(lambda a: manybody_selfmix(a, L, 3)), x)
-        rows.append(("c", L, 3, t_cg, t_g))
-        if csv:
-            print(f"fig1c_manybody_L{L}_nu3_cg,{t_cg:.1f},speedup=1.00")
-            print(f"fig1c_manybody_L{L}_nu3_gaunt,{t_g:.1f},speedup={t_cg/t_g:.2f}")
+        fn, be = _gaunt_fn(L, 3, backend)
+        t_g = time_fn(fn, x)
+        record(records, f"fig1c_manybody_L{L}_nu3_cg", t_cg, echo=csv, speedup=1.00)
+        record(records, f"fig1c_manybody_L{L}_nu3_gaunt", t_g, echo=csv,
+               speedup=round(t_cg / t_g, 2), backend=be)
     # (d) vary nu at L=2
     L = 2
     x = jnp.asarray(np.random.default_rng(1).normal(size=(ROWS, num_coeffs(L))), jnp.float32)
     for nu in (2, 3, 4, 5):
         t_cg = time_fn(jax.jit(lambda a, nu=nu: _cg_fold(a, L, nu, nu * L)), x)
-        t_g = time_fn(jax.jit(lambda a, nu=nu: manybody_selfmix(a, L, nu)), x)
-        rows.append(("d", L, nu, t_cg, t_g))
-        if csv:
-            print(f"fig1d_manybody_L2_nu{nu}_cg,{t_cg:.1f},speedup=1.00")
-            print(f"fig1d_manybody_L2_nu{nu}_gaunt,{t_g:.1f},speedup={t_cg/t_g:.2f}")
-    return rows
+        fn, be = _gaunt_fn(L, nu, backend)
+        t_g = time_fn(fn, x)
+        record(records, f"fig1d_manybody_L2_nu{nu}_cg", t_cg, echo=csv, speedup=1.00)
+        record(records, f"fig1d_manybody_L2_nu{nu}_gaunt", t_g, echo=csv,
+               speedup=round(t_cg / t_g, 2), backend=be)
+    return records
 
 
 if __name__ == "__main__":

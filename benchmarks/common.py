@@ -5,7 +5,22 @@ import time
 
 import jax
 
-__all__ = ["time_fn"]
+__all__ = ["time_fn", "record"]
+
+
+def record(records: list, name: str, us: float, echo: bool = True, **extra) -> dict:
+    """Append a machine-readable benchmark record and print the CSV row.
+
+    The third CSV column is `k=v;...` of the extras (backend choice,
+    speedups, ...); the same fields land in BENCH_gaunt.json via run.py.
+    ``echo=False`` suppresses the print (the benches' csv flag).
+    """
+    rec = {"name": name, "us": round(float(us), 1), **extra}
+    records.append(rec)
+    if echo:
+        derived = ";".join(f"{k}={v}" for k, v in extra.items()) or "-"
+        print(f"{name},{us:.1f},{derived}")
+    return rec
 
 
 def time_fn(fn, *args, iters: int = 10, warmup: int = 3) -> float:

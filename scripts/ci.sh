@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + the fast benchmark sweep (BENCH_gaunt.json).
+#
+#   scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "=== tier-1 tests ==="
+python -m pytest -x -q "$@"
+
+echo "=== fast benchmarks (--backend auto -> BENCH_gaunt.json) ==="
+python -m benchmarks.run --fast --backend auto --json BENCH_gaunt.json
+
+echo "=== BENCH_gaunt.json summary ==="
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_gaunt.json"))
+recs = d["records"]
+print(f"{len(recs)} records; engine picks:")
+for r in recs:
+    if r["name"].startswith("engine_"):
+        print(f"  {r['name']:32s} {r['us']:>10.1f} us  -> {r.get('backend')}")
+EOF
+echo "CI OK"

@@ -1,6 +1,7 @@
 """The paper's primary contribution: Gaunt Tensor Products in JAX.
 
 Public API:
+    GauntEngine / plan      unified plan/dispatch layer over all backends
     GauntTensorProduct      full O(L^3) tensor product (FFT / direct / packed)
     EquivariantConv         x (x) Y(rhat) with the eSCN-sparsity fast path
     manybody_gaunt_product  nu-fold products (divide-and-conquer)
@@ -9,6 +10,13 @@ Public API:
 """
 from .cg import cg_full_tensor_product, gaunt_einsum_reference  # noqa: F401
 from .conv import EquivariantConv  # noqa: F401
+from .engine import (  # noqa: F401
+    GauntEngine,
+    GauntPlan,
+    available_backends,
+    get_engine,
+    plan,
+)
 from .gaunt import GauntTensorProduct, expand_degree_weights  # noqa: F401
 from .irreps import Irreps, num_coeffs  # noqa: F401
 from .manybody import manybody_gaunt_product, manybody_selfmix  # noqa: F401

@@ -1,0 +1,202 @@
+"""The Gaunt engine's central constant cache (see DESIGN.md §2.4).
+
+Every precomputed tensor used by any Gaunt backend lives behind exactly one
+lru-cached builder in this module: SH<->Fourier conversion tensors (dense and
+packed), packed-layout gather maps, the eSCN filter column and banded-conv
+index, the Wigner-recursion CG blocks, and the fused collocation matrices
+T1/T2/P.  This replaces the per-module ``lru_cache`` constellations that used
+to live in ``core/gaunt.py``, ``core/conv.py`` and ``kernels/gaunt_fused.py``.
+
+All values are **numpy** arrays: a jnp constant created inside one jit trace
+would leak that trace's tracer into every later trace served from the cache.
+Consumers wrap with ``jnp.asarray`` at use time (free — XLA hoists constants).
+
+``cache_stats()`` exposes hit/miss counters so tests can assert that plans
+reuse constants instead of rebuilding them.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+from . import fourier as _fx
+from .irreps import idx, num_coeffs
+from .so3 import real_clebsch_gordan_block, real_gaunt_tensor, real_sph_harm
+
+__all__ = [
+    "y_dense",
+    "z_dense",
+    "y_packed",
+    "z_packed",
+    "pack_index",
+    "filter_fourier_col",
+    "conv_u_index",
+    "cg_11_blocks",
+    "fused_matrices",
+    "gaunt_dense",
+    "cache_stats",
+    "clear_all",
+]
+
+
+# --------------------------------------------------------------------------
+# SH <-> 2D Fourier conversion tensors
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def _y_raw(L: int) -> np.ndarray:
+    return _fx.sh_to_fourier_dense(L)
+
+
+@lru_cache(maxsize=None)
+def _z_raw(Lf: int, Lout: int) -> np.ndarray:
+    return _fx.fourier_to_sh_dense(Lf, Lout)
+
+
+@lru_cache(maxsize=None)
+def y_dense(L: int, cdtype: str = "complex64") -> np.ndarray:
+    """sh->Fourier tensor [(L+1)^2, 2L+1 (u), 2L+1 (v)], centered."""
+    return _y_raw(L).astype(cdtype)
+
+
+@lru_cache(maxsize=None)
+def z_dense(Lf: int, Lout: int, cdtype: str = "complex64") -> np.ndarray:
+    """Fourier->sh tensor [2Lf+1, 2Lf+1, (Lout+1)^2], centered."""
+    return _z_raw(Lf, Lout).astype(cdtype)
+
+
+@lru_cache(maxsize=None)
+def y_packed(L: int, cdtype: str = "complex64") -> tuple[np.ndarray, np.ndarray]:
+    """Packed (per-|m| block-sparse) sh->Fourier matrices (yp, yn)."""
+    yp, yn = _fx.sh_to_fourier_packed(L, y=_y_raw(L))
+    return yp.astype(cdtype), yn.astype(cdtype)
+
+
+@lru_cache(maxsize=None)
+def z_packed(Lf: int, Lout: int, cdtype: str = "complex64") -> tuple[np.ndarray, np.ndarray]:
+    """Packed Fourier->sh matrices (zp, zn)."""
+    zp, zn = _fx.fourier_to_sh_packed(Lf, Lout, z=_z_raw(Lf, Lout))
+    return zp.astype(cdtype), zn.astype(cdtype)
+
+
+@lru_cache(maxsize=None)
+def pack_index(L: int) -> tuple[np.ndarray, np.ndarray]:
+    """Gather map packed[plane, mm, l] <- flat idx(l, +-mm); mask for valid."""
+    gidx = np.zeros((2, L + 1, L + 1), dtype=np.int32)
+    mask = np.zeros((2, L + 1, L + 1), dtype=np.float32)
+    for mm in range(L + 1):
+        for l in range(mm, L + 1):
+            gidx[0, mm, l] = l * l + l + mm
+            mask[0, mm, l] = 1.0
+            if mm > 0:
+                gidx[1, mm, l] = l * l + l - mm
+                mask[1, mm, l] = 1.0
+    return gidx, mask
+
+
+# --------------------------------------------------------------------------
+# eSCN rotation-aligned path constants
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def filter_fourier_col(L2: int, cdtype: str = "complex64") -> np.ndarray:
+    """u-column (v=0) Fourier coefficients of S_{l,0}, stacked [L2+1, 2L2+1]."""
+    y = _y_raw(L2)
+    cols = np.stack([y[idx(l, 0), :, L2] for l in range(L2 + 1)], axis=0)
+    return cols.astype(cdtype)
+
+
+@lru_cache(maxsize=None)
+def conv_u_index(L1: int, L2: int) -> tuple[np.ndarray, np.ndarray]:
+    """Index/mask for the banded 1D convolution along u.
+
+    out[u3] = sum_{u1} F1[u1] * k[u3 - u1] with centered indices;
+    idx[i3, i1] = i3 - i1 into the kernel array of length 2L2+1.
+    """
+    n1, n2 = 2 * L1 + 1, 2 * L2 + 1
+    N = n1 + n2 - 1
+    i3 = np.arange(N)[:, None]
+    i1 = np.arange(n1)[None, :]
+    k = i3 - i1  # in [ -(n1-1), N-1 ]
+    valid = (k >= 0) & (k < n2)
+    return np.where(valid, k, 0).astype(np.int32), valid.astype(np.float32)
+
+
+@lru_cache(maxsize=None)
+def cg_11_blocks(L: int) -> tuple[np.ndarray, ...]:
+    """CG blocks C_{(l-1,1)->l} for the Wigner-from-rotmat recursion."""
+    return tuple(
+        real_clebsch_gordan_block(l - 1, 1, l).astype(np.float32)
+        for l in range(2, L + 1)
+    )
+
+
+# --------------------------------------------------------------------------
+# fused collocation (sample-multiply-project) matrices
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True):
+    """Collocation matrices (T1 [d1,G], T2 [d2,G], P [G,dout]) — exact.
+
+    T_i samples real SH on the alias-free torus grid; P projects pointwise
+    products back to SH degrees <= Lout (see DESIGN.md §3.4).  When
+    ``pad_lanes``, G is rounded up to a multiple of 128 (extra sample points
+    get zero projection weight — harmless and keeps the TPU MXU aligned).
+    """
+    Lt = L1 + L2
+    N = 2 * Lt + 2  # > 2*Lt+1: alias-free for the product
+    t = 2 * math.pi * np.arange(N) / N
+    p = 2 * math.pi * np.arange(N) / N
+    tt, pp = np.meshgrid(t, p, indexing="ij")
+    xyz = np.stack([np.sin(tt) * np.cos(pp), np.sin(tt) * np.sin(pp), np.cos(tt)], -1)
+    S = real_sph_harm(max(L1, L2), xyz.reshape(-1, 3))  # [G, dmax]
+    T1 = S[:, : num_coeffs(L1)].T.copy()  # [d1, G]
+    T2 = S[:, : num_coeffs(L2)].T.copy()
+    # projection: F3[u,v] = (1/N^2) sum_g V[g] e^{-i(u t_g + v p_g)}; out = sum F3 z
+    z = _z_raw(Lt, Lout)  # [2Lt+1, 2Lt+1, dout] complex
+    us = np.arange(-Lt, Lt + 1)
+    Et = np.exp(-1j * np.outer(t, us))  # [N, 2Lt+1]
+    Ep = np.exp(-1j * np.outer(p, us))
+    P = np.einsum("au,bv,uvk->abk", Et, Ep, z).real / (N * N)
+    P = P.reshape(N * N, -1)
+    if pad_lanes:
+        G = T1.shape[1]
+        Gp = ((G + 127) // 128) * 128
+        T1 = np.pad(T1, [(0, 0), (0, Gp - G)])
+        T2 = np.pad(T2, [(0, 0), (0, Gp - G)])
+        P = np.pad(P, [(0, Gp - G), (0, 0)])
+    return T1.astype(np.float32), T2.astype(np.float32), P.astype(np.float32)
+
+
+@lru_cache(maxsize=None)
+def gaunt_dense(L1: int, L2: int, Lout: int, dtype: str = "float32") -> np.ndarray:
+    """The exact dense real-Gaunt tensor [(L1+1)^2, (L2+1)^2, (Lout+1)^2]."""
+    return real_gaunt_tensor(L1, L2, Lout).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# introspection
+# --------------------------------------------------------------------------
+
+_CACHED = (
+    _y_raw, _z_raw, y_dense, z_dense, y_packed, z_packed, pack_index,
+    filter_fourier_col, conv_u_index, cg_11_blocks, fused_matrices, gaunt_dense,
+)
+
+
+def cache_stats() -> dict[str, tuple[int, int, int]]:
+    """{builder name: (hits, misses, currsize)} over every cached builder."""
+    return {f.__name__: (ci.hits, ci.misses, ci.currsize)
+            for f in _CACHED for ci in (f.cache_info(),)}
+
+
+def clear_all() -> None:
+    """Drop every cached constant (tests / memory pressure)."""
+    for f in _CACHED:
+        f.cache_clear()

@@ -19,24 +19,10 @@ matrices instead).
 """
 from __future__ import annotations
 
-import math
-from functools import lru_cache
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import fourier as _fx
-from .gaunt import (
-    GauntTensorProduct,
-    _y_dense,
-    _z_dense,
-    expand_degree_weights,
-    fourier_to_sh,
-    sh_to_fourier,
-)
-from .irreps import idx, num_coeffs
-from .so3 import real_clebsch_gordan_block, real_sph_harm_jax
+from . import constants as _const
 
 __all__ = [
     "align_rotation",
@@ -62,15 +48,6 @@ def align_rotation(rhat):
     return jnp.stack([b1, b2, r], axis=-2)  # rows
 
 
-@lru_cache(maxsize=None)
-def _cg_11_blocks(L: int):
-    """CG blocks C_{(l-1,1)->l} for the Wigner recursion (numpy: lru-cached
-    constants must NOT be jnp arrays — a jnp constant created inside one jit
-    trace leaks into later traces)."""
-    return [real_clebsch_gordan_block(l - 1, 1, l).astype(np.float32)
-            for l in range(2, L + 1)]
-
-
 def wigner_blocks_from_rotmat(L: int, R):
     """Real Wigner-D blocks [D^0, ..., D^L] for rotation matrices R [..., 3, 3].
 
@@ -87,7 +64,7 @@ def wigner_blocks_from_rotmat(L: int, R):
     D1 = jnp.einsum("ai,...ij,bj->...ab", P, R, P)
     Ds.append(D1)
     for l in range(2, L + 1):
-        C = jnp.asarray(_cg_11_blocks(L)[l - 2], dtype=R.dtype)
+        C = jnp.asarray(_const.cg_11_blocks(L)[l - 2], dtype=R.dtype)
         Dl = jnp.einsum(
             "ijk,...ia,...jb,abm->...km", C, Ds[l - 1], D1, C
         )
@@ -105,85 +82,47 @@ def apply_wigner_blocks(Ds, x, transpose: bool = False):
     return jnp.concatenate(outs, axis=-1)
 
 
-@lru_cache(maxsize=None)
-def _filter_fourier_col(L2: int, cdtype: str):
-    """u-column (v=0) Fourier coefficients of S_{l,0}, stacked [L2+1, 2L2+1].
-    numpy (see _cg_11_blocks note)."""
-    y = _fx.sh_to_fourier_dense(L2)
-    cols = np.stack([y[idx(l, 0), :, L2] for l in range(L2 + 1)], axis=0)
-    return cols.astype(cdtype)
-
-
-@lru_cache(maxsize=None)
-def _conv_u_index(L1: int, L2: int):
-    """Index/mask for the banded 1D convolution along u.
-
-    out[u3] = sum_{u1} F1[u1] * k[u3 - u1]  with centered indices;
-    idx[i3, i1] = i3 - i1 (into the kernel array of length 2L2+1, offset L2-L1
-    ... computed here once).
-    """
-    n1, n2 = 2 * L1 + 1, 2 * L2 + 1
-    N = n1 + n2 - 1
-    i3 = np.arange(N)[:, None]
-    i1 = np.arange(n1)[None, :]
-    k = i3 - i1  # in [ -(n1-1), N-1 ]
-    valid = (k >= 0) & (k < n2)
-    return np.where(valid, k, 0).astype(np.int32), valid.astype(np.float32)
-
-
 class EquivariantConv:
     """Gaunt-accelerated equivariant convolution  (x (x) Y(rhat)) with the
     paper's w_{l1} w_{l2} w_l weight reparameterization.
 
-    method='general' evaluates Y(rhat) and calls the Gaunt TP;
-    method='escn' uses the rotation-alignment sparsity (default).
+    Thin wrapper over the unified engine (kind='conv_filter').
+    method='escn' -> the 'escn_aligned' backend (rotation-alignment sparsity,
+    default); method='general' -> a generic pairwise backend with the SH
+    filter materialized; method='auto' -> engine selection.  `backend` pins
+    any registered backend directly.
     """
 
     def __init__(self, L1: int, L2: int, Lout: int | None = None, method: str = "escn",
-                 cdtype=jnp.complex64, rdtype=jnp.float32):
+                 cdtype=jnp.complex64, rdtype=jnp.float32,
+                 backend: str | None = None, batch_hint: int | None = None,
+                 tune: str = "heuristic"):
+        from . import engine as _engine
+
         self.L1, self.L2 = L1, L2
         self.Lout = L1 + L2 if Lout is None else Lout
         self.method = method
         self.cdtype, self.rdtype = cdtype, rdtype
-        cd = jnp.dtype(cdtype).name
-        if method == "general":
-            self._tp = GauntTensorProduct(L1, L2, self.Lout, cdtype=cdtype, rdtype=rdtype)
-        else:
-            _y_dense(L1, cd)
-            _z_dense(L1 + L2, self.Lout, cd)
-            _filter_fourier_col(L2, cd)
+        dtype = _engine._dtype_str(cdtype)
+        if backend is None:
+            if method == "escn":
+                backend = "escn_aligned"
+            elif method == "general":
+                backend = "direct" if max(L1, L2) <= 4 else "fft"
+            elif method == "auto":
+                backend = None
+            else:
+                raise ValueError(f"unknown method {method!r}")
+        self._plan = _engine.plan(
+            L1, L2, self.Lout, kind="conv_filter", batch_hint=batch_hint,
+            dtype=dtype, backend=backend, tune=tune,
+        )
+        self.backend = self._plan.backend
+
+    @property
+    def plan(self):
+        return self._plan
 
     def __call__(self, x, rhat, w1=None, w2=None, w3=None):
         """x [..., (L1+1)^2], rhat [..., 3] -> [..., (Lout+1)^2]."""
-        if self.method == "general":
-            filt = real_sph_harm_jax(self.L2, rhat).astype(x.dtype)
-            return self._tp(x, filt, w1, w2, w3)
-        # --- eSCN-sparsity path ---
-        if w1 is not None:
-            x = x * expand_degree_weights(w1, self.L1).astype(x.dtype)
-        R = align_rotation(rhat.astype(jnp.float32))
-        Ds = wigner_blocks_from_rotmat(max(self.L1, self.Lout), R)
-        x_rot = apply_wigner_blocks(Ds[: self.L1 + 1], x)
-        F1 = sh_to_fourier(x_rot, self.L1, "dense", self.cdtype)  # [..., n1, n1]
-        # filter coefficients: only m=0 -> single v=0 column, O(L^2)
-        fl = jnp.full((self.L2 + 1,), 1.0, dtype=self.rdtype)
-        fl = fl * jnp.asarray(
-            [math.sqrt((2 * l + 1) / (4 * math.pi)) for l in range(self.L2 + 1)],
-            dtype=self.rdtype,
-        )
-        if w2 is not None:
-            fl = fl * w2.astype(self.rdtype)
-        cols = jnp.asarray(_filter_fourier_col(self.L2, jnp.dtype(self.cdtype).name))
-        k = jnp.einsum("...l,lu->...u", fl.astype(cols.dtype), cols)  # [..., 2L2+1]
-        # banded 1D conv along u for every v column (v support unchanged)
-        gidx, mask = _conv_u_index(self.L1, self.L2)
-        kmat = k[..., jnp.asarray(gidx)] * jnp.asarray(mask, dtype=self.rdtype)  # [..., N, n1]
-        F3 = jnp.einsum("...ti,...iv->...tv", kmat, F1)  # [..., N, n1(v)]
-        # pad v axis to the full output grid (v support still |v| <= L1)
-        pv = (2 * (self.L1 + self.L2) + 1 - (2 * self.L1 + 1)) // 2
-        F3 = jnp.pad(F3, [(0, 0)] * (F3.ndim - 1) + [(pv, pv)])
-        out_rot = fourier_to_sh(F3, self.L1 + self.L2, self.Lout, "dense", self.rdtype)
-        out = apply_wigner_blocks(Ds[: self.Lout + 1], out_rot, transpose=True)
-        if w3 is not None:
-            out = out * expand_degree_weights(w3, self.Lout).astype(out.dtype)
-        return out
+        return self._plan.apply(x, rhat, w1, w2, w3).astype(self.rdtype)

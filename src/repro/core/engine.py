@@ -1,0 +1,652 @@
+"""Unified Gaunt execution engine — one plan/dispatch layer for every Gaunt op.
+
+This repo grew several concrete realizations of the paper's O(L^3) Gaunt
+tensor product (dense/packed spectral conversions x fft/direct convolution,
+the fused collocation kernel, the eSCN rotation-aligned convolution).  The
+engine makes them *backends* behind a single planning API (DESIGN.md §4):
+
+    plan = engine.plan(L1, L2, Lout, kind="pairwise", batch_hint=4096)
+    out  = plan.apply(x1, x2, w1=w1)          # paper's w_{l1} w_{l2} w_l hooks
+
+A plan is keyed by ``(L1, L2, Lout, kind, batch_hint, dtype)`` (+ kind
+specific extras) and resolved to a registered backend:
+
+    kind         backends
+    pairwise     dense_einsum | fft | direct | packed | fused_xla | fused_pallas
+    conv_filter  escn_aligned + every pairwise backend (filter materialized)
+    manybody     dense_einsum | fft | direct | packed
+    channel_mix  dense_einsum | fused_xla
+
+Backends carry capability flags (grad support, dtype support, whether Pallas
+must run in interpret mode off-TPU); selection is either a closed-form cost
+model (``tune="heuristic"``) or measured wall-time on synthetic inputs with
+an in-process autotune cache (``tune="measure"``).  Plans and their constants
+are cached: planning twice is free, and all numpy precompute lives in the
+central :mod:`repro.core.constants` cache.
+
+Thin public wrappers (`GauntTensorProduct`, `EquivariantConv`,
+`manybody_gaunt_product`, `gaunt_tp_channel_mix`, the model `_tp` hook) keep
+their historical signatures and route here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import constants
+from .irreps import l_array, num_coeffs
+
+__all__ = [
+    "PlanKey",
+    "Backend",
+    "GauntPlan",
+    "GauntEngine",
+    "register_backend",
+    "available_backends",
+    "expand_degree_weights",
+    "get_engine",
+    "plan",
+]
+
+KINDS = ("pairwise", "conv_filter", "manybody", "channel_mix")
+
+_RDTYPE = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.float64}
+_CDTYPE = {"float32": "complex64", "bfloat16": "complex64", "float64": "complex128"}
+
+
+def _dtype_str(dtype) -> str:
+    """Normalize any dtype spec (incl. the wrappers' cdtype) to a plan key."""
+    s = jnp.dtype(dtype).name
+    if s.startswith("complex"):
+        return "float64" if s == "complex128" else "float32"
+    return s
+
+
+def expand_degree_weights(w, L: int):
+    """w [..., L+1] per-degree -> [..., (L+1)^2] packed broadcast.
+
+    The canonical implementation (gaunt.py re-exports it for back-compat).
+    """
+    return w[..., jnp.asarray(l_array(L).astype(np.int32))]
+
+
+def _wmul(x, w, L: int):
+    return x if w is None else x * expand_degree_weights(w, L).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# plan keys and backend registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Identity of a planned Gaunt op (hashable; the plan-cache key)."""
+
+    L1: int
+    L2: int
+    Lout: int
+    kind: str = "pairwise"
+    batch_hint: int | None = None
+    dtype: str = "float32"
+    # kind/backend-specific knobs, as a sorted tuple of (name, value) pairs:
+    # manybody carries ("Ls", (...)); packed carries ("conv", "fft"|"direct").
+    extra: tuple = ()
+
+    def opt(self, name: str, default=None):
+        return dict(self.extra).get(name, default)
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """A registered Gaunt realization with capability flags."""
+
+    name: str
+    kinds: frozenset
+    build: Callable[[PlanKey], Callable] = dataclasses.field(repr=False, compare=False, default=None)
+    cost: Callable[[PlanKey], float] = dataclasses.field(repr=False, compare=False, default=None)
+    supports_grad: bool = True
+    dtypes: frozenset = frozenset({"float32", "bfloat16", "float64"})
+    needs_interpret: bool = False  # Pallas: off-TPU only via (slow) interpret mode
+
+    def eligible(self, key: PlanKey, requires_grad: bool) -> bool:
+        if key.dtype not in self.dtypes:
+            return False
+        if requires_grad and not self.supports_grad:
+            return False
+        if key.kind in self.kinds:
+            return True
+        # any pairwise backend can serve conv_filter by materializing Y(rhat)
+        return key.kind == "conv_filter" and "pairwise" in self.kinds
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends(kind: str = "pairwise", dtype: str = "float32",
+                       requires_grad: bool = True) -> list[str]:
+    key = PlanKey(1, 1, 2, kind=kind, dtype=dtype)
+    return [b.name for b in _REGISTRY.values() if b.eligible(key, requires_grad)]
+
+
+@dataclasses.dataclass(frozen=True)
+class GauntPlan:
+    """A resolved (key, backend) pair; ``apply`` runs the op."""
+
+    key: PlanKey
+    backend: str
+    apply: Callable = dataclasses.field(repr=False, compare=False)
+
+    def describe(self) -> str:
+        k = self.key
+        return (f"{k.kind}(L1={k.L1}, L2={k.L2}, Lout={k.Lout}, "
+                f"dtype={k.dtype}, batch_hint={k.batch_hint}) -> {self.backend}")
+
+
+# --------------------------------------------------------------------------
+# cost model (relative real-MAC counts; calibrated coarsely, see DESIGN.md §4)
+# --------------------------------------------------------------------------
+
+_C_CPLX = 4.0        # complex MAC = 4 real MACs
+_C_FFT = 10.0        # per point per log2 level: tiny-grid FFTs vectorize poorly
+_OVERHEAD = 3e4      # per dispatched op: favors fewer, denser ops at small sizes
+_INTERPRET_PENALTY = 1e4   # Pallas interpret mode off-TPU is not a real option
+
+
+def _dims(key: PlanKey):
+    B = key.batch_hint or 1
+    n1, n2 = 2 * key.L1 + 1, 2 * key.L2 + 1
+    N = n1 + n2 - 1
+    return B, num_coeffs(key.L1), num_coeffs(key.L2), num_coeffs(key.Lout), n1, n2, N
+
+
+def _cost_dense_einsum(key: PlanKey) -> float:
+    B, d1, d2, do, *_ = _dims(key)
+    if key.kind == "channel_mix":
+        return 16.0 * B * d1 * d2 * do + _OVERHEAD  # x C1*C2 (unknown): scaled proxy
+    if key.kind == "manybody":
+        Ls = key.opt("Ls", (key.L1, key.L2))
+        total, La = 0.0, Ls[0]
+        for L in Ls[1:]:
+            total += B * num_coeffs(La) * num_coeffs(L) * num_coeffs(La + L)
+            La += L
+        return total + _OVERHEAD * len(Ls)
+    return B * d1 * d2 * do + _OVERHEAD
+
+
+def _spectral_common(key: PlanKey, conv: str, packed: bool) -> float:
+    B, d1, d2, do, n1, n2, N = _dims(key)
+    if packed:  # O(L^3) stacked matmuls
+        conv_in = 4.0 * B * (key.L1 + 1) ** 3 + 4.0 * B * (key.L2 + 1) ** 3
+        proj = 8.0 * B * (key.Lout + 1) ** 2 * N
+    else:  # O(L^4) dense einsum conversions
+        conv_in = 2.0 * B * (d1 * n1 * n1 + d2 * n2 * n2)
+        proj = _C_CPLX * B * N * N * do
+    if conv == "fft":
+        c = 3.0 * _C_FFT * B * N * N * max(1.0, math.log2(N * N)) + _C_CPLX * B * N * N
+    else:
+        c = _C_CPLX * B * N * N * n2 * n2
+    n_ops = 8 if not packed else 14
+    return conv_in + c + proj + _OVERHEAD * n_ops
+
+
+def _cost_fft(key):
+    if key.kind == "manybody":
+        return _cost_manybody_spectral(key, "fft", packed=False)
+    return _spectral_common(key, "fft", packed=False)
+
+
+def _cost_direct(key):
+    if key.kind == "manybody":
+        return _cost_manybody_spectral(key, "direct", packed=False)
+    return _spectral_common(key, "direct", packed=False)
+
+
+def _cost_packed(key):
+    conv = key.opt("conv", "fft")
+    if key.kind == "manybody":
+        return _cost_manybody_spectral(key, conv, packed=True)
+    return _spectral_common(key, conv, packed=True)
+
+
+def _cost_manybody_spectral(key: PlanKey, conv: str, packed: bool) -> float:
+    Ls = key.opt("Ls", (key.L1, key.L2))
+    B = key.batch_hint or 1
+    Lt = sum(Ls)
+    N = 2 * Lt + 1
+    convs = _C_FFT * len(Ls) * B * N * N * max(1.0, math.log2(N * N)) if conv == "fft" \
+        else _C_CPLX * len(Ls) * B * N * N * (2 * max(Ls) + 1) ** 2
+    conv_in = sum(2.0 * B * num_coeffs(L) * (2 * L + 1) ** 2 for L in Ls)
+    proj = _C_CPLX * B * N * N * num_coeffs(key.Lout)
+    return conv_in + convs + proj + _OVERHEAD * (6 + 2 * len(Ls))
+
+
+def _cost_fused(key: PlanKey, pallas: bool) -> float:
+    B, d1, d2, do, n1, n2, N = _dims(key)
+    Nf = 2 * (key.L1 + key.L2) + 2
+    G = ((Nf * Nf + 127) // 128) * 128
+    c = B * G * (d1 + d2 + do) + _OVERHEAD * 4
+    if key.kind == "channel_mix":
+        c = 16.0 * B * G * (d1 + d2 + do) + _OVERHEAD * 4
+    if pallas:
+        c *= 0.5 if jax.default_backend() == "tpu" else _INTERPRET_PENALTY
+    return c
+
+
+def _cost_escn(key: PlanKey) -> float:
+    B, d1, d2, do, n1, n2, N = _dims(key)
+    Lw = max(key.L1, key.Lout)
+    wigner = B * sum((2 * l + 1) ** 4 for l in range(2, Lw + 1)) + \
+        2.0 * B * sum((2 * l + 1) ** 2 for l in range(Lw + 1))
+    s2f = 2.0 * B * d1 * n1 * n1
+    banded = _C_CPLX * B * N * n1 * n1
+    proj = _C_CPLX * B * N * N * do
+    return wigner + s2f + banded + proj + _OVERHEAD * 10
+
+
+# --------------------------------------------------------------------------
+# backend builders
+# --------------------------------------------------------------------------
+
+
+def _build_dense_einsum(key: PlanKey) -> Callable:
+    gd = "float64" if key.dtype == "float64" else "float32"
+    rd = _RDTYPE[key.dtype]
+    if key.kind == "channel_mix":
+        G = constants.gaunt_dense(key.L1, key.L2, key.Lout, gd)
+
+        def apply_mix(x1, x2, w_mix):
+            Gj = jnp.asarray(G)
+            out = jnp.einsum("...ci,...dj,ijk,cde->...ek",
+                             x1.astype(Gj.dtype), x2.astype(Gj.dtype), Gj,
+                             w_mix.astype(Gj.dtype))
+            return out.astype(rd)
+
+        return apply_mix
+    if key.kind == "manybody":
+        Ls = key.opt("Ls")
+
+        def apply_mb(xs, weights=None):
+            xs = list(xs)
+            if weights is not None:
+                xs = [_wmul(x, w, L) for x, w, L in zip(xs, weights, Ls)]
+            acc, La = xs[0], Ls[0]
+            for i, (x, L) in enumerate(zip(xs[1:], Ls[1:])):
+                last = i == len(Ls) - 2
+                Lt = key.Lout if last else La + L
+                G = jnp.asarray(constants.gaunt_dense(La, L, Lt, gd))
+                acc = jnp.einsum("...i,...j,ijk->...k",
+                                 acc.astype(G.dtype), x.astype(G.dtype), G)
+                La += L
+            return acc.astype(rd)
+
+        return apply_mb
+    G = constants.gaunt_dense(key.L1, key.L2, key.Lout, gd)
+
+    def apply_pair(x1, x2, w1=None, w2=None, w3=None):
+        Gj = jnp.asarray(G)
+        x1 = _wmul(x1, w1, key.L1).astype(Gj.dtype)
+        x2 = _wmul(x2, w2, key.L2).astype(Gj.dtype)
+        out = jnp.einsum("...i,...j,ijk->...k", x1, x2, Gj)
+        return _wmul(out.astype(rd), w3, key.Lout)
+
+    return apply_pair
+
+
+def _build_spectral(key: PlanKey, conversion: str, conv: str) -> Callable:
+    from .gaunt import conv2d_full, fourier_to_sh, sh_to_fourier  # lazy: gaunt imports engine
+
+    cd = _CDTYPE[key.dtype]
+    rd = _RDTYPE[key.dtype]
+    # warm constants at plan time so jit tracing never re-runs numpy precompute
+    if key.kind != "manybody":
+        if conversion == "dense":
+            constants.y_dense(key.L1, cd), constants.y_dense(key.L2, cd)
+            constants.z_dense(key.L1 + key.L2, key.Lout, cd)
+        else:
+            constants.y_packed(key.L1, cd), constants.y_packed(key.L2, cd)
+            constants.z_packed(key.L1 + key.L2, key.Lout, cd)
+
+    if key.kind == "manybody":
+        from .manybody import _tree_convolve
+
+        Ls = key.opt("Ls")
+        Ltot = sum(Ls)
+        if conversion == "dense":
+            for L in Ls:
+                constants.y_dense(L, cd)
+            constants.z_dense(Ltot, key.Lout, cd)
+        else:
+            for L in Ls:
+                constants.y_packed(L, cd)
+            constants.z_packed(Ltot, key.Lout, cd)
+
+        def apply_mb(xs, weights=None):
+            grids = []
+            for i, (x, L) in enumerate(zip(xs, Ls)):
+                if weights is not None and weights[i] is not None:
+                    x = _wmul(x, weights[i], L)
+                grids.append(sh_to_fourier(x, L, conversion, jnp.dtype(cd)))
+            F = _tree_convolve(grids, conv)
+            return fourier_to_sh(F, Ltot, key.Lout, conversion, rd)
+
+        return apply_mb
+
+    def apply_pair(x1, x2, w1=None, w2=None, w3=None):
+        x1 = _wmul(x1, w1, key.L1)
+        x2 = _wmul(x2, w2, key.L2)
+        F1 = sh_to_fourier(x1, key.L1, conversion, jnp.dtype(cd))
+        F2 = sh_to_fourier(x2, key.L2, conversion, jnp.dtype(cd))
+        F3 = conv2d_full(F1, F2, conv)
+        out = fourier_to_sh(F3, key.L1 + key.L2, key.Lout, conversion, rd)
+        return _wmul(out, w3, key.Lout)
+
+    return apply_pair
+
+
+def _build_fused(key: PlanKey, pallas: bool) -> Callable:
+    rd = _RDTYPE[key.dtype]
+    T1, T2, P = constants.fused_matrices(key.L1, key.L2, key.Lout)
+
+    if key.kind == "channel_mix":
+
+        def apply_mix(x1, x2, w_mix):
+            T1j, T2j, Pj = jnp.asarray(T1), jnp.asarray(T2), jnp.asarray(P)
+            V1 = x1.astype(jnp.float32) @ T1j  # [..., C1, G]
+            V2 = x2.astype(jnp.float32) @ T2j  # [..., C2, G]
+            V = jnp.einsum("...cg,...dg,cde->...eg", V1, V2, w_mix.astype(V1.dtype))
+            return (V @ Pj).astype(rd)
+
+        return apply_mix
+
+    if pallas:
+        block_b = key.opt("block_b", 256)
+
+        def apply_pair(x1, x2, w1=None, w2=None, w3=None):
+            from repro.kernels.gaunt_fused import gaunt_fused_pallas  # lazy: kernels import core
+
+            x1 = _wmul(x1, w1, key.L1)
+            x2 = _wmul(x2, w2, key.L2)
+            out = gaunt_fused_pallas(x1, x2, key.L1, key.L2, key.Lout, block_b=block_b)
+            return _wmul(out.astype(rd), w3, key.Lout)
+
+        return apply_pair
+
+    def apply_pair(x1, x2, w1=None, w2=None, w3=None):
+        T1j, T2j, Pj = jnp.asarray(T1), jnp.asarray(T2), jnp.asarray(P)
+        x1 = _wmul(x1, w1, key.L1)
+        x2 = _wmul(x2, w2, key.L2)
+        v1 = x1.astype(jnp.float32) @ T1j
+        v2 = x2.astype(jnp.float32) @ T2j
+        out = ((v1 * v2) @ Pj).astype(rd)
+        return _wmul(out, w3, key.Lout)
+
+    return apply_pair
+
+
+def _build_escn(key: PlanKey) -> Callable:
+    cd = _CDTYPE[key.dtype]
+    rd = _RDTYPE[key.dtype]
+    L1, L2, Lout = key.L1, key.L2, key.Lout
+    constants.y_dense(L1, cd)
+    constants.z_dense(L1 + L2, Lout, cd)
+    constants.filter_fourier_col(L2, cd)
+    constants.conv_u_index(L1, L2)
+    constants.cg_11_blocks(max(L1, Lout))
+    fl0 = np.array([math.sqrt((2 * l + 1) / (4 * math.pi)) for l in range(L2 + 1)],
+                   dtype=np.float32)
+
+    def apply_conv(x, rhat, w1=None, w2=None, w3=None):
+        # lazy: conv.py routes through the engine, so import its helpers at call
+        from .conv import align_rotation, apply_wigner_blocks, wigner_blocks_from_rotmat
+        from .gaunt import fourier_to_sh, sh_to_fourier
+
+        x = _wmul(x, w1, L1)
+        R = align_rotation(rhat.astype(jnp.float32))
+        Ds = wigner_blocks_from_rotmat(max(L1, Lout), R)
+        x_rot = apply_wigner_blocks(Ds[: L1 + 1], x)
+        F1 = sh_to_fourier(x_rot, L1, "dense", jnp.dtype(cd))  # [..., n1, n1]
+        # filter coefficients: only m=0 -> single v=0 column, O(L^2)
+        fl = jnp.asarray(fl0, dtype=rd)
+        if w2 is not None:
+            fl = fl * w2.astype(rd)
+        cols = jnp.asarray(constants.filter_fourier_col(L2, cd))
+        k = jnp.einsum("...l,lu->...u", fl.astype(cols.dtype), cols)  # [..., 2L2+1]
+        # banded 1D conv along u for every v column (v support unchanged)
+        gidx, mask = constants.conv_u_index(L1, L2)
+        kmat = k[..., jnp.asarray(gidx)] * jnp.asarray(mask, dtype=rd)  # [..., N, n1]
+        F3 = jnp.einsum("...ti,...iv->...tv", kmat, F1)  # [..., N, n1(v)]
+        # pad v axis to the full output grid (v support still |v| <= L1)
+        pv = (2 * (L1 + L2) + 1 - (2 * L1 + 1)) // 2
+        F3 = jnp.pad(F3, [(0, 0)] * (F3.ndim - 1) + [(pv, pv)])
+        out_rot = fourier_to_sh(F3, L1 + L2, Lout, "dense", rd)
+        out = apply_wigner_blocks(Ds[: Lout + 1], out_rot, transpose=True)
+        return _wmul(out, w3, Lout)
+
+    return apply_conv
+
+
+def _wrap_conv_filter(key: PlanKey, pair_apply: Callable) -> Callable:
+    """Serve kind='conv_filter' on a pairwise backend: materialize Y(rhat)."""
+
+    def apply_conv(x, rhat, w1=None, w2=None, w3=None):
+        from .so3 import real_sph_harm_jax
+
+        filt = real_sph_harm_jax(key.L2, rhat).astype(x.dtype)
+        return pair_apply(x, filt, w1, w2, w3)
+
+    return apply_conv
+
+
+register_backend(Backend(
+    name="dense_einsum",
+    kinds=frozenset({"pairwise", "conv_filter", "manybody", "channel_mix"}),
+    build=_build_dense_einsum,
+    cost=_cost_dense_einsum,
+))
+register_backend(Backend(
+    name="fft",
+    kinds=frozenset({"pairwise", "conv_filter", "manybody"}),
+    build=lambda key: _build_spectral(key, "dense", "fft"),
+    cost=_cost_fft,
+))
+register_backend(Backend(
+    name="direct",
+    kinds=frozenset({"pairwise", "conv_filter", "manybody"}),
+    build=lambda key: _build_spectral(key, "dense", "direct"),
+    cost=_cost_direct,
+))
+register_backend(Backend(
+    name="packed",
+    kinds=frozenset({"pairwise", "conv_filter", "manybody"}),
+    build=lambda key: _build_spectral(key, "packed", key.opt("conv", "fft")),
+    cost=_cost_packed,
+))
+register_backend(Backend(
+    name="fused_xla",
+    kinds=frozenset({"pairwise", "conv_filter", "channel_mix"}),
+    build=lambda key: _build_fused(key, pallas=False),
+    cost=lambda key: _cost_fused(key, pallas=False),
+    dtypes=frozenset({"float32", "bfloat16"}),
+))
+register_backend(Backend(
+    name="fused_pallas",
+    kinds=frozenset({"pairwise", "conv_filter"}),
+    build=lambda key: _build_fused(key, pallas=True),
+    cost=lambda key: _cost_fused(key, pallas=True),
+    supports_grad=False,  # pallas_call has no registered VJP
+    dtypes=frozenset({"float32", "bfloat16"}),
+    needs_interpret=True,
+))
+register_backend(Backend(
+    name="escn_aligned",
+    kinds=frozenset({"conv_filter"}),
+    build=_build_escn,
+    cost=_cost_escn,
+))
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+
+
+class GauntEngine:
+    """Plans, caches, and autotunes Gaunt ops over the backend registry."""
+
+    def __init__(self):
+        self._plans: dict[tuple, GauntPlan] = {}
+        self._measured: dict[PlanKey, str] = {}
+
+    # -- public API --------------------------------------------------------
+
+    def plan(self, L1: int | None = None, L2: int | None = None,
+             Lout: int | None = None, *, kind: str = "pairwise",
+             Ls: tuple | None = None, batch_hint: int | None = None,
+             dtype="float32", backend: str | None = None,
+             options: dict | None = None, tune: str = "heuristic",
+             requires_grad: bool = True) -> GauntPlan:
+        """Resolve (and cache) a plan.  ``backend=None`` -> engine selection.
+
+        kind='manybody' takes ``Ls`` (per-operand degrees) instead of L1/L2.
+        ``tune`` is 'heuristic' (cost model) or 'measure' (timed autotune).
+        """
+        if kind not in KINDS:
+            raise ValueError(f"unknown kind {kind!r} (expected one of {KINDS})")
+        extra = tuple(sorted((options or {}).items()))
+        if kind == "manybody":
+            if Ls is None or len(Ls) < 2:
+                raise ValueError("manybody plans need Ls with >= 2 degrees")
+            Ls = tuple(int(L) for L in Ls)
+            L1, L2 = max(Ls), min(Ls)
+            Lout = sum(Ls) if Lout is None else Lout
+            extra = extra + (("Ls", Ls),)
+        else:
+            if L1 is None or L2 is None:
+                raise ValueError(f"kind={kind!r} plans need L1 and L2")
+            Lout = L1 + L2 if Lout is None else Lout
+        if Lout > (sum(Ls) if kind == "manybody" else L1 + L2):
+            raise ValueError("Lout cannot exceed the total degree (Gaunt selection rule)")
+        key = PlanKey(L1, L2, Lout, kind, batch_hint, _dtype_str(dtype), extra)
+        cache_key = (key, backend, tune, requires_grad)
+        hit = self._plans.get(cache_key)
+        if hit is not None:
+            return hit
+        name = backend or self.select(key, tune=tune, requires_grad=requires_grad)
+        spec = _REGISTRY.get(name)
+        if spec is None:
+            raise ValueError(f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}")
+        if not spec.eligible(key, requires_grad):
+            raise ValueError(f"backend {name!r} cannot serve {key} "
+                             f"(requires_grad={requires_grad})")
+        apply = spec.build(key)
+        if key.kind == "conv_filter" and spec.name != "escn_aligned":
+            # generic backends build the pairwise form; materialize Y(rhat)
+            apply = _wrap_conv_filter(key, apply)
+        p = GauntPlan(key=key, backend=name, apply=apply)
+        self._plans[cache_key] = p
+        return p
+
+    def select(self, key: PlanKey, tune: str = "heuristic",
+               requires_grad: bool = True) -> str:
+        """Pick the backend for ``key`` by cost model or measurement."""
+        eligible = [b for b in _REGISTRY.values() if b.eligible(key, requires_grad)]
+        if not eligible:
+            raise ValueError(f"no eligible backend for {key}")
+        if tune == "measure" and _trace_clean():
+            hit = self._measured.get(key)
+            if hit is not None:
+                return hit
+            name = self._measure(key, eligible)
+            self._measured[key] = name
+            return name
+        return min(eligible, key=lambda b: b.cost(key)).name
+
+    def plans(self) -> list[GauntPlan]:
+        return list(self._plans.values())
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self._measured.clear()
+
+    # -- measured autotune -------------------------------------------------
+
+    def _measure(self, key: PlanKey, eligible: list[Backend]) -> str:
+        args = _synthetic_inputs(key)
+        best_name, best_t = None, float("inf")
+        for spec in eligible:
+            if spec.needs_interpret and jax.default_backend() != "tpu":
+                continue  # interpret-mode timing is meaningless
+            try:
+                apply = spec.build(key)
+                if key.kind == "conv_filter" and spec.name != "escn_aligned":
+                    apply = _wrap_conv_filter(key, apply)
+                fn = jax.jit(lambda *a: apply(*a))
+                jax.block_until_ready(fn(*args))  # compile + warm
+                ts = []
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(*args))
+                    ts.append(time.perf_counter() - t0)
+                t = sorted(ts)[1]
+            except Exception:  # noqa: BLE001 — a broken backend just loses
+                continue
+            if t < best_t:
+                best_name, best_t = spec.name, t
+        if best_name is None:  # everything failed: fall back to the cost model
+            return min(eligible, key=lambda b: b.cost(key)).name
+        return best_name
+
+
+def _trace_clean() -> bool:
+    try:
+        return jax.core.trace_state_clean()
+    except Exception:  # noqa: BLE001 — jax internals moved; assume clean
+        return True
+
+
+def _synthetic_inputs(key: PlanKey):
+    B = key.batch_hint or 256
+    rd = _RDTYPE[key.dtype]
+    rng = np.random.default_rng(0)
+
+    def r(*shape):
+        return jnp.asarray(rng.normal(size=shape), dtype=rd)
+
+    if key.kind == "pairwise":
+        return r(B, num_coeffs(key.L1)), r(B, num_coeffs(key.L2))
+    if key.kind == "conv_filter":
+        v = rng.normal(size=(B, 3))
+        v /= np.linalg.norm(v, axis=-1, keepdims=True)
+        return r(B, num_coeffs(key.L1)), jnp.asarray(v, dtype=jnp.float32)
+    if key.kind == "manybody":
+        Ls = key.opt("Ls")
+        return ([r(B, num_coeffs(L)) for L in Ls],)
+    # channel_mix: small representative channel counts
+    C1 = C2 = E = 4
+    return (r(B, C1, num_coeffs(key.L1)), r(B, C2, num_coeffs(key.L2)),
+            r(C1, C2, E))
+
+
+_ENGINE = GauntEngine()
+
+
+def get_engine() -> GauntEngine:
+    """The process-wide engine (plan + autotune caches are shared)."""
+    return _ENGINE
+
+
+def plan(*args, **kw) -> GauntPlan:
+    """Module-level shorthand for ``get_engine().plan(...)``."""
+    return _ENGINE.plan(*args, **kw)

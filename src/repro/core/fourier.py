@@ -16,9 +16,11 @@ theta-integral  int_0^pi e^{iut} Theta_{l,m}(t) sin t dt  is computed exactly
 by expanding Theta sin t in its (finite) theta-Fourier series and using
     int_0^pi e^{int} dt = pi delta_{n,0} + (1-(-1)^n) i/n.
 
-Both tensors are numpy float64/complex128 precompute, lru-cached; `packed`
-variants expose the v = +-m block sparsity as stacked per-|m| matmuls (the
-O(L^3) path; the dense einsum is the O(L^4)-but-MXU-friendly path).
+Both tensors are numpy float64/complex128 precompute; `packed` variants expose
+the v = +-m block sparsity as stacked per-|m| matmuls (the O(L^3) path; the
+dense einsum is the O(L^4)-but-MXU-friendly path).  The builders here are
+*pure* — caching lives in `core.constants`, the engine's single constant-cache
+module (DESIGN.md §2.4); only the internal theta-integral memo stays local.
 """
 from __future__ import annotations
 
@@ -53,7 +55,6 @@ def _torus_samples(L: int) -> tuple[np.ndarray, int]:
     return S, N
 
 
-@lru_cache(maxsize=None)
 def sh_to_fourier_dense(L: int) -> np.ndarray:
     """y[(L+1)^2, 2L+1 (u), 2L+1 (v)] complex128, centered (index L <-> freq 0)."""
     S, N = _torus_samples(L)
@@ -105,7 +106,6 @@ def _theta_fourier_integrals(L: int, u_max: int) -> np.ndarray:
     return out
 
 
-@lru_cache(maxsize=None)
 def fourier_to_sh_dense(Lf: int, Lout: int) -> np.ndarray:
     """z[2Lf+1 (u), 2Lf+1 (v), (Lout+1)^2] complex128 (centered u,v).
 
@@ -141,8 +141,7 @@ def fourier_to_sh_dense(Lf: int, Lout: int) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
-@lru_cache(maxsize=None)
-def sh_to_fourier_packed(L: int) -> tuple[np.ndarray, np.ndarray]:
+def sh_to_fourier_packed(L: int, y: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
     """Exploit v = +-m sparsity as per-|m| stacked matmuls.
 
     Returns (yp, yn):
@@ -158,7 +157,7 @@ def sh_to_fourier_packed(L: int) -> tuple[np.ndarray, np.ndarray]:
       The v = -mm column follows from Hermitian symmetry of real functions:
         F[-u, -v] = conj(F[u, v]).
     """
-    y = sh_to_fourier_dense(L)
+    y = sh_to_fourier_dense(L) if y is None else y
     n = 2 * L + 1
     # For v = +mm: F[:, L+mm] = sum over inputs i with |m_i| = mm of
     #   x_i * y[i, :, L+mm]. Pack per (mm, sign-plane, l).
@@ -179,14 +178,13 @@ def sh_to_fourier_packed(L: int) -> tuple[np.ndarray, np.ndarray]:
     return yp, yn
 
 
-@lru_cache(maxsize=None)
-def fourier_to_sh_packed(Lf: int, Lout: int) -> tuple[np.ndarray, np.ndarray]:
+def fourier_to_sh_packed(Lf: int, Lout: int, z: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
     """Packed z: per-|m| matrices over u for the v=+m and v=-m columns.
 
     zp[mm, plane, l, u]: x[idx(l, +-mm)] += Re( F[:, Lf+mm] . zp[mm, plane, l] )
     zn likewise for the v = -mm column.
     """
-    z = fourier_to_sh_dense(Lf, Lout)
+    z = fourier_to_sh_dense(Lf, Lout) if z is None else z
     n = 2 * Lf + 1
     zp = np.zeros((Lout + 1, 2, Lout + 1, n), dtype=np.complex128)
     zn = np.zeros((Lout + 1, 2, Lout + 1, n), dtype=np.complex128)

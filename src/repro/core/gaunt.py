@@ -15,17 +15,20 @@ Three interchangeable realizations of each stage (all tested equal):
 Also `gaunt_product_numpy` — a complex128 numpy mirror used by exactness
 tests, and weight hooks implementing the paper's w_{l1} w_{l2} w_l
 reparameterization of Equivariant Feature Interaction.
+
+`GauntTensorProduct` is a thin wrapper over the unified engine
+(`core.engine`): its historical (conversion, conv) arguments map onto
+registered backends, and all constants come from the `core.constants` cache.
 """
 from __future__ import annotations
 
-from functools import lru_cache, partial
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import fourier as _fx
-from .irreps import l_array, num_coeffs
+from . import constants as _const
+from . import engine as _engine
+from .engine import expand_degree_weights  # noqa: F401 — canonical impl lives there
+from .irreps import num_coeffs
 
 __all__ = [
     "GauntTensorProduct",
@@ -38,52 +41,6 @@ __all__ = [
 
 
 # --------------------------------------------------------------------------
-# constants cache (jnp views of the numpy precompute)
-# --------------------------------------------------------------------------
-
-
-# NOTE: these caches hold *numpy* arrays; jnp constants created inside a jit
-# trace would leak tracers into later traces when served from the cache.
-
-
-@lru_cache(maxsize=None)
-def _y_dense(L: int, cdtype: str):
-    return _fx.sh_to_fourier_dense(L).astype(cdtype)
-
-
-@lru_cache(maxsize=None)
-def _z_dense(Lf: int, Lout: int, cdtype: str):
-    return _fx.fourier_to_sh_dense(Lf, Lout).astype(cdtype)
-
-
-@lru_cache(maxsize=None)
-def _y_packed(L: int, cdtype: str):
-    yp, yn = _fx.sh_to_fourier_packed(L)
-    return yp.astype(cdtype), yn.astype(cdtype)
-
-
-@lru_cache(maxsize=None)
-def _z_packed(Lf: int, Lout: int, cdtype: str):
-    zp, zn = _fx.fourier_to_sh_packed(Lf, Lout)
-    return zp.astype(cdtype), zn.astype(cdtype)
-
-
-@lru_cache(maxsize=None)
-def _pack_index(L: int) -> tuple[np.ndarray, np.ndarray]:
-    """Gather map packed[plane, mm, l] <- flat idx(l, +-mm); mask for valid."""
-    gidx = np.zeros((2, L + 1, L + 1), dtype=np.int32)
-    mask = np.zeros((2, L + 1, L + 1), dtype=np.float32)
-    for mm in range(L + 1):
-        for l in range(mm, L + 1):
-            gidx[0, mm, l] = l * l + l + mm
-            mask[0, mm, l] = 1.0
-            if mm > 0:
-                gidx[1, mm, l] = l * l + l - mm
-                mask[1, mm, l] = 1.0
-    return gidx, mask
-
-
-# --------------------------------------------------------------------------
 # stages
 # --------------------------------------------------------------------------
 
@@ -92,11 +49,11 @@ def sh_to_fourier(x, L: int, conversion: str = "dense", cdtype=jnp.complex64):
     """x [..., (L+1)^2] real -> centered Fourier grid [..., 2L+1, 2L+1] complex."""
     cd = jnp.dtype(cdtype).name
     if conversion == "dense":
-        y = jnp.asarray(_y_dense(L, cd))
+        y = jnp.asarray(_const.y_dense(L, cd))
         return jnp.einsum("...i,iuv->...uv", x.astype(y.dtype), y)
     if conversion == "packed":
-        yp, yn = (jnp.asarray(a) for a in _y_packed(L, cd))
-        gidx, mask = _pack_index(L)
+        yp, yn = (jnp.asarray(a) for a in _const.y_packed(L, cd))
+        gidx, mask = _const.pack_index(L)
         xb = x[..., gidx] * jnp.asarray(mask, dtype=x.dtype)  # [..., 2, L+1, L+1]
         xb = xb.astype(yp.dtype)
         # F columns for v = +mm and v = -mm
@@ -113,10 +70,10 @@ def fourier_to_sh(F, Lf: int, Lout: int, conversion: str = "dense", rdtype=jnp.f
     """Centered grid [..., 2Lf+1, 2Lf+1] -> real irreps [..., (Lout+1)^2]."""
     cd = F.dtype.name
     if conversion == "dense":
-        z = jnp.asarray(_z_dense(Lf, Lout, cd))
+        z = jnp.asarray(_const.z_dense(Lf, Lout, cd))
         return jnp.einsum("...uv,uvk->...k", F, z).real.astype(rdtype)
     if conversion == "packed":
-        zp, zn = (jnp.asarray(a) for a in _z_packed(Lf, Lout, cd))
+        zp, zn = (jnp.asarray(a) for a in _const.z_packed(Lf, Lout, cd))
         mmax = min(Lf, Lout)
         # columns v = +mm / v = -mm of the grid, mm = 0..Lout (pad if Lf<Lout)
         Fp = jnp.swapaxes(F, -1, -2)[..., Lf : Lf + mmax + 1, :]   # [..., mm, u]
@@ -129,7 +86,7 @@ def fourier_to_sh(F, Lf: int, Lout: int, conversion: str = "dense", rdtype=jnp.f
             jnp.einsum("...mu,mplu->...pml", Fp, zp)
             + jnp.einsum("...mu,mplu->...pml", Fn, zn)
         ).real.astype(rdtype)  # [..., 2, Lout+1, Lout+1]
-        gidx, mask = _pack_index(Lout)
+        gidx, mask = _const.pack_index(Lout)
         out = jnp.zeros(F.shape[:-2] + (num_coeffs(Lout),), dtype=rdtype)
         out = out.at[..., gidx.reshape(-1)].add(
             (vals * jnp.asarray(mask, dtype=rdtype)).reshape(vals.shape[:-3] + (-1,))
@@ -167,11 +124,6 @@ def conv2d_full(F1, F2, method: str = "fft"):
     raise ValueError(f"unknown conv method {method!r}")
 
 
-def expand_degree_weights(w, L: int):
-    """w [..., L+1] per-degree -> [..., (L+1)^2] packed broadcast."""
-    return w[..., jnp.asarray(l_array(L).astype(np.int32))]
-
-
 # --------------------------------------------------------------------------
 # the module
 # --------------------------------------------------------------------------
@@ -184,7 +136,11 @@ class GauntTensorProduct:
     w1 [..., L1+1], w2 [..., L2+1], w3 [..., Lout+1] realize the
     w_{l1} w_{l2} w_l reparameterization.
 
-    `conversion`: 'dense' | 'packed';  `conv`: 'fft' | 'direct'.
+    Thin wrapper over the unified engine.  The historical knobs map onto
+    registered backends: (`conversion`='dense', `conv`='fft'|'direct') ->
+    the 'fft'/'direct' backends, `conversion`='packed' -> the 'packed'
+    backend.  `backend` overrides them directly ('auto' lets the engine's
+    cost model / autotuner choose; any registered backend name pins it).
     """
 
     def __init__(
@@ -196,34 +152,41 @@ class GauntTensorProduct:
         conv: str = "auto",
         cdtype=jnp.complex64,
         rdtype=jnp.float32,
+        backend: str | None = None,
+        batch_hint: int | None = None,
+        tune: str = "heuristic",
     ):
         self.L1, self.L2 = L1, L2
         self.Lout = L1 + L2 if Lout is None else Lout
-        if self.Lout > L1 + L2:
-            raise ValueError("Lout cannot exceed L1+L2 (Gaunt selection rule)")
         self.conversion = conversion
         self.conv = ("direct" if max(L1, L2) <= 4 else "fft") if conv == "auto" else conv
         self.cdtype = cdtype
         self.rdtype = rdtype
-        # warm the constant caches (so jit tracing does not re-run numpy)
-        cd = jnp.dtype(cdtype).name
-        if conversion == "dense":
-            _y_dense(L1, cd), _y_dense(L2, cd), _z_dense(L1 + L2, self.Lout, cd)
-        else:
-            _y_packed(L1, cd), _y_packed(L2, cd), _z_packed(L1 + L2, self.Lout, cd)
+        dtype = _engine._dtype_str(cdtype)
+        options = None
+        if backend is None:
+            if conversion == "dense":
+                backend = self.conv  # 'fft' | 'direct'
+            elif conversion == "packed":
+                backend, options = "packed", {"conv": self.conv}
+            else:
+                raise ValueError(f"unknown conversion {conversion!r}")
+        elif backend == "auto":
+            backend = None  # engine selection
+        # plan now: warms the constant caches so jit tracing never runs numpy
+        self._plan = _engine.plan(
+            L1, L2, self.Lout, kind="pairwise", batch_hint=batch_hint,
+            dtype=dtype, backend=backend, options=options, tune=tune,
+        )
+        self.backend = self._plan.backend
+
+    @property
+    def plan(self):
+        return self._plan
 
     def __call__(self, x1, x2, w1=None, w2=None, w3=None):
-        if w1 is not None:
-            x1 = x1 * expand_degree_weights(w1, self.L1).astype(x1.dtype)
-        if w2 is not None:
-            x2 = x2 * expand_degree_weights(w2, self.L2).astype(x2.dtype)
-        F1 = sh_to_fourier(x1, self.L1, self.conversion, self.cdtype)
-        F2 = sh_to_fourier(x2, self.L2, self.conversion, self.cdtype)
-        F3 = conv2d_full(F1, F2, self.conv)
-        out = fourier_to_sh(F3, self.L1 + self.L2, self.Lout, self.conversion, self.rdtype)
-        if w3 is not None:
-            out = out * expand_degree_weights(w3, self.Lout).astype(out.dtype)
-        return out
+        out = self._plan.apply(x1, x2, w1, w2, w3)
+        return out.astype(self.rdtype)
 
 
 # --------------------------------------------------------------------------
@@ -233,9 +196,9 @@ class GauntTensorProduct:
 
 def gaunt_product_numpy(x1: np.ndarray, x2: np.ndarray, L1: int, L2: int, Lout: int | None = None):
     Lout = L1 + L2 if Lout is None else Lout
-    y1 = _fx.sh_to_fourier_dense(L1)
-    y2 = _fx.sh_to_fourier_dense(L2)
-    z = _fx.fourier_to_sh_dense(L1 + L2, Lout)
+    y1 = _const._y_raw(L1)
+    y2 = _const._y_raw(L2)
+    z = _const._z_raw(L1 + L2, Lout)
     F1 = np.einsum("...i,iuv->...uv", x1.astype(np.float64), y1)
     F2 = np.einsum("...i,iuv->...uv", x2.astype(np.float64), y2)
     N = 2 * (L1 + L2) + 1

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .gaunt import conv2d_full, expand_degree_weights, fourier_to_sh, sh_to_fourier
+from .gaunt import conv2d_full
 
 __all__ = ["manybody_gaunt_product", "manybody_selfmix"]
 
@@ -49,22 +49,34 @@ def _tree_convolve(grids: list, method: str):
 
 def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
                            conv: str = "fft", conversion: str = "dense",
-                           cdtype=jnp.complex64, rdtype=jnp.float32):
+                           cdtype=jnp.complex64, rdtype=jnp.float32,
+                           backend: str | None = None, tune: str = "heuristic"):
     """xs: list of [..., (L_i+1)^2] features; Ls: their max degrees.
 
     weights: optional list of per-degree weights w_i [..., L_i+1] (the paper's
     reparameterized (lm)->l couplings).  Returns [..., (Lout+1)^2].
+
+    Thin wrapper over the unified engine (kind='manybody'): (conversion,
+    conv) map onto the 'fft'/'direct'/'packed' backends; `backend` pins any
+    registered many-body backend ('auto' -> engine selection).
     """
+    from . import engine as _engine
+
     assert len(xs) == len(Ls) and len(xs) >= 2
-    Ltot = sum(Ls)
-    Lout = Ltot if Lout is None else Lout
-    grids = []
-    for i, (x, L) in enumerate(zip(xs, Ls)):
-        if weights is not None and weights[i] is not None:
-            x = x * expand_degree_weights(weights[i], L).astype(x.dtype)
-        grids.append(sh_to_fourier(x, L, conversion, cdtype))
-    F = _tree_convolve(grids, conv)
-    return fourier_to_sh(F, Ltot, Lout, conversion, rdtype)
+    options = None
+    if backend is None:
+        if conversion == "dense":
+            backend = conv  # 'fft' | 'direct'
+        elif conversion == "packed":
+            backend, options = "packed", {"conv": conv}
+        else:
+            raise ValueError(f"unknown conversion {conversion!r}")
+    elif backend == "auto":
+        backend = None
+    p = _engine.plan(kind="manybody", Ls=tuple(Ls), Lout=Lout,
+                     dtype=_engine._dtype_str(cdtype),
+                     backend=backend, options=options, tune=tune)
+    return p.apply(list(xs), weights).astype(rdtype)
 
 
 def manybody_selfmix(x, L: int, nu: int, Lout: int | None = None, weights=None, **kw):

@@ -22,9 +22,6 @@ boundaries (8 x 128) outside the kernel.
 """
 from __future__ import annotations
 
-import functools
-import math
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -33,40 +30,15 @@ from jax.experimental import pallas as pl
 __all__ = ["gaunt_fused_matrices", "gaunt_fused_pallas"]
 
 
-@functools.lru_cache(maxsize=None)
 def gaunt_fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True):
-    """Numpy (T1 [d1,G], T2 [d2,G], P [G,dout]) — exact, cached.
+    """Numpy (T1 [d1,G], T2 [d2,G], P [G,dout]) — exact.
 
-    When pad_lanes, G is rounded up to a multiple of 128 (extra sample points
-    get zero projection weight — harmless and keeps the MXU aligned).
+    Back-compat alias: the builder (and its cache) lives in the engine's
+    constant-cache module, `repro.core.constants.fused_matrices`.
     """
-    from repro.core.fourier import fourier_to_sh_dense
-    from repro.core.irreps import num_coeffs
-    from repro.core.so3 import real_sph_harm
+    from repro.core.constants import fused_matrices
 
-    Lt = L1 + L2
-    N = 2 * Lt + 2  # > 2*Lt+1: alias-free for the product
-    t = 2 * math.pi * np.arange(N) / N
-    p = 2 * math.pi * np.arange(N) / N
-    tt, pp = np.meshgrid(t, p, indexing="ij")
-    xyz = np.stack([np.sin(tt) * np.cos(pp), np.sin(tt) * np.sin(pp), np.cos(tt)], -1)
-    S = real_sph_harm(max(L1, L2), xyz.reshape(-1, 3))  # [G, dmax]
-    T1 = S[:, : num_coeffs(L1)].T.copy()  # [d1, G]
-    T2 = S[:, : num_coeffs(L2)].T.copy()
-    # projection: F3[u,v] = (1/N^2) sum_g V[g] e^{-i(u t_g + v p_g)}; out = sum F3 z
-    z = fourier_to_sh_dense(Lt, Lout)  # [2Lt+1, 2Lt+1, dout] complex
-    us = np.arange(-Lt, Lt + 1)
-    Et = np.exp(-1j * np.outer(t, us))  # [N, 2Lt+1]
-    Ep = np.exp(-1j * np.outer(p, us))
-    P = np.einsum("au,bv,uvk->abk", Et, Ep, z).real / (N * N)
-    P = P.reshape(N * N, -1)
-    if pad_lanes:
-        G = T1.shape[1]
-        Gp = ((G + 127) // 128) * 128
-        T1 = np.pad(T1, [(0, 0), (0, Gp - G)])
-        T2 = np.pad(T2, [(0, 0), (0, Gp - G)])
-        P = np.pad(P, [(0, Gp - G), (0, 0)])
-    return T1.astype(np.float32), T2.astype(np.float32), P.astype(np.float32)
+    return fused_matrices(L1, L2, Lout, pad_lanes)
 
 
 def _kernel(x1_ref, x2_ref, t1_ref, t2_ref, p_ref, o_ref):
@@ -89,10 +61,11 @@ def gaunt_fused_pallas(
     Leading dims are flattened into a row-block grid; T1/T2/P stay fully
     VMEM-resident per block (they are tiny: L=8 -> T 81x1156 f32 = 375 KiB).
     """
+    from repro.core.constants import fused_matrices
     from repro.core.irreps import num_coeffs
 
     Lout = L1 + L2 if Lout is None else Lout
-    T1, T2, P = (jnp.asarray(a) for a in gaunt_fused_matrices(L1, L2, Lout))
+    T1, T2, P = (jnp.asarray(a) for a in fused_matrices(L1, L2, Lout))
     batch = x1.shape[:-1]
     B = int(np.prod(batch)) if batch else 1
     d1, d2, dout = num_coeffs(L1), num_coeffs(L2), num_coeffs(Lout)

@@ -1,14 +1,15 @@
 """jit'd public wrappers for the Pallas kernels (TPU) with automatic
-interpret-mode execution on CPU (correctness-identical, used by tests)."""
+interpret-mode execution on CPU (correctness-identical, used by tests).
+
+The Gaunt wrappers are thin: they resolve a plan on the unified engine
+(`repro.core.engine`) pinned to the fused backends."""
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from . import ref
-from .gaunt_fused import gaunt_fused_matrices, gaunt_fused_pallas
+from repro.core import engine as _engine
 
 __all__ = ["gaunt_tp_fused", "gaunt_tp_fused_xla", "gaunt_tp_channel_mix",
            "wkv6", "mamba2_ssd"]
@@ -17,18 +18,17 @@ __all__ = ["gaunt_tp_fused", "gaunt_tp_fused_xla", "gaunt_tp_channel_mix",
 @functools.partial(jax.jit, static_argnums=(2, 3, 4, 5))
 def gaunt_tp_fused(x1, x2, L1: int, L2: int, Lout: int | None = None, block_b: int = 256):
     """Fused sample-multiply-project Gaunt tensor product (Pallas kernel)."""
-    return gaunt_fused_pallas(x1, x2, L1, L2, Lout, block_b=block_b)
+    p = _engine.plan(L1, L2, Lout, kind="pairwise", backend="fused_pallas",
+                     options={"block_b": block_b}, requires_grad=False)
+    return p.apply(x1, x2)
 
 
 @functools.partial(jax.jit, static_argnums=(2, 3, 4))
 def gaunt_tp_fused_xla(x1, x2, L1: int, L2: int, Lout: int | None = None):
     """Same math lowered through plain XLA (baseline for the kernel & the
     path used inside scanned model code where pallas_call is not needed)."""
-    Lout = L1 + L2 if Lout is None else Lout
-    T1, T2, P = (jnp.asarray(a) for a in gaunt_fused_matrices(L1, L2, Lout))
-    return ref.gaunt_fused_ref(
-        x1.reshape(-1, x1.shape[-1]), x2.reshape(-1, x2.shape[-1]), T1, T2, P
-    ).reshape(*x1.shape[:-1], P.shape[-1])
+    p = _engine.plan(L1, L2, Lout, kind="pairwise", backend="fused_xla")
+    return p.apply(x1, x2)
 
 
 def wkv6(r, k, v, w, u, chunk: int = 64):
@@ -60,9 +60,5 @@ def gaunt_tp_channel_mix(x1, x2, w_mix, L1: int, L2: int, Lout: int | None = Non
 
     x1 [..., C1, d1], x2 [..., C2, d2], w_mix [C1, C2, E] -> [..., E, dout].
     """
-    Lout = L1 + L2 if Lout is None else Lout
-    T1, T2, P = (jnp.asarray(a) for a in gaunt_fused_matrices(L1, L2, Lout))
-    V1 = x1 @ T1  # [..., C1, G]
-    V2 = x2 @ T2  # [..., C2, G]
-    V = jnp.einsum("...cg,...dg,cde->...eg", V1, V2, w_mix.astype(V1.dtype))
-    return V @ P
+    p = _engine.plan(L1, L2, Lout, kind="channel_mix", backend="fused_xla")
+    return p.apply(x1, x2, w_mix)

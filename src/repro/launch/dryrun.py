@@ -151,6 +151,8 @@ def dryrun_cell(arch: str, shape_name: str, multi_pod: bool, tiny: bool = False,
 
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax < 0.5 returns a per-device list
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = parse_collectives(hlo, body_multipliers_for(cfg))
     n_dev = int(np.prod(mesh.devices.shape))

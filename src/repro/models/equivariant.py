@@ -16,20 +16,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.gaunt_ff import EquivariantConfig
-from repro.core.cg import cg_full_tensor_product, gaunt_einsum_reference
+from repro.core.cg import cg_full_tensor_product
 from repro.core.conv import EquivariantConv
 from repro.core.gaunt import GauntTensorProduct, expand_degree_weights
 from repro.core.irreps import l_array, num_coeffs
 from repro.core.manybody import manybody_selfmix
 from repro.core.so3 import real_sph_harm_jax
-from repro.kernels.ops import gaunt_tp_fused_xla
 
 __all__ = ["EquivariantConfig", "MaceGaunt", "SegnnNBody", "SelfmixLayer"]
 
@@ -85,12 +82,21 @@ def _pair_geometry(pos, cutoff):
     return rhat, dist, mask
 
 
+# tp_impl -> engine backend (None = historical spectral default mapping,
+# 'auto' = engine selection); anything not listed falls back to CG.
+_TP_BACKEND = {"gaunt": None, "gaunt_fused": "fused_xla", "gaunt_auto": "auto"}
+
+
 def _tp(cfg: EquivariantConfig, L1, L2, Lout):
-    if cfg.tp_impl == "gaunt":
-        tp = GauntTensorProduct(L1, L2, Lout)
-        return tp
-    if cfg.tp_impl == "gaunt_fused":
-        return lambda a, b: gaunt_tp_fused_xla(a, b, L1, L2, Lout)
+    """Resolve the configured tensor-product impl to an engine plan.
+
+    tp_impl: 'gaunt' (historical spectral default), 'gaunt_fused'
+    (collocation backend), 'gaunt_auto' (engine cost-model pick among
+    grad-supporting backends), or anything else -> the CG baseline.
+    """
+    if cfg.tp_impl in _TP_BACKEND:
+        tp = GauntTensorProduct(L1, L2, Lout, backend=_TP_BACKEND[cfg.tp_impl])
+        return lambda a, b: tp(a, b)
     return lambda a, b: cg_full_tensor_product(a, b, L1, L2, Lout)
 
 
@@ -273,14 +279,9 @@ class SelfmixLayer:
 
     def __call__(self, params, x):
         L = self.L
-        if self.tp_impl == "gaunt":
-            tp = GauntTensorProduct(L, L, L)
+        if self.tp_impl in _TP_BACKEND:
+            tp = GauntTensorProduct(L, L, L, backend=_TP_BACKEND[self.tp_impl])
             y = tp(x, x, w1=params["w1"], w2=params["w2"], w3=params["w3"][: L + 1])
-        elif self.tp_impl == "gaunt_fused":
-            xw = x * expand_degree_weights(params["w1"], L)
-            yw = x * expand_degree_weights(params["w2"], L)
-            y = gaunt_tp_fused_xla(xw, yw, L, L, L) * expand_degree_weights(
-                params["w3"][: L + 1], L)
         else:  # cg baseline
             xw = x * expand_degree_weights(params["w1"], L)
             yw = x * expand_degree_weights(params["w2"], L)

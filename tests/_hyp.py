@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim: property tests degrade to clean skips.
+
+``from _hyp import given, settings, st`` instead of importing hypothesis
+directly.  When hypothesis is installed the real decorators come through
+untouched; when it is missing, @given marks the test skipped (with a clear
+reason) and the strategy stubs accept any construction without error, so
+module collection never fails.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kw):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kw):
+        def deco(f):
+            return f
+
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction (st.integers(...).filter(...))."""
+
+        def __call__(self, *a, **kw):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StrategyStub()

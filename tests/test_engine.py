@@ -1,0 +1,200 @@
+"""The unified Gaunt engine: cross-backend equivalence against the complex128
+numpy oracle, plan/constant caching, capability filtering, and autotune."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constants, engine
+from repro.core.cg import gaunt_einsum_reference
+from repro.core.gaunt import gaunt_product_numpy
+from repro.core.irreps import num_coeffs
+from repro.core.so3 import real_sph_harm_jax
+
+PAIRWISE = engine.available_backends("pairwise", requires_grad=False)
+CONV = engine.available_backends("conv_filter", requires_grad=False)
+MANYBODY = engine.available_backends("manybody", requires_grad=False)
+CHANNEL_MIX = engine.available_backends("channel_mix", requires_grad=False)
+
+# the full grid the acceptance criteria name: degrees up to L=6
+GRID = [(1, 1, 2), (2, 3, 5), (4, 2, 3), (3, 3, 2), (6, 6, 12), (6, 4, 6)]
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype=dtype)
+
+
+def test_registry_is_complete():
+    assert set(PAIRWISE) == {"dense_einsum", "fft", "direct", "packed",
+                             "fused_xla", "fused_pallas"}
+    assert set(CONV) == set(PAIRWISE) | {"escn_aligned"}
+    assert set(MANYBODY) == {"dense_einsum", "fft", "direct", "packed"}
+    assert set(CHANNEL_MIX) == {"dense_einsum", "fused_xla"}
+
+
+@pytest.mark.parametrize("backend", PAIRWISE)
+@pytest.mark.parametrize("L1,L2,Lout", GRID)
+def test_pairwise_backends_vs_numpy_oracle(backend, L1, L2, Lout):
+    x1 = np.random.default_rng(1).normal(size=(4, num_coeffs(L1))).astype(np.float32)
+    x2 = np.random.default_rng(2).normal(size=(4, num_coeffs(L2))).astype(np.float32)
+    ref = gaunt_product_numpy(x1, x2, L1, L2, Lout)
+    p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False)
+    got = np.asarray(p.apply(jnp.asarray(x1), jnp.asarray(x2)))
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(got, ref, atol=1e-4 * scale)
+
+
+@pytest.mark.parametrize("batch", [(), (5,), (2, 3)])
+@pytest.mark.parametrize("backend", PAIRWISE)
+def test_pairwise_backends_batch_shapes(backend, batch):
+    L1, L2, Lout = 2, 2, 3
+    x1 = np.random.default_rng(3).normal(size=batch + (num_coeffs(L1),)).astype(np.float32)
+    x2 = np.random.default_rng(4).normal(size=batch + (num_coeffs(L2),)).astype(np.float32)
+    ref = gaunt_product_numpy(x1, x2, L1, L2, Lout)
+    p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False)
+    got = np.asarray(p.apply(jnp.asarray(x1), jnp.asarray(x2)))
+    assert got.shape == batch + (num_coeffs(Lout),)
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend",
+                         engine.available_backends("pairwise", dtype="bfloat16",
+                                                   requires_grad=False))
+def test_pairwise_backends_bfloat16(backend):
+    L1, L2, Lout = 2, 2, 4
+    x1 = _rand((8, num_coeffs(L1)), 5, jnp.bfloat16)
+    x2 = _rand((8, num_coeffs(L2)), 6, jnp.bfloat16)
+    ref = gaunt_product_numpy(np.asarray(x1, np.float32), np.asarray(x2, np.float32),
+                              L1, L2, Lout)
+    p = engine.plan(L1, L2, Lout, dtype="bfloat16", backend=backend,
+                    requires_grad=False)
+    got = np.asarray(p.apply(x1, x2), dtype=np.float32)
+    np.testing.assert_allclose(got, ref, atol=7e-2)
+
+
+@pytest.mark.parametrize("backend", PAIRWISE)
+def test_pairwise_backends_weight_hooks(backend):
+    L1, L2, Lout = 2, 3, 4
+    x1 = _rand((3, num_coeffs(L1)), 7)
+    x2 = _rand((3, num_coeffs(L2)), 8)
+    w1 = _rand((3, L1 + 1), 9)
+    w2 = _rand((3, L2 + 1), 10)
+    w3 = _rand((3, Lout + 1), 11)
+    from repro.core.gaunt import expand_degree_weights
+
+    ref = gaunt_einsum_reference(
+        x1 * expand_degree_weights(w1, L1), x2 * expand_degree_weights(w2, L2),
+        L1, L2, Lout) * expand_degree_weights(w3, Lout)
+    p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False)
+    got = p.apply(x1, x2, w1, w2, w3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", CONV)
+def test_conv_filter_backends_vs_oracle(backend):
+    L1, L2, Lout = 2, 2, 3
+    x = _rand((10, num_coeffs(L1)), 12)
+    v = np.random.default_rng(13).normal(size=(10, 3))
+    r = jnp.asarray(v / np.linalg.norm(v, axis=-1, keepdims=True), jnp.float32)
+    filt = real_sph_harm_jax(L2, r).astype(jnp.float32)
+    ref = gaunt_einsum_reference(x, filt, L1, L2, Lout)
+    p = engine.plan(L1, L2, Lout, kind="conv_filter", backend=backend,
+                    requires_grad=False)
+    got = p.apply(x, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=5e-4)
+
+
+@pytest.mark.parametrize("backend", MANYBODY)
+def test_manybody_backends_vs_fold(backend):
+    L, nu = 2, 3
+    xs = [_rand((4, num_coeffs(L)), 20 + i) for i in range(nu)]
+    acc = gaunt_einsum_reference(xs[0], xs[1], L, L)
+    acc = gaunt_einsum_reference(acc, xs[2], 2 * L, L)
+    p = engine.plan(kind="manybody", Ls=(L,) * nu, backend=backend)
+    got = p.apply(xs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc), atol=1e-3)
+
+
+@pytest.mark.parametrize("backend", CHANNEL_MIX)
+def test_channel_mix_backends_vs_loop(backend):
+    L1, L2, Lout = 2, 1, 2
+    C1, C2, E = 3, 2, 4
+    x1 = _rand((2, C1, num_coeffs(L1)), 30)
+    x2 = _rand((2, C2, num_coeffs(L2)), 31)
+    w = _rand((C1, C2, E), 32)
+    ref = jnp.einsum(
+        "cde,...cdk->...ek", w,
+        jnp.stack([jnp.stack([gaunt_einsum_reference(x1[:, c], x2[:, d], L1, L2, Lout)
+                              for d in range(C2)], axis=1)
+                   for c in range(C1)], axis=1))
+    p = engine.plan(L1, L2, Lout, kind="channel_mix", backend=backend)
+    got = p.apply(x1, x2, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4)
+
+
+def test_plan_cache_hit_and_constants_built_once():
+    """Planning the same op twice returns the same object and rebuilds no
+    constants; applying it twice rebuilds no constants either."""
+    eng = engine.get_engine()
+    # unusual degrees so earlier tests have not warmed these cache entries
+    p1 = eng.plan(5, 1, 4, backend="fft")
+    stats_after_first = constants.cache_stats()
+    p2 = eng.plan(5, 1, 4, backend="fft")
+    assert p1 is p2
+    x1 = _rand((2, num_coeffs(5)), 40)
+    x2 = _rand((2, num_coeffs(1)), 41)
+    jax.block_until_ready(p2.apply(x1, x2))
+    jax.block_until_ready(p2.apply(x1, x2))
+    stats_after_use = constants.cache_stats()
+    misses_first = {k: v[1] for k, v in stats_after_first.items()}
+    misses_use = {k: v[1] for k, v in stats_after_use.items()}
+    assert misses_use == misses_first, "apply() rebuilt constants the plan owns"
+
+
+def test_heuristic_selection_scales_with_batch():
+    """Auto selection runs and returns an eligible backend at every size."""
+    for B in (1, 64, 4096):
+        p = engine.plan(4, 4, 4, batch_hint=B)
+        assert p.backend in engine.available_backends("pairwise", requires_grad=True)
+
+
+def test_grad_capability_filtering():
+    # fused_pallas has no VJP: requires_grad must exclude it...
+    with pytest.raises(ValueError):
+        engine.plan(2, 2, 4, backend="fused_pallas", requires_grad=True)
+    # ...and auto selection under grad must still differentiate fine
+    p = engine.plan(2, 2, 4, batch_hint=16)
+    x1 = _rand((16, num_coeffs(2)), 50)
+    x2 = _rand((16, num_coeffs(2)), 51)
+    g = jax.grad(lambda a, b: jnp.sum(p.apply(a, b) ** 2))(x1, x2)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_measured_autotune_caches_choice():
+    eng = engine.GauntEngine()
+    key_kwargs = dict(batch_hint=32, tune="measure", requires_grad=False)
+    p1 = eng.plan(1, 1, 2, **key_kwargs)
+    assert p1.backend in PAIRWISE
+    assert len(eng._measured) == 1
+    p2 = eng.plan(1, 1, 2, **key_kwargs)
+    assert p2 is p1
+    assert len(eng._measured) == 1  # second plan reused the measurement
+
+
+def test_selection_rule_rejected():
+    with pytest.raises(ValueError):
+        engine.plan(2, 2, 5)  # Lout > L1+L2
+
+
+def test_jit_containing_plan_and_apply():
+    """Plans can be created and applied inside a jit trace (wrappers do)."""
+
+    @jax.jit
+    def f(a, b):
+        p = engine.plan(2, 2, 4, backend="fused_xla")
+        return p.apply(a, b)
+
+    x1 = _rand((4, num_coeffs(2)), 60)
+    x2 = _rand((4, num_coeffs(2)), 61)
+    ref = gaunt_einsum_reference(x1, x2, 2, 2)
+    np.testing.assert_allclose(np.asarray(f(x1, x2)), np.asarray(ref), atol=2e-4)

@@ -2,7 +2,7 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or clean skips when absent
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.sharding import (

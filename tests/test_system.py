@@ -75,7 +75,9 @@ def test_dryrun_tiny_cell_subprocess():
         "M.make_production_mesh = lambda multi_pod=False: jax.make_mesh("
         "(2,2,2) if multi_pod else (4,2), ('pod','data','model') if multi_pod"
         " else ('data','model'),"
-        "axis_types=(jax.sharding.AxisType.Auto,)*(3 if multi_pod else 2));"
+        "**M._axis_type_kwargs(3 if multi_pod else 2));"
+        # dryrun binds the name at import — patch its reference too
+        "D.make_production_mesh = M.make_production_mesh;"
         "r1 = D.dryrun_cell('qwen2-0.5b','train_4k', False, tiny=True);"
         "r2 = D.dryrun_cell('qwen2-0.5b','decode_32k', True, tiny=True);"
         "assert r1['status']=='ok' and r2['status']=='ok', (r1, r2);"

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # hypothesis, or clean skips when absent
 
 from repro.config import TrainConfig, get_config
 from repro.checkpoint import CheckpointManager
