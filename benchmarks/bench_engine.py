@@ -22,6 +22,66 @@ def _rand(shape, seed):
     return jnp.asarray(np.random.default_rng(seed).normal(size=shape), jnp.float32)
 
 
+def _time_many(fns_args, iters: int = 10, warmup: int = 3) -> float:
+    """Median microseconds for one sweep over [(fn, args), ...] — the looped
+    dispatch pattern plan_batch replaces."""
+    import time
+
+    def sweep():
+        outs = [fn(*args) for fn, args in fns_args]
+        jax.block_until_ready(outs)
+
+    for _ in range(warmup):
+        sweep()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        sweep()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def run_batched(backend: str = "auto", csv=True):
+    """Batched-vs-looped: one plan_batch invocation vs per-plan dispatch
+    loops, for (a) many same-degree items and (b) a ragged mixed-degree set."""
+    from .common import record
+
+    records = []
+    eng = engine.get_engine()
+    be = None if backend == "auto" else backend
+    # (name, items, pinned backend or None=CLI choice): tiny items are
+    # dispatch-bound (batching amortizes call overhead); the spectral
+    # 'direct' pipeline is many-small-ops per call (batching fuses them);
+    # the ragged set exercises multi-bucket slicing
+    workloads = [
+        ("tiny_x32_B4", [(2, 2, 4, 4)] * 32, be),
+        ("direct_x16_B64", [(2, 2, 4, 64)] * 16, be or "direct"),
+        ("mixedL_ragged", [(1, 1, 2, 64), (2, 2, 4, 64), (3, 3, 6, 64),
+                           (2, 2, 4, 32)] * 4, be),
+    ]
+    for name, items, be in workloads:
+        ins = [(_rand((n, num_coeffs(L1)), 2 * i),
+                _rand((n, num_coeffs(L2)), 2 * i + 1))
+               for i, (L1, L2, Lout, n) in enumerate(items)]
+        # looped: one jitted dispatch per item (the pre-batching consumer)
+        fns_args = []
+        for (L1, L2, Lout, n), args in zip(items, ins):
+            p = eng.plan(L1, L2, Lout, batch_hint=n, backend=be,
+                         requires_grad=False)
+            fns_args.append((jax.jit(lambda a, b, p=p: p.apply(a, b)), args))
+        t_loop = _time_many(fns_args)
+        # batched: one fused invocation per degree bucket
+        bp = eng.plan_batch(items, backend=be, requires_grad=False)
+        t_batch = _time_many([(lambda: jax.block_until_ready(bp.apply(ins)), ())])
+        record(records, f"engine_batched_{name}", t_batch, echo=csv,
+               looped_us=round(t_loop, 1),
+               speedup_vs_looped=round(t_loop / t_batch, 2),
+               buckets=len(bp.buckets),
+               backends=",".join(sorted({b.plan.backend for b in bp.buckets})))
+    return records
+
+
 def run(L_list=(1, 2, 3, 4, 6), B_list=(64, 1024), backend: str = "auto", csv=True):
     records = []
     eng = engine.get_engine()

@@ -42,6 +42,7 @@ def main() -> None:
             L_list=(1, 2, 3, 6) if args.fast else (1, 2, 3, 4, 6, 8),
             B_list=(64, 1024) if args.fast else (64, 1024, 8192),
             backend=args.backend),
+        "engine_batched": lambda: bench_engine.run_batched(backend=args.backend),
         "fig1a": lambda: bench_feature_interaction.run(
             L_list=(1, 2, 3, 4) if args.fast else (1, 2, 3, 4, 5, 6, 8),
             backend=args.backend),

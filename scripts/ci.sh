@@ -8,8 +8,15 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "=== tier-1 tests ==="
-python -m pytest -x -q "$@"
+echo "=== tier-1 tests (conformance files deferred to their own tier) ==="
+python -m pytest -x -q \
+  --ignore=tests/test_equivariance.py --ignore=tests/test_engine_transforms.py "$@"
+
+echo "=== conformance tier: equivariance + transform/batched-plan parity ==="
+python -m pytest -q tests/test_equivariance.py tests/test_engine_transforms.py
+
+echo "=== batched-bench smoke (batched vs looped dispatch) ==="
+python -m benchmarks.run --fast --only engine_batched --json ''
 
 echo "=== fast benchmarks (--backend auto -> BENCH_gaunt.json) ==="
 python -m benchmarks.run --fast --backend auto --json BENCH_gaunt.json
@@ -21,7 +28,10 @@ d = json.load(open("BENCH_gaunt.json"))
 recs = d["records"]
 print(f"{len(recs)} records; engine picks:")
 for r in recs:
-    if r["name"].startswith("engine_"):
+    if r["name"].startswith("engine_batched"):
+        print(f"  {r['name']:32s} {r['us']:>10.1f} us  "
+              f"(looped {r.get('looped_us')} us, x{r.get('speedup_vs_looped')})")
+    elif r["name"].startswith("engine_"):
         print(f"  {r['name']:32s} {r['us']:>10.1f} us  -> {r.get('backend')}")
 EOF
 echo "CI OK"

@@ -19,6 +19,10 @@ class EquivariantConfig:
     tp_impl: str = "gaunt"  # gaunt | cg | gaunt_fused
     conv_impl: str = "escn"  # escn | general
     hidden: int = 128
+    # batched-execution knob (engine.plan_batch, DESIGN.md §5); donation is
+    # NOT a config knob — model loops reuse operand buffers across layers,
+    # so donating them is only safe for callers that own buffer lifetimes
+    shard_data: bool = False       # shard rows over the activation mesh's data axes
 
 
 gaunt_mace_ff = EquivariantConfig(

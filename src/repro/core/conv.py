@@ -86,7 +86,12 @@ class EquivariantConv:
     """Gaunt-accelerated equivariant convolution  (x (x) Y(rhat)) with the
     paper's w_{l1} w_{l2} w_l weight reparameterization.
 
-    Thin wrapper over the unified engine (kind='conv_filter').
+    Thin wrapper over the unified engine (kind='conv_filter'), routed through
+    a batched plan: the edge leading dims ([n, n, C] in the models) are
+    flattened to one row axis and executed as a single fused invocation, with
+    optional operand-buffer donation (`donate`) and sharded dispatch over the
+    mesh's data axes (`shard_spec`, see engine.ShardSpec / DESIGN.md §5).
+
     method='escn' -> the 'escn_aligned' backend (rotation-alignment sparsity,
     default); method='general' -> a generic pairwise backend with the SH
     filter materialized; method='auto' -> engine selection.  `backend` pins
@@ -96,7 +101,8 @@ class EquivariantConv:
     def __init__(self, L1: int, L2: int, Lout: int | None = None, method: str = "escn",
                  cdtype=jnp.complex64, rdtype=jnp.float32,
                  backend: str | None = None, batch_hint: int | None = None,
-                 tune: str = "heuristic"):
+                 tune: str = "heuristic", donate: bool = False,
+                 shard_spec=None):
         from . import engine as _engine
 
         self.L1, self.L2 = L1, L2
@@ -113,16 +119,23 @@ class EquivariantConv:
                 backend = None
             else:
                 raise ValueError(f"unknown method {method!r}")
-        self._plan = _engine.plan(
-            L1, L2, self.Lout, kind="conv_filter", batch_hint=batch_hint,
-            dtype=dtype, backend=backend, tune=tune,
+        self._bplan = _engine.plan_batch(
+            [_engine.BatchItem(L1=L1, L2=L2, Lout=self.Lout, size=batch_hint)],
+            kind="conv_filter", dtype=dtype, backend=backend, tune=tune,
+            donate=donate, shard_spec=shard_spec,
         )
+        self._plan = self._bplan.buckets[0].plan
         self.backend = self._plan.backend
 
     @property
     def plan(self):
         return self._plan
 
+    @property
+    def batched_plan(self):
+        return self._bplan
+
     def __call__(self, x, rhat, w1=None, w2=None, w3=None):
         """x [..., (L1+1)^2], rhat [..., 3] -> [..., (Lout+1)^2]."""
-        return self._plan.apply(x, rhat, w1, w2, w3).astype(self.rdtype)
+        out = self._bplan.apply([(x, rhat)], weights=[(w1, w2, w3)])[0]
+        return out.astype(self.rdtype)

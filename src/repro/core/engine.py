@@ -27,6 +27,15 @@ central :mod:`repro.core.constants` cache.
 Thin public wrappers (`GauntTensorProduct`, `EquivariantConv`,
 `manybody_gaunt_product`, `gaunt_tp_channel_mix`, the model `_tp` hook) keep
 their historical signatures and route here.
+
+Batched execution (DESIGN.md §5): ``engine.plan_batch(items, ...)`` buckets a
+ragged multi-degree workload (items sharing an (L1, L2, Lout) signature) into
+one padded fused invocation per bucket, with operand buffer donation on the
+hot path and sharding-aware dispatch over the mesh's data axes:
+
+    bp  = engine.plan_batch([(2, 2, 4, nE), (1, 1, 2, nN)], donate=True,
+                            shard_spec=ShardSpec(mode="shard_map"))
+    o1, o2 = bp.apply([(x1, x2), (a, b)])
 """
 from __future__ import annotations
 
@@ -46,12 +55,16 @@ __all__ = [
     "PlanKey",
     "Backend",
     "GauntPlan",
+    "BatchItem",
+    "ShardSpec",
+    "BatchedGauntPlan",
     "GauntEngine",
     "register_backend",
     "available_backends",
     "expand_degree_weights",
     "get_engine",
     "plan",
+    "plan_batch",
 ]
 
 KINDS = ("pairwise", "conv_filter", "manybody", "channel_mix")
@@ -61,10 +74,21 @@ _CDTYPE = {"float32": "complex64", "bfloat16": "complex64", "float64": "complex1
 
 
 def _dtype_str(dtype) -> str:
-    """Normalize any dtype spec (incl. the wrappers' cdtype) to a plan key."""
+    """Normalize any dtype spec (incl. the wrappers' cdtype) to a plan key.
+
+    float64/complex128 requests are demoted to float32 when jax runs with
+    x64 disabled (the default): arrays would silently degrade to f32 anyway,
+    and keying plans on the *requested* precision would hash
+    otherwise-identical plans to different cache entries and build complex128
+    constants that every apply immediately downcasts.
+    """
     s = jnp.dtype(dtype).name
     if s.startswith("complex"):
-        return "float64" if s == "complex128" else "float32"
+        s = "float64" if s == "complex128" else "float32"
+    if s == "float64" and not jax.config.jax_enable_x64:
+        return "float32"
+    if s not in _RDTYPE:
+        raise ValueError(f"unsupported dtype {s!r} (expected one of {sorted(_RDTYPE)})")
     return s
 
 
@@ -136,7 +160,9 @@ def register_backend(backend: Backend) -> Backend:
 
 def available_backends(kind: str = "pairwise", dtype: str = "float32",
                        requires_grad: bool = True) -> list[str]:
-    key = PlanKey(1, 1, 2, kind=kind, dtype=dtype)
+    # same normalization as plan(): a float64 query on an x64-disabled runtime
+    # must see the float32 capability set, not a phantom-precision one
+    key = PlanKey(1, 1, 2, kind=kind, dtype=_dtype_str(dtype))
     return [b.name for b in _REGISTRY.values() if b.eligible(key, requires_grad)]
 
 
@@ -152,6 +178,386 @@ class GauntPlan:
         k = self.key
         return (f"{k.kind}(L1={k.L1}, L2={k.L2}, Lout={k.Lout}, "
                 f"dtype={k.dtype}, batch_hint={k.batch_hint}) -> {self.backend}")
+
+
+# --------------------------------------------------------------------------
+# batched execution (DESIGN.md §5): ragged multi-degree workloads in one
+# padded invocation per degree bucket, with donation + sharded dispatch
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchItem:
+    """One entry of a batched workload: a degree signature + expected rows.
+
+    ``size`` is a planning hint (feeds the bucket's batch_hint); the actual
+    row count comes from the arrays at apply time.  manybody items carry
+    ``Ls`` instead of (L1, L2).
+    """
+
+    L1: int | None = None
+    L2: int | None = None
+    Lout: int | None = None
+    Ls: tuple | None = None
+    size: int | None = None
+    options: tuple = ()
+
+    def signature(self) -> tuple:
+        return (self.L1, self.L2, self.Lout, self.Ls, self.options)
+
+
+def _as_batch_item(it) -> BatchItem:
+    if isinstance(it, BatchItem):
+        return it
+    if isinstance(it, dict):
+        d = dict(it)
+        if "options" in d:
+            d["options"] = tuple(sorted(dict(d["options"]).items()))
+        if "Ls" in d and d["Ls"] is not None:
+            d["Ls"] = tuple(int(L) for L in d["Ls"])
+        return BatchItem(**d)
+    it = tuple(it)
+    if len(it) == 3:
+        return BatchItem(L1=it[0], L2=it[1], Lout=it[2])
+    if len(it) == 4:
+        return BatchItem(L1=it[0], L2=it[1], Lout=it[2], size=it[3])
+    raise ValueError(f"batch item {it!r}: expected (L1, L2, Lout[, size]), "
+                     "a dict, or a BatchItem")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How a batched apply is laid out over a device mesh.
+
+    mesh : a jax Mesh, or None to use the launcher-registered activation
+           mesh (``distributed.sharding.set_activation_mesh``); with neither,
+           the spec is inert and execution stays single-device.
+    axes : mesh axis names eligible to shard the row axis (dim0 of every
+           flattened operand); the subset present in the mesh is used.
+    mode : 'constraint' — pjit-style ``with_sharding_constraint`` on operands
+           and outputs (SPMD partitioner does the rest); 'shard_map' — the
+           bucket body runs per-shard under ``shard_map`` (row-parallel by
+           construction, so no collectives are needed).
+    """
+
+    mesh: object = None
+    axes: tuple = ("pod", "data")
+    mode: str = "constraint"
+
+    def resolve(self):
+        """-> (mesh, dp_axes) or (None, ()) when no mesh is available."""
+        from repro.distributed import sharding as _sh  # lazy: keep core light
+
+        mesh = self.mesh if self.mesh is not None else _sh.get_activation_mesh()
+        if mesh is None:
+            return None, ()
+        axes = _sh.dp_axes(mesh, tuple(self.axes))
+        return mesh, axes
+
+
+def _split_leads(leads: list) -> tuple:
+    """Split operand leading shapes into (row prefix, inner broadcast dims).
+
+    The *prefix* is the longest run of leading dims on which every operand
+    agrees exactly (after numpy-style right-aligned rank padding) — those
+    flatten into the row axis.  The remaining *inner* dims are where the
+    operands exploit broadcasting (e.g. one edge direction against C channel
+    features); they pass through to the backend, which broadcasts natively —
+    flattening them instead would materialize the broadcast and repeat
+    shared per-row work (the eSCN Wigner blocks) per inner element.
+    """
+    full = jnp.broadcast_shapes(*leads)
+    n = len(full)
+    padded = [(1,) * (n - len(ld)) + tuple(ld) for ld in leads]
+    k = 0
+    while k < n and all(p[k] == full[k] for p in padded):
+        k += 1
+    return full[:k], full[k:]
+
+
+def _n_operands(kind: str, item: BatchItem) -> int:
+    return len(item.Ls) if kind == "manybody" else 2
+
+
+def _weight_degrees(kind: str, item: BatchItem) -> tuple:
+    """Per-weight-slot packed width (L+1) for an item's apply signature."""
+    if kind == "manybody":
+        return tuple(L + 1 for L in item.Ls)
+    return (item.L1 + 1, item.L2 + 1, item.Lout + 1)
+
+
+def _bucket_runner(plan: GauntPlan, kind: str) -> Callable:
+    """The (ops, ws) -> out body executed once per bucket invocation."""
+    if kind == "manybody":
+        def run(ops, ws):
+            ws_list = list(ws)
+            if all(w is None for w in ws_list):
+                ws_list = None
+            return plan.apply(list(ops), ws_list)
+        return run
+
+    def run(ops, ws):
+        return plan.apply(ops[0], ops[1], *ws)
+
+    return run
+
+
+def _bucket_batch_body(run: Callable, kind: str, item: BatchItem,
+                       granularity: int, rd, item_ops, item_ws):
+    """Trace-time batching: flatten/broadcast/concat/pad the per-item
+    operands, execute the core once, slice per-item results back out.
+
+    Layout: each item's leading dims split into (row prefix, inner broadcast
+    dims) via `_split_leads`; rows concatenate across items and tail-pad to
+    `granularity`.  All of this is shape logic + cheap jnp ops that XLA fuses
+    into the single bucket dispatch.
+    """
+    n_ops = _n_operands(kind, item)
+    wdeg = _weight_degrees(kind, item)
+    # pass 1: per-item lead splits; concatenation needs identical post-row
+    # shapes, so if items disagree on inner dims fall back to a full flatten
+    splits = []
+    for ops_i, ws_i in zip(item_ops, item_ws):
+        prefix, inner = _split_leads([jnp.shape(x)[:-1] for x in ops_i])
+        # weights usually broadcast INTO prefix+inner (they are materialized
+        # per row below).  A weight whose lead extends BEYOND the operands'
+        # broadcast shape broadens the output instead (plan.apply contract:
+        # 'w [..., L+1]'), which the row layout cannot express — degrade the
+        # item to all-inner (rows=1) and let the backend broadcast natively.
+        w_leads = [jnp.shape(w)[:-1] for w in ws_i if w is not None]
+        pi = prefix + inner
+        if any(jnp.broadcast_shapes(wl, pi) != pi for wl in w_leads):
+            prefix, inner = (), jnp.broadcast_shapes(pi, *w_leads)
+        splits.append((prefix, inner))
+    if len({inner for _, inner in splits}) > 1:
+        splits = [(prefix + inner, ()) for prefix, inner in splits]
+    prefixes, inner_leads, rows = [], [], []
+    ops_flat = [[] for _ in range(n_ops)]   # per operand: per item [rows, *inner, k]
+    ws_used = [any(ws[j] is not None for ws in item_ws)
+               for j in range(len(wdeg))]
+    for t, ops_i in enumerate(item_ops):
+        prefix, inner = splits[t]
+        r = int(np.prod(prefix)) if prefix else 1
+        prefixes.append(prefix)
+        inner_leads.append(inner)
+        rows.append(r)
+        np_ = len(prefix)
+        rank = np_ + len(inner)
+        for j, x in enumerate(ops_i):
+            shp = jnp.shape(x)
+            pl = (1,) * (rank - (len(shp) - 1)) + tuple(shp[:-1])
+            x = jnp.reshape(x, pl + shp[-1:])
+            x = jnp.broadcast_to(x, prefix + pl[np_:] + shp[-1:])
+            ops_flat[j].append(jnp.reshape(x, (r,) + pl[np_:] + shp[-1:]))
+    if len(item_ops) > 1:
+        # same broadcast inner dims, but an operand may still carry an
+        # un-materialized size-1 inner dim on one item only
+        for col in ops_flat:
+            if len({jnp.shape(x)[1:-1] for x in col}) > 1:
+                for t, x in enumerate(col):
+                    col[t] = jnp.broadcast_to(
+                        x, (rows[t],) + inner_leads[t] + (jnp.shape(x)[-1],))
+    # weights: flatten each used slot per item (ones where absent) so the
+    # concatenation stays row-aligned with the operands
+    ws_cat = []
+    for j, used in enumerate(ws_used):
+        if not used:
+            ws_cat.append(None)
+            continue
+        cols = []
+        for t, ws in enumerate(item_ws):
+            w = ws[j]
+            if w is None:
+                cols.append(jnp.ones((rows[t],) + inner_leads[t] + (wdeg[j],),
+                                     dtype=rd))
+            else:
+                w = jnp.broadcast_to(w, prefixes[t] + inner_leads[t] + (wdeg[j],))
+                cols.append(jnp.reshape(
+                    w, (rows[t],) + inner_leads[t] + (wdeg[j],)).astype(rd))
+        ws_cat.append(jnp.concatenate(cols, axis=0))
+    ops_cat = [jnp.concatenate(col, axis=0) for col in ops_flat]
+    total = sum(rows)
+    pad = -(-total // granularity) * granularity - total
+    if pad:
+        def pad_rows(x, operand):
+            # conv_filter directions pad with e_z, not zeros —
+            # align_rotation of a zero vector is NaN
+            if kind == "conv_filter" and operand == 1:
+                ez = jnp.broadcast_to(jnp.asarray([0.0, 0.0, 1.0], x.dtype),
+                                      (pad,) + x.shape[1:])
+                return jnp.concatenate([x, ez], axis=0)
+            return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+
+        ops_cat = [pad_rows(x, j) for j, x in enumerate(ops_cat)]
+        ws_cat = [None if w is None else
+                  jnp.pad(w, [(0, pad)] + [(0, 0)] * (w.ndim - 1),
+                          constant_values=1.0)
+                  for w in ws_cat]
+    out = run(tuple(ops_cat), tuple(ws_cat))
+    res, off = [], 0
+    for t in range(len(item_ops)):
+        res.append(jnp.reshape(out[off:off + rows[t]],
+                               prefixes[t] + out.shape[1:]))
+        off += rows[t]
+    return tuple(res)
+
+
+def _make_bucket_fn(plan: GauntPlan, kind: str, item: BatchItem, donate: bool,
+                    mesh, dp: tuple, mode: str, granularity: int) -> Callable:
+    """Jit the whole bucket step: flatten/concat/pad -> core -> slice out.
+
+    The pre/post layout work traces into the SAME jitted call as the backend
+    math, so one bucket invocation is one dispatch — otherwise the eager
+    reshapes/concats would cost more dispatches than the loop being replaced.
+    The concatenated row layout entering the core is uniform [rows, *inner,
+    k], so the partition spec is the row spec P(dp) with trailing dims
+    replicated.
+    """
+    run = _bucket_runner(plan, kind)
+    if mesh is not None and dp:
+        from jax.sharding import NamedSharding
+
+        from repro.distributed.sharding import row_pspec
+
+        spec = row_pspec(2, dp)
+        if mode == "shard_map":
+            from jax.experimental.shard_map import shard_map
+
+            run = shard_map(run, mesh=mesh, in_specs=(spec, spec),
+                            out_specs=spec)
+        elif mode == "constraint":
+            ns = NamedSharding(mesh, spec)
+            inner = run
+
+            def run(ops, ws):  # noqa: F811 — deliberate wrap
+                con = lambda a: jax.lax.with_sharding_constraint(a, ns)  # noqa: E731
+                ops = jax.tree.map(con, ops)
+                ws = jax.tree.map(con, ws)
+                return jax.lax.with_sharding_constraint(inner(ops, ws), ns)
+        else:
+            raise ValueError(f"unknown shard mode {mode!r} "
+                             "(expected 'constraint' or 'shard_map')")
+
+    rd = _RDTYPE[plan.key.dtype]
+
+    def full(item_ops, item_ws):
+        return _bucket_batch_body(run, kind, item, granularity, rd,
+                                  item_ops, item_ws)
+
+    # donation hands the per-item operand buffers to XLA (callers must not
+    # reuse them after a donated apply); only meaningful on accelerators
+    donate_args = (0,) if donate and jax.default_backend() != "cpu" else ()
+    return jax.jit(full, donate_argnums=donate_args)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Bucket:
+    """Items sharing one degree signature, resolved to one inner plan."""
+
+    item_ids: tuple
+    plan: GauntPlan
+    fn: Callable = dataclasses.field(repr=False, compare=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedGauntPlan:
+    """A bucketed multi-degree workload; ``apply`` runs one fused invocation
+    per bucket (see GauntEngine.plan_batch)."""
+
+    kind: str
+    dtype: str
+    items: tuple
+    buckets: tuple
+    granularity: int = 1
+    donate: bool = False
+    shard: ShardSpec | None = None
+
+    def plans(self) -> list[GauntPlan]:
+        return [b.plan for b in self.buckets]
+
+    def describe(self) -> str:
+        lines = [f"plan_batch(kind={self.kind}, dtype={self.dtype}, "
+                 f"items={len(self.items)}, buckets={len(self.buckets)}, "
+                 f"granularity={self.granularity}, donate={self.donate})"]
+        for b in self.buckets:
+            lines.append(f"  items {list(b.item_ids)} -> {b.plan.describe()}")
+        return "\n".join(lines)
+
+    # -- execution ---------------------------------------------------------
+
+    def apply(self, inputs, weights=None):
+        """Run every item; returns outputs aligned with ``items``.
+
+        inputs  : sequence (len == len(items)); element i is the operand
+                  tuple of item i — (x1, x2) for pairwise, (x, rhat) for
+                  conv_filter, the xs sequence for manybody.  Operands of one
+                  item share their leading (batch) dims.
+        weights : optional sequence aligned with items; element i is the
+                  weight tuple of item i ((w1, w2, w3), or per-operand list
+                  for manybody; None entries allowed) or None.
+        """
+        inputs = list(inputs)
+        if len(inputs) != len(self.items):
+            raise ValueError(f"apply got {len(inputs)} inputs for "
+                             f"{len(self.items)} items")
+        if weights is None:
+            weights = [None] * len(self.items)
+        weights = list(weights)
+        if len(weights) != len(self.items):
+            raise ValueError(f"apply got {len(weights)} weight entries for "
+                             f"{len(self.items)} items")
+        if self.donate and jax.default_backend() != "cpu":
+            inputs, weights = self._copy_donation_aliases(inputs, weights)
+        outs = [None] * len(self.items)
+        for bucket in self.buckets:
+            self._run_bucket(bucket, inputs, weights, outs)
+        return outs
+
+    def _copy_donation_aliases(self, inputs, weights):
+        """Donating one buffer twice is invalid, and a buffer donated by an
+        earlier bucket is DEAD for later ones — so before any bucket runs,
+        copy every repeat reference (operand or weight) to an operand that
+        will have been donated by then (e.g. selfmix's [x, x, x], or one
+        rhat shared across degree items)."""
+        donated: set[int] = set()
+        for bucket in self.buckets:
+            for i in bucket.item_ids:
+                ops_i = list(inputs[i])
+                for j, x in enumerate(ops_i):
+                    if id(x) in donated:
+                        ops_i[j] = jnp.copy(x)
+                    else:
+                        donated.add(id(x))
+                inputs[i] = tuple(ops_i)
+                w_i = weights[i]
+                if w_i is not None:
+                    w_i = list(w_i)
+                    for j, w in enumerate(w_i):
+                        if w is not None and id(w) in donated:
+                            w_i[j] = jnp.copy(w)
+                    weights[i] = tuple(w_i)
+        return inputs, weights
+
+    def _run_bucket(self, bucket: _Bucket, inputs, weights, outs) -> None:
+        item0 = self.items[bucket.item_ids[0]]
+        n_ops = _n_operands(self.kind, item0)
+        wdeg = _weight_degrees(self.kind, item0)
+        item_ops, item_ws = [], []
+        for i in bucket.item_ids:
+            ops_i = tuple(inputs[i])
+            if len(ops_i) != n_ops:
+                raise ValueError(f"item {i}: expected {n_ops} operands, "
+                                 f"got {len(ops_i)}")
+            item_ops.append(ops_i)
+            w_i = weights[i]
+            w_i = tuple(w_i) if w_i is not None else (None,) * len(wdeg)
+            if len(w_i) != len(wdeg):
+                raise ValueError(f"item {i}: expected {len(wdeg)} weight "
+                                 f"slots, got {len(w_i)}")
+            item_ws.append(w_i)
+        res = bucket.fn(tuple(item_ops), tuple(item_ws))
+        for t, i in enumerate(bucket.item_ids):
+            outs[i] = res[t]
 
 
 # --------------------------------------------------------------------------
@@ -507,6 +913,7 @@ class GauntEngine:
 
     def __init__(self):
         self._plans: dict[tuple, GauntPlan] = {}
+        self._batched: dict[tuple, BatchedGauntPlan] = {}
         self._measured: dict[PlanKey, str] = {}
 
     # -- public API --------------------------------------------------------
@@ -558,6 +965,84 @@ class GauntEngine:
         self._plans[cache_key] = p
         return p
 
+    def plan_batch(self, items, *, kind: str = "pairwise", dtype="float32",
+                   backend: str | None = None, tune: str = "heuristic",
+                   requires_grad: bool = True, donate: bool = False,
+                   shard_spec: ShardSpec | None = None,
+                   pad_to: int | None = None) -> BatchedGauntPlan:
+        """Plan a ragged multi-degree workload as bucketed fused invocations.
+
+        items: sequence of (L1, L2, Lout[, size]) tuples / dicts / BatchItems
+        (manybody items carry ``Ls``).  Items sharing a degree signature form
+        one *bucket*: their operands are flattened to rows, concatenated,
+        tail-padded to the plan granularity, and executed by a single jitted
+        call on the bucket's inner plan — per-item results are sliced back
+        out, numerically identical to per-plan loops (all backends are
+        row-parallel).  ``donate=True`` donates the concatenated operand
+        buffers on accelerators; ``shard_spec`` shards the row axis over the
+        mesh's data axes (see :class:`ShardSpec`).  ``pad_to`` forces a row
+        granularity (e.g. 128 for lane alignment); the data-parallel device
+        count is always folded in so shards stay equal.
+        """
+        if kind not in KINDS:
+            raise ValueError(f"unknown kind {kind!r} (expected one of {KINDS})")
+        if kind == "channel_mix":
+            raise ValueError("plan_batch does not support kind='channel_mix': "
+                             "w_mix is not a row-batched operand (use plan())")
+        norm = []
+        for it in items:
+            it = _as_batch_item(it)
+            if kind == "manybody":
+                if it.Ls is None or len(it.Ls) < 2:
+                    raise ValueError("manybody batch items need Ls with >= 2 degrees")
+                if it.Lout is None:
+                    it = dataclasses.replace(it, Lout=sum(it.Ls))
+            else:
+                if it.L1 is None or it.L2 is None:
+                    raise ValueError(f"kind={kind!r} batch items need L1 and L2")
+                if it.Lout is None:
+                    it = dataclasses.replace(it, Lout=it.L1 + it.L2)
+            norm.append(it)
+        norm = tuple(norm)
+        if not norm:
+            raise ValueError("plan_batch needs at least one item")
+        dts = _dtype_str(dtype)
+        mesh, dp = (None, ()) if shard_spec is None else shard_spec.resolve()
+        g = max(1, int(pad_to or 1))
+        if mesh is not None and dp:
+            from repro.distributed import sharding as _sh
+
+            g = math.lcm(g, _sh.dp_size(mesh, dp))
+        mode = shard_spec.mode if shard_spec is not None else "constraint"
+        # cache the batched plan: the jitted bucket callables must be stable
+        # across calls or every eager invocation would recompile
+        cache_key = (norm, kind, dts, backend, tune, requires_grad, donate,
+                     g, mesh, dp, mode)
+        hit = self._batched.get(cache_key)
+        if hit is not None:
+            return hit
+        groups: dict[tuple, list[int]] = {}
+        for i, it in enumerate(norm):
+            groups.setdefault(it.signature(), []).append(i)
+        buckets = []
+        for idxs in groups.values():
+            it0 = norm[idxs[0]]
+            known = [norm[i].size for i in idxs if norm[i].size]
+            hint = sum(known) if known else None
+            p = self.plan(
+                it0.L1, it0.L2, it0.Lout, kind=kind, Ls=it0.Ls,
+                batch_hint=hint, dtype=dts, backend=backend,
+                options=dict(it0.options) or None, tune=tune,
+                requires_grad=requires_grad,
+            )
+            fn = _make_bucket_fn(p, kind, it0, donate, mesh, dp, mode, g)
+            buckets.append(_Bucket(item_ids=tuple(idxs), plan=p, fn=fn))
+        bp = BatchedGauntPlan(kind=kind, dtype=dts, items=norm,
+                              buckets=tuple(buckets), granularity=g,
+                              donate=donate, shard=shard_spec)
+        self._batched[cache_key] = bp
+        return bp
+
     def select(self, key: PlanKey, tune: str = "heuristic",
                requires_grad: bool = True) -> str:
         """Pick the backend for ``key`` by cost model or measurement."""
@@ -578,6 +1063,7 @@ class GauntEngine:
 
     def clear(self) -> None:
         self._plans.clear()
+        self._batched.clear()
         self._measured.clear()
 
     # -- measured autotune -------------------------------------------------
@@ -650,3 +1136,8 @@ def get_engine() -> GauntEngine:
 def plan(*args, **kw) -> GauntPlan:
     """Module-level shorthand for ``get_engine().plan(...)``."""
     return _ENGINE.plan(*args, **kw)
+
+
+def plan_batch(*args, **kw) -> BatchedGauntPlan:
+    """Module-level shorthand for ``get_engine().plan_batch(...)``."""
+    return _ENGINE.plan_batch(*args, **kw)

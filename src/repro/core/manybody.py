@@ -50,15 +50,19 @@ def _tree_convolve(grids: list, method: str):
 def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
                            conv: str = "fft", conversion: str = "dense",
                            cdtype=jnp.complex64, rdtype=jnp.float32,
-                           backend: str | None = None, tune: str = "heuristic"):
+                           backend: str | None = None, tune: str = "heuristic",
+                           donate: bool = False, shard_spec=None):
     """xs: list of [..., (L_i+1)^2] features; Ls: their max degrees.
 
     weights: optional list of per-degree weights w_i [..., L_i+1] (the paper's
     reparameterized (lm)->l couplings).  Returns [..., (Lout+1)^2].
 
-    Thin wrapper over the unified engine (kind='manybody'): (conversion,
-    conv) map onto the 'fft'/'direct'/'packed' backends; `backend` pins any
-    registered many-body backend ('auto' -> engine selection).
+    Thin wrapper over the unified engine, routed through a batched plan
+    (kind='manybody'): leading dims flatten to one row axis executed as a
+    single fused invocation, with optional buffer donation and sharded
+    dispatch (`shard_spec`, see engine.ShardSpec).  (conversion, conv) map
+    onto the 'fft'/'direct'/'packed' backends; `backend` pins any registered
+    many-body backend ('auto' -> engine selection).
     """
     from . import engine as _engine
 
@@ -73,10 +77,12 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
             raise ValueError(f"unknown conversion {conversion!r}")
     elif backend == "auto":
         backend = None
-    p = _engine.plan(kind="manybody", Ls=tuple(Ls), Lout=Lout,
-                     dtype=_engine._dtype_str(cdtype),
-                     backend=backend, options=options, tune=tune)
-    return p.apply(list(xs), weights).astype(rdtype)
+    item = _engine.BatchItem(Ls=tuple(int(L) for L in Ls), Lout=Lout,
+                             options=tuple(sorted((options or {}).items())))
+    bp = _engine.plan_batch([item], kind="manybody",
+                            dtype=_engine._dtype_str(cdtype), backend=backend,
+                            tune=tune, donate=donate, shard_spec=shard_spec)
+    return bp.apply([list(xs)], weights=[weights])[0].astype(rdtype)
 
 
 def manybody_selfmix(x, L: int, nu: int, Lout: int | None = None, weights=None, **kw):

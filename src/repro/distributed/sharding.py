@@ -17,7 +17,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["choose_pspec", "param_shardings", "batch_shardings", "cache_shardings",
-           "DP_AXES", "set_activation_mesh", "constrain_batch"]
+           "DP_AXES", "set_activation_mesh", "get_activation_mesh",
+           "constrain_batch", "dp_axes", "dp_size", "row_pspec", "row_sharding"]
 
 DP_AXES = ("pod", "data")  # batch axes (pod missing on single-pod meshes)
 
@@ -32,6 +33,45 @@ _ACT_MESH: Mesh | None = None
 def set_activation_mesh(mesh: Mesh | None):
     global _ACT_MESH
     _ACT_MESH = mesh
+
+
+def get_activation_mesh() -> Mesh | None:
+    """The mesh registered by the launcher (None outside launched runs)."""
+    return _ACT_MESH
+
+
+# --- row-parallel helpers (the Gaunt engine's batched/sharded dispatch) ------
+# A "row" layout is any array whose dim0 is a flat batch of independent work
+# items (edges, nodes, stacked tensor-product operands).  The batched Gaunt
+# plans (core/engine.py plan_batch, DESIGN.md §5) shard that axis over the
+# data-parallel mesh axes and replicate everything else.
+
+
+def dp_axes(mesh: Mesh, prefer: tuple = DP_AXES) -> tuple:
+    """The data-parallel axes of `mesh` (subset of `prefer` that exists)."""
+    return _axes_in(mesh, prefer)
+
+
+def dp_size(mesh: Mesh, axes: tuple | None = None) -> int:
+    """Total device count across the data-parallel axes (1 if none)."""
+    axes = dp_axes(mesh) if axes is None else axes
+    if not axes:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(np.prod([sizes[a] for a in axes]))
+
+
+def row_pspec(ndim: int, axes: tuple) -> P:
+    """PartitionSpec sharding dim0 over `axes`, replicating the rest."""
+    if not axes:
+        return P(*([None] * ndim))
+    return P(axes, *([None] * (ndim - 1)))
+
+
+def row_sharding(mesh: Mesh, ndim: int, axes: tuple | None = None) -> NamedSharding:
+    """NamedSharding for a row layout on `mesh` (dim0 over the dp axes)."""
+    axes = dp_axes(mesh) if axes is None else axes
+    return NamedSharding(mesh, row_pspec(ndim, axes))
 
 
 def constrain_ep_weights(w):

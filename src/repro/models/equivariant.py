@@ -23,7 +23,7 @@ import numpy as np
 from repro.configs.gaunt_ff import EquivariantConfig
 from repro.core.cg import cg_full_tensor_product
 from repro.core.conv import EquivariantConv
-from repro.core.gaunt import GauntTensorProduct, expand_degree_weights
+from repro.core.gaunt import expand_degree_weights
 from repro.core.irreps import l_array, num_coeffs
 from repro.core.manybody import manybody_selfmix
 from repro.core.so3 import real_sph_harm_jax
@@ -87,16 +87,39 @@ def _pair_geometry(pos, cutoff):
 _TP_BACKEND = {"gaunt": None, "gaunt_fused": "fused_xla", "gaunt_auto": "auto"}
 
 
+def _resolve_tp_backend(impl: str, L1: int, L2: int):
+    """Map a tp_impl name to a concrete engine backend name (or None=auto)."""
+    backend = _TP_BACKEND[impl]
+    if impl == "gaunt":
+        # historical spectral default (GauntTensorProduct's conv='auto' rule)
+        backend = "direct" if max(L1, L2) <= 4 else "fft"
+    elif backend == "auto":
+        backend = None
+    return backend
+
+
 def _tp(cfg: EquivariantConfig, L1, L2, Lout):
-    """Resolve the configured tensor-product impl to an engine plan.
+    """Resolve the configured tensor-product impl to a batched engine plan.
 
     tp_impl: 'gaunt' (historical spectral default), 'gaunt_fused'
     (collocation backend), 'gaunt_auto' (engine cost-model pick among
-    grad-supporting backends), or anything else -> the CG baseline.
+    grad-supporting backends), or anything else -> the CG baseline.  The
+    Gaunt impls route through one batched plan (engine.plan_batch) so the
+    edge x channel leading dims execute as a single fused — and optionally
+    donated/sharded — invocation.
     """
+    from repro.core import engine as _engine
+
     if cfg.tp_impl in _TP_BACKEND:
-        tp = GauntTensorProduct(L1, L2, Lout, backend=_TP_BACKEND[cfg.tp_impl])
-        return lambda a, b: tp(a, b)
+        # no donation here: model loops reuse operand buffers (edge_sh is
+        # shared across layers) — donation is for callers that own the
+        # buffer lifetime (e.g. the serving engine)
+        bp = _engine.plan_batch(
+            [(L1, L2, Lout)], kind="pairwise",
+            backend=_resolve_tp_backend(cfg.tp_impl, L1, L2),
+            shard_spec=_engine.ShardSpec() if getattr(cfg, "shard_data", False) else None,
+        )
+        return lambda a, b: bp.apply([(a, b)])[0]
     return lambda a, b: cg_full_tensor_product(a, b, L1, L2, Lout)
 
 
@@ -139,7 +162,13 @@ class MaceGaunt:
         """-> per-atom invariant energy features."""
         c = self.cfg
         n = pos.shape[0]
-        conv = EquivariantConv(c.L, c.L_edge, c.L, method=c.conv_impl)
+        from repro.core.engine import ShardSpec
+
+        # no donation: rhat is reused by every layer's conv call
+        conv = EquivariantConv(
+            c.L, c.L_edge, c.L, method=c.conv_impl,
+            shard_spec=ShardSpec() if getattr(c, "shard_data", False) else None,
+        )
         rhat, dist, mask = _pair_geometry(pos, c.cutoff)
         x = jnp.zeros((n, c.channels, num_coeffs(c.L)))
         x = x.at[..., 0].set(params["species"][species])
@@ -165,6 +194,13 @@ class MaceGaunt:
         feat = self.features(params, species, pos)
         e_atom = jax.nn.silu(feat @ params["readout"]["w1"]) @ params["readout"]["w2"]
         return jnp.sum(e_atom)
+
+    def energy_masked(self, params, species, pos, mask):
+        """Energy of the atoms selected by ``mask`` [n] (serving: padded
+        slots place ghost atoms beyond the cutoff and mask them out here)."""
+        feat = self.features(params, species, pos)
+        e_atom = jax.nn.silu(feat @ params["readout"]["w1"]) @ params["readout"]["w2"]
+        return jnp.sum(e_atom[:, 0] * mask)
 
     def energy_forces(self, params, species, pos):
         e, g = jax.value_and_grad(self.energy, argnums=2)(params, species, pos)
@@ -280,8 +316,13 @@ class SelfmixLayer:
     def __call__(self, params, x):
         L = self.L
         if self.tp_impl in _TP_BACKEND:
-            tp = GauntTensorProduct(L, L, L, backend=_TP_BACKEND[self.tp_impl])
-            y = tp(x, x, w1=params["w1"], w2=params["w2"], w3=params["w3"][: L + 1])
+            from repro.core import engine as _engine
+
+            bp = _engine.plan_batch([(L, L, L)], kind="pairwise",
+                                    backend=_resolve_tp_backend(self.tp_impl, L, L))
+            y = bp.apply([(x, x)],
+                         weights=[(params["w1"], params["w2"],
+                                   params["w3"][: L + 1])])[0]
         else:  # cg baseline
             xw = x * expand_degree_weights(params["w1"], L)
             yw = x * expand_degree_weights(params["w2"], L)

@@ -1,11 +1,20 @@
-"""Batched serving engine: slot-based continuous batching over a shared KV
-(or recurrent-state) cache.
+"""Batched serving engines.
+
+`ServeEngine` — slot-based continuous batching for LM decoding over a shared
+KV (or recurrent-state) cache:
 
 - Fixed B decode slots; requests are admitted into free slots, prefilled
   one-at-a-time (slot-batched prefill), then all active slots step together.
 - Greedy or temperature sampling; per-slot stop conditions (EOS / max_len).
 - Cache layouts come from Model.init_cache and work for every family
   (attention KV, RWKV state, Zamba hybrid).
+
+`EquivariantServeEngine` — the same continuous-batching discipline for
+force-field inference (energy/forces/relaxation requests on a Gaunt-MACE
+model): ragged molecules are padded into fixed atom slots, ghost atoms are
+parked beyond the cutoff and masked out of the energy, and every step
+evaluates ALL active slots in one jitted vmapped call — whose tensor
+products route through the engine's batched Gaunt plans (DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -16,7 +25,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request",
+           "EquivariantServeEngine", "EquivariantRequest"]
+
+
+def _drain(engine, requests: list) -> list:
+    """Continuous batching: admit as slots free up, step until drained.
+    Shared by both engines (they expose _free_slots/add_request/step)."""
+    pending = list(requests)
+    while pending or any(r is not None for r in engine.slot_req):
+        while pending and engine._free_slots():
+            engine.add_request(pending.pop(0))
+        engine.step()
+    return requests
 
 
 @dataclasses.dataclass
@@ -124,10 +145,110 @@ class ServeEngine:
                 self.pos[i] = -1
 
     def run(self, requests: list[Request]) -> list[Request]:
-        """Continuous batching: admit as slots free up, step until drained."""
-        pending = list(requests)
-        while pending or any(r is not None for r in self.slot_req):
-            while pending and self._free_slots():
-                self.add_request(pending.pop(0))
-            self.step()
-        return requests
+        return _drain(self, requests)
+
+
+# --------------------------------------------------------------------------
+# equivariant (force-field) serving
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EquivariantRequest:
+    """One molecular inference job: `steps` gradient-descent relaxation steps
+    (steps=1 => a single energy/forces evaluation)."""
+
+    species: np.ndarray           # [n] int
+    pos: np.ndarray               # [n, 3]; updated in place by relaxation —
+    #                               on completion it is the geometry that
+    #                               produced `energy`/`forces`
+    steps: int = 1
+    step_size: float = 0.0        # relaxation: pos += step_size * forces
+    rid: int = 0
+    # filled by the engine:
+    energy: float | None = None
+    forces: np.ndarray | None = None
+    done: bool = False
+
+
+class EquivariantServeEngine:
+    """Continuous batching for a MaceGaunt-style model: fixed atom-padded
+    slots, one fused batched evaluation per step for every active request."""
+
+    def __init__(self, model, params, n_slots: int = 4, max_atoms: int = 16):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_atoms = max_atoms
+        self.slot_req: list[Optional[EquivariantRequest]] = [None] * n_slots
+        self.species = np.zeros((n_slots, max_atoms), np.int32)
+        self.pos = np.asarray(self._parked(), np.float32)[None].repeat(n_slots, 0)
+        self.mask = np.zeros((n_slots, max_atoms), np.float32)
+
+        def batched(params, species, pos, mask):
+            """All slots in one call: vmapped masked energy + forces."""
+            def one(sp, p, m):
+                e, g = jax.value_and_grad(
+                    lambda pp: model.energy_masked(params, sp, pp, m))(p)
+                return e, -g
+            return jax.vmap(one)(species, pos, mask)
+
+        # step inputs are fresh device buffers every step (jnp.asarray of the
+        # host-side slot state), so donating them is safe on accelerators
+        donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
+        self._step_fn = jax.jit(batched, donate_argnums=donate)
+
+    def _parked(self) -> np.ndarray:
+        """Ghost-atom positions: distinct sites far outside any cutoff, so
+        padded atoms interact with nothing (incl. each other)."""
+        far = 1e4 * (1.0 + np.arange(self.max_atoms, dtype=np.float32))
+        return np.stack([far, np.zeros_like(far), np.zeros_like(far)], -1)
+
+    # ------------------------------------------------------------- admission
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def add_request(self, req: EquivariantRequest) -> bool:
+        n = len(req.species)
+        if n > self.max_atoms:
+            raise ValueError(f"request has {n} atoms > max_atoms={self.max_atoms}")
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        self.species[slot] = 0
+        self.species[slot, :n] = np.asarray(req.species, np.int32)
+        self.pos[slot] = self._parked()
+        self.pos[slot, :n] = np.asarray(req.pos, np.float32)
+        self.mask[slot] = 0.0
+        self.mask[slot, :n] = 1.0
+        self.slot_req[slot] = req
+        return True
+
+    # ------------------------------------------------------------- stepping
+    def step(self):
+        """One fused evaluation for all active slots; advances relaxations
+        and retires finished requests."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        e, f = self._step_fn(self.params, jnp.asarray(self.species),
+                             jnp.asarray(self.pos), jnp.asarray(self.mask))
+        e = np.asarray(e)
+        f = np.asarray(f)
+        for i in active:
+            req = self.slot_req[i]
+            n = len(req.species)
+            req.energy = float(e[i])
+            req.forces = f[i, :n].copy()
+            req.pos = self.pos[i, :n].copy()  # the evaluated geometry
+            req.steps -= 1
+            if req.steps <= 0:
+                req.done = True
+                self.slot_req[i] = None
+                self.mask[i] = 0.0
+            else:  # relaxation: steepest descent on the masked energy
+                self.pos[i, :n] += req.step_size * f[i, :n]
+
+    def run(self, requests: list[EquivariantRequest]) -> list[EquivariantRequest]:
+        return _drain(self, requests)

@@ -1,0 +1,25 @@
+"""Test-support package: shared random generators, rotation helpers, and
+numpy reference products (see :mod:`repro.testing.oracles`)."""
+from .oracles import (  # noqa: F401
+    cg_product_oracle,
+    gaunt_product_oracle,
+    random_angles,
+    random_array,
+    random_irreps,
+    random_unit_vectors,
+    rotate_irreps,
+    rotation_matrix,
+    wigner_D,
+)
+
+__all__ = [
+    "random_array",
+    "random_irreps",
+    "random_unit_vectors",
+    "random_angles",
+    "rotation_matrix",
+    "wigner_D",
+    "rotate_irreps",
+    "gaunt_product_oracle",
+    "cg_product_oracle",
+]

@@ -14,15 +14,15 @@ from repro.core.conv import (
 from repro.core.irreps import num_coeffs
 from repro.core.manybody import manybody_gaunt_product, manybody_selfmix
 from repro.core.so3 import real_sph_harm, real_sph_harm_jax
+from repro.testing import random_array, random_unit_vectors
 
 
 def _rand(shape, seed=0):
-    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype=jnp.float32)
+    return jnp.asarray(random_array(shape, seed))
 
 
 def _rand_dirs(n, seed=0):
-    v = np.random.default_rng(seed).normal(size=(n, 3))
-    return jnp.asarray(v / np.linalg.norm(v, axis=-1, keepdims=True), dtype=jnp.float32)
+    return jnp.asarray(random_unit_vectors((n,), seed))
 
 
 def test_align_rotation():
@@ -86,15 +86,15 @@ def test_conv_equivariance():
     """Rotating inputs (feature + geometry) rotates the output."""
     L1, L2 = 2, 2
     Lout = 3
+    from repro.testing import random_angles, rotation_matrix, wigner_D
+
     conv = EquivariantConv(L1, L2, Lout, method="escn")
-    rng = np.random.default_rng(11)
-    x = rng.normal(size=num_coeffs(L1)).astype(np.float32)
-    r = rng.normal(size=3)
-    r /= np.linalg.norm(r)
-    a, b, g = 0.3, 0.9, -1.2
-    Rg = so3.rotation_matrix_zyz(a, b, g)
-    D1 = so3.wigner_D_real_packed(L1, a, b, g).astype(np.float32)
-    D3 = so3.wigner_D_real_packed(Lout, a, b, g).astype(np.float32)
+    x = random_array((num_coeffs(L1),), seed=11)
+    r = np.asarray(random_unit_vectors((), seed=11), np.float64)
+    angles = random_angles(seed=11)
+    Rg = rotation_matrix(angles)
+    D1 = wigner_D(L1, angles)
+    D3 = wigner_D(Lout, angles)
     out = np.asarray(conv(jnp.asarray(x)[None], jnp.asarray(r, dtype=jnp.float32)[None])[0])
     out_rot = np.asarray(
         conv(jnp.asarray(D1 @ x)[None], jnp.asarray(Rg @ r, dtype=jnp.float32)[None])[0]

@@ -10,6 +10,7 @@ from repro.core.cg import gaunt_einsum_reference
 from repro.core.gaunt import gaunt_product_numpy
 from repro.core.irreps import num_coeffs
 from repro.core.so3 import real_sph_harm_jax
+from repro.testing import random_array
 
 PAIRWISE = engine.available_backends("pairwise", requires_grad=False)
 CONV = engine.available_backends("conv_filter", requires_grad=False)
@@ -21,7 +22,7 @@ GRID = [(1, 1, 2), (2, 3, 5), (4, 2, 3), (3, 3, 2), (6, 6, 12), (6, 4, 6)]
 
 
 def _rand(shape, seed=0, dtype=jnp.float32):
-    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype=dtype)
+    return jnp.asarray(random_array(shape, seed), dtype=dtype)
 
 
 def test_registry_is_complete():
@@ -184,6 +185,33 @@ def test_measured_autotune_caches_choice():
 def test_selection_rule_rejected():
     with pytest.raises(ValueError):
         engine.plan(2, 2, 5)  # Lout > L1+L2
+
+
+def test_float64_requests_normalized_consistently():
+    """Regression (dtype-mismatch path): with x64 disabled, float64 requests
+    must collapse onto the float32 plans — same PlanKey hash, same capability
+    set, same cached plan — instead of building complex128 constants that
+    every apply silently downcasts."""
+    if jax.config.jax_enable_x64:
+        pytest.skip("x64 enabled: float64 is a real dtype here")
+    assert engine._dtype_str("float64") == "float32"
+    assert engine._dtype_str(jnp.complex128) == "float32"
+    # available_backends must agree with plan() on the effective dtype:
+    # fused backends only support f32/bf16, so a phantom-f64 query would
+    # wrongly exclude them
+    assert (engine.available_backends("pairwise", dtype="float64")
+            == engine.available_backends("pairwise", dtype="float32"))
+    p64 = engine.plan(2, 2, 4, dtype="float64", backend="fft")
+    p32 = engine.plan(2, 2, 4, dtype="float32", backend="fft")
+    assert p64 is p32  # one cache entry, consistent PlanKey hashing
+    assert p64.key.dtype == "float32"
+    # the fused backend is reachable under a float64 request
+    engine.plan(2, 2, 4, dtype="float64", backend="fused_xla")
+    x1 = _rand((3, num_coeffs(2)), 70)
+    out = p64.apply(x1, x1)
+    assert out.dtype == jnp.float32
+    with pytest.raises(ValueError):
+        engine._dtype_str(jnp.int32)  # non-float requests are rejected
 
 
 def test_jit_containing_plan_and_apply():

@@ -1,0 +1,260 @@
+"""jit/vmap/grad conformance for engine backends + batched-plan parity.
+
+Three contracts:
+* every differentiable backend survives jit, vmap, and grad with values
+  matching the eager path (vmap vs Python loop, finite-difference gradients);
+* the batched execution layer (`engine.plan_batch`) is numerically identical
+  to per-plan loops for every backend, ragged sizes, weights, padding,
+  broadcasting, and sharded dispatch included;
+* the float-dtype plumbing around PlanKey stays consistent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.irreps import num_coeffs
+from repro.testing import random_array, random_irreps, random_unit_vectors
+
+PAIRWISE = engine.available_backends("pairwise", requires_grad=False)
+PAIRWISE_GRAD = engine.available_backends("pairwise", requires_grad=True)
+MANYBODY = engine.available_backends("manybody", requires_grad=False)
+CONV = engine.available_backends("conv_filter", requires_grad=False)
+
+
+def _j(a):
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------------------
+# jit / vmap / grad conformance per backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", PAIRWISE)
+def test_jit_matches_eager(backend):
+    L1, L2, Lout = 2, 2, 3
+    p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False)
+    x1 = _j(random_irreps(L1, (6,), seed=1))
+    x2 = _j(random_irreps(L2, (6,), seed=2))
+    eager = p.apply(x1, x2)
+    jitted = jax.jit(lambda a, b: p.apply(a, b))(x1, x2)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", PAIRWISE_GRAD)
+def test_vmap_matches_loop(backend):
+    """vmap over a stacked leading axis == Python loop over slices."""
+    L1, L2, Lout = 2, 1, 3
+    k, n = 4, 5
+    p = engine.plan(L1, L2, Lout, backend=backend)
+    x1 = _j(random_irreps(L1, (k, n), seed=3))
+    x2 = _j(random_irreps(L2, (k, n), seed=4))
+    vm = jax.vmap(lambda a, b: p.apply(a, b))(x1, x2)
+    loop = jnp.stack([p.apply(x1[i], x2[i]) for i in range(k)])
+    np.testing.assert_allclose(np.asarray(vm), np.asarray(loop),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", PAIRWISE_GRAD)
+def test_grad_finite_difference(backend):
+    """<grad f, v> matches the central finite difference along v."""
+    L1, L2, Lout = 2, 2, 2
+    p = engine.plan(L1, L2, Lout, backend=backend)
+    x1 = _j(random_irreps(L1, (3,), seed=5))
+    x2 = _j(random_irreps(L2, (3,), seed=6))
+    v = _j(random_irreps(L1, (3,), seed=7))
+
+    def f(a):
+        return jnp.sum(jnp.tanh(p.apply(a, x2)))
+
+    g = jax.grad(f)(x1)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    eps = 1e-2
+    fd = (f(x1 + eps * v) - f(x1 - eps * v)) / (2 * eps)
+    directional = jnp.sum(g * v)
+    np.testing.assert_allclose(float(directional), float(fd),
+                               rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("backend", MANYBODY)
+def test_manybody_grad_and_vmap(backend):
+    L, nu = 2, 3
+    p = engine.plan(kind="manybody", Ls=(L,) * nu, Lout=L, backend=backend)
+    xs = [_j(random_irreps(L, (4,), seed=10 + i)) for i in range(nu)]
+    g = jax.grad(lambda a: jnp.sum(p.apply([a] + xs[1:]) ** 2))(xs[0])
+    assert bool(jnp.all(jnp.isfinite(g)))
+    stacked = [jnp.stack([x, 2 * x]) for x in xs]
+    vm = jax.vmap(lambda *a: p.apply(list(a)))(*stacked)
+    np.testing.assert_allclose(np.asarray(vm[0]), np.asarray(p.apply(xs)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched-plan parity: plan_batch == per-plan loops, exactly
+# ---------------------------------------------------------------------------
+
+RAGGED = [(2, 2, 4, 7), (1, 1, 2, 4), (2, 2, 4, 3), (3, 2, 3, 5)]
+
+
+@pytest.mark.parametrize("backend", PAIRWISE)
+def test_plan_batch_matches_per_plan_loop(backend):
+    bp = engine.plan_batch(RAGGED, backend=backend, requires_grad=False)
+    ins = [(_j(random_irreps(L1, (n,), seed=i)),
+            _j(random_irreps(L2, (n,), seed=50 + i)))
+           for i, (L1, L2, Lout, n) in enumerate(RAGGED)]
+    outs = bp.apply(ins)
+    for (L1, L2, Lout, n), (x1, x2), got in zip(RAGGED, ins, outs):
+        p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False)
+        ref = p.apply(x1, x2)
+        assert got.shape == (n, num_coeffs(Lout))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", PAIRWISE)
+def test_plan_batch_weights_match_per_plan(backend):
+    items = [(2, 3, 4, 5), (2, 3, 4, 2)]
+    bp = engine.plan_batch(items, backend=backend, requires_grad=False)
+    ins, ws = [], []
+    for i, (L1, L2, Lout, n) in enumerate(items):
+        ins.append((_j(random_irreps(L1, (n,), seed=i)),
+                    _j(random_irreps(L2, (n,), seed=20 + i))))
+        ws.append((_j(random_array((n, L1 + 1), seed=30 + i)), None,
+                   _j(random_array((n, Lout + 1), seed=40 + i))))
+    ws[1] = None  # second item unweighted — exercises the ones-fill path
+    outs = bp.apply(ins, weights=ws)
+    p = engine.plan(2, 3, 4, backend=backend, requires_grad=False)
+    ref0 = p.apply(*ins[0], ws[0][0], None, ws[0][2])
+    ref1 = p.apply(*ins[1])
+    np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(ref0),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(outs[1]), np.asarray(ref1),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", MANYBODY)
+def test_plan_batch_manybody_matches_per_plan(backend):
+    item = engine.BatchItem(Ls=(2, 2, 2), Lout=2)
+    bp = engine.plan_batch([item], kind="manybody", backend=backend,
+                           requires_grad=False)
+    xs = [_j(random_irreps(2, (5,), seed=60 + i)) for i in range(3)]
+    got = bp.apply([xs])[0]
+    p = engine.plan(kind="manybody", Ls=(2, 2, 2), Lout=2, backend=backend,
+                    requires_grad=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(p.apply(xs)),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", CONV)
+def test_plan_batch_conv_filter_matches_per_plan(backend):
+    bp = engine.plan_batch([(2, 2, 3, 6)], kind="conv_filter", backend=backend,
+                           requires_grad=False, pad_to=8)  # 6 rows -> 2 pad rows
+    x = _j(random_irreps(2, (6,), seed=70))
+    r = _j(random_unit_vectors((6,), seed=71))
+    got = bp.apply([(x, r)])[0]
+    p = engine.plan(2, 2, 3, kind="conv_filter", backend=backend,
+                    requires_grad=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(p.apply(x, r)),
+                               rtol=1e-5, atol=1e-5)
+    assert bool(jnp.all(jnp.isfinite(got)))  # e_z padding keeps escn NaN-free
+
+
+def test_plan_batch_broadcast_inner_dims():
+    """One direction per edge against C channel features (the MACE layout)."""
+    n, C = 4, 5
+    x = _j(random_irreps(2, (n, n, C), seed=80))
+    r = _j(random_unit_vectors((n, n, 1), seed=81))
+    bp = engine.plan_batch([(2, 2, 2)], kind="conv_filter",
+                           backend="escn_aligned")
+    got = bp.apply([(x, r)])[0]
+    p = engine.plan(2, 2, 2, kind="conv_filter", backend="escn_aligned")
+    assert got.shape == (n, n, C, num_coeffs(2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(p.apply(x, r)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plan_batch_weight_broadened_output():
+    """Weights with leading dims beyond the operands' broadcast shape widen
+    the output (the plan.apply 'w [..., L+1]' contract) — the batched layout
+    must degrade to backend broadcasting, not raise."""
+    x = _j(random_irreps(2, (), seed=120))       # unbatched operands
+    r = _j(random_unit_vectors((), seed=121))
+    w1 = _j(random_array((5, 3), seed=122))      # 5 weight sets -> out [5, ...]
+    bp = engine.plan_batch([(2, 2, 2)], kind="conv_filter",
+                           backend="escn_aligned")
+    got = bp.apply([(x, r)], weights=[(w1, None, None)])[0]
+    p = engine.plan(2, 2, 2, kind="conv_filter", backend="escn_aligned")
+    ref = p.apply(x, r, w1)
+    assert got.shape == ref.shape == (5, num_coeffs(2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plan_batch_grad_matches_per_plan():
+    bp = engine.plan_batch([(2, 2, 4, 6)])
+    p = engine.plan(2, 2, 4)
+    x1 = _j(random_irreps(2, (6,), seed=90))
+    x2 = _j(random_irreps(2, (6,), seed=91))
+    g_b = jax.grad(lambda a: jnp.sum(bp.apply([(a, x2)])[0] ** 2))(x1)
+    g_p = jax.grad(lambda a: jnp.sum(p.apply(a, x2) ** 2))(x1)
+    np.testing.assert_allclose(np.asarray(g_b), np.asarray(g_p),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plan_batch_inside_jit():
+    bp = engine.plan_batch([(1, 1, 2, 4), (2, 2, 4, 4)], requires_grad=False)
+    ins = [(_j(random_irreps(1, (4,), seed=95)), _j(random_irreps(1, (4,), seed=96))),
+           (_j(random_irreps(2, (4,), seed=97)), _j(random_irreps(2, (4,), seed=98)))]
+    f = jax.jit(lambda a, b, c, d: bp.apply([(a, b), (c, d)])[1])
+    ref = bp.apply(ins)[1]
+    np.testing.assert_allclose(np.asarray(f(*ins[0], *ins[1])), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_plan_batch_sharded_matches_unsharded():
+    mesh = jax.make_mesh((1,), ("data",))
+    x1 = _j(random_irreps(2, (8,), seed=100))
+    x2 = _j(random_irreps(2, (8,), seed=101))
+    ref = engine.plan_batch([(2, 2, 4, 8)], requires_grad=False).apply(
+        [(x1, x2)])[0]
+    for mode in ("constraint", "shard_map"):
+        sp = engine.ShardSpec(mesh=mesh, axes=("data",), mode=mode)
+        bp = engine.plan_batch([(2, 2, 4, 8)], shard_spec=sp,
+                               requires_grad=False)
+        got = bp.apply([(x1, x2)])[0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_plan_batch_bucketing_and_cache():
+    items = [(2, 2, 4, 4), (1, 1, 2, 4), (2, 2, 4, 9)]
+    bp1 = engine.plan_batch(items, requires_grad=False)
+    assert len(bp1.buckets) == 2  # two distinct signatures
+    sizes = {tuple(sorted(b.item_ids)) for b in bp1.buckets}
+    assert sizes == {(0, 2), (1,)}
+    bp2 = engine.plan_batch(items, requires_grad=False)
+    assert bp1 is bp2  # cached: jitted bucket callables stay stable
+    assert "plan_batch" in bp1.describe()
+
+
+def test_plan_batch_donate_flag_plumbing():
+    bp = engine.plan_batch([(2, 2, 4, 4)], donate=True, requires_grad=False)
+    assert bp.donate
+    x1 = _j(random_irreps(2, (4,), seed=110))
+    x2 = _j(random_irreps(2, (4,), seed=111))
+    out = bp.apply([(x1, x2)])[0]  # on CPU donation is a no-op, not an error
+    assert out.shape == (4, num_coeffs(4))
+
+
+def test_plan_batch_rejects_channel_mix_and_bad_items():
+    with pytest.raises(ValueError):
+        engine.plan_batch([(1, 1, 2)], kind="channel_mix")
+    with pytest.raises(ValueError):
+        engine.plan_batch([])
+    with pytest.raises(ValueError):
+        engine.plan_batch([(1, 1)])
+    with pytest.raises(ValueError):
+        engine.plan_batch([engine.BatchItem(Ls=(2,))], kind="manybody")

@@ -1,0 +1,162 @@
+"""Rotation-equivariance conformance for EVERY registered engine backend.
+
+For each kind and each eligible backend up to L=4 the suite checks the
+defining property  apply(D(R) x1, D(R) x2) == D(R) apply(x1, x2)  under
+deterministic random rotations (exact Wigner-D from repro.testing), plus
+hypothesis-driven random-angle sweeps when hypothesis is installed
+(tests/_hyp.py shim -> clean skips otherwise).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core import engine
+from repro.core.irreps import num_coeffs
+from repro.testing import (
+    random_angles,
+    random_irreps,
+    random_unit_vectors,
+    rotation_matrix,
+    wigner_D,
+)
+
+PAIRWISE = engine.available_backends("pairwise", requires_grad=False)
+CONV = engine.available_backends("conv_filter", requires_grad=False)
+MANYBODY = engine.available_backends("manybody", requires_grad=False)
+CHANNEL_MIX = engine.available_backends("channel_mix", requires_grad=False)
+
+LS = [1, 2, 3, 4]  # the acceptance grid: every backend up to L=4
+B = 3              # rows per check — equivariance is per-row, keep it cheap
+
+
+def _close(got, ref, tol=2e-4):
+    got, ref = np.asarray(got), np.asarray(ref)
+    scale = max(1.0, np.abs(ref).max())
+    np.testing.assert_allclose(got, ref, atol=tol * scale)
+
+
+def _check_pairwise(backend, L1, L2, Lout, angles, seed=0):
+    x1 = random_irreps(L1, (B,), seed=seed)
+    x2 = random_irreps(L2, (B,), seed=seed + 100)
+    D1, D2, D3 = wigner_D(L1, angles), wigner_D(L2, angles), wigner_D(Lout, angles)
+    p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False)
+    lhs = np.asarray(p.apply(jnp.asarray(x1 @ D1.T), jnp.asarray(x2 @ D2.T)))
+    rhs = np.asarray(p.apply(jnp.asarray(x1), jnp.asarray(x2))) @ D3.T
+    _close(lhs, rhs)
+
+
+@pytest.mark.parametrize("L", LS)
+@pytest.mark.parametrize("backend", PAIRWISE)
+def test_pairwise_rotation_equivariance(backend, L):
+    _check_pairwise(backend, L, L, L, random_angles(seed=L), seed=L)
+
+
+@pytest.mark.parametrize("backend", PAIRWISE)
+def test_pairwise_equivariance_mixed_degrees(backend):
+    # unequal degrees + full (untruncated) output
+    _check_pairwise(backend, 2, 3, 5, random_angles(seed=7), seed=7)
+
+
+@pytest.mark.parametrize("L", LS)
+@pytest.mark.parametrize("backend", CONV)
+def test_conv_filter_rotation_equivariance(backend, L):
+    """Rotating the features AND the edge direction rotates the output."""
+    angles = random_angles(seed=10 + L)
+    R = rotation_matrix(angles)
+    x = random_irreps(L, (B,), seed=20 + L)
+    r = random_unit_vectors((B,), seed=30 + L)
+    D1, D3 = wigner_D(L, angles), wigner_D(L, angles)
+    p = engine.plan(L, L, L, kind="conv_filter", backend=backend,
+                    requires_grad=False)
+    lhs = np.asarray(p.apply(jnp.asarray(x @ D1.T),
+                             jnp.asarray((r @ R.T).astype(np.float32))))
+    rhs = np.asarray(p.apply(jnp.asarray(x), jnp.asarray(r))) @ D3.T
+    _close(lhs, rhs, tol=5e-4)
+
+
+@pytest.mark.parametrize("L", LS)
+@pytest.mark.parametrize("backend", MANYBODY)
+def test_manybody_rotation_equivariance(backend, L):
+    nu = 3 if L <= 2 else 2
+    angles = random_angles(seed=40 + L)
+    xs = [random_irreps(L, (B,), seed=50 + L + i) for i in range(nu)]
+    D, Do = wigner_D(L, angles), wigner_D(L, angles)
+    p = engine.plan(kind="manybody", Ls=(L,) * nu, Lout=L, backend=backend,
+                    requires_grad=False)
+    lhs = np.asarray(p.apply([jnp.asarray(x @ D.T) for x in xs]))
+    rhs = np.asarray(p.apply([jnp.asarray(x) for x in xs])) @ Do.T
+    _close(lhs, rhs, tol=5e-4)
+
+
+@pytest.mark.parametrize("L", LS)
+@pytest.mark.parametrize("backend", CHANNEL_MIX)
+def test_channel_mix_rotation_equivariance(backend, L):
+    """Channel mixing commutes with rotation (w_mix acts on channels only)."""
+    C1, C2, E = 3, 2, 4
+    angles = random_angles(seed=60 + L)
+    x1 = random_irreps(L, (B, C1), seed=70 + L)
+    x2 = random_irreps(L, (B, C2), seed=80 + L)
+    from repro.testing import random_array
+
+    w = random_array((C1, C2, E), seed=90 + L)
+    D, Do = wigner_D(L, angles), wigner_D(L, angles)
+    p = engine.plan(L, L, L, kind="channel_mix", backend=backend,
+                    requires_grad=False)
+    lhs = np.asarray(p.apply(jnp.asarray(x1 @ D.T), jnp.asarray(x2 @ D.T),
+                             jnp.asarray(w)))
+    rhs = np.asarray(p.apply(jnp.asarray(x1), jnp.asarray(x2),
+                             jnp.asarray(w))) @ Do.T
+    _close(lhs, rhs)
+
+
+def test_batched_plan_rotation_equivariance():
+    """The batched execution layer preserves equivariance across a ragged
+    multi-degree workload (the tentpole path end-to-end)."""
+    items = [(2, 2, 2, 4), (1, 1, 2, 6), (2, 2, 2, 3)]
+    bp = engine.plan_batch(items, requires_grad=False)
+    angles = random_angles(seed=3)
+    ins, refs = [], []
+    for t, (L1, L2, Lout, n) in enumerate(items):
+        x1 = random_irreps(L1, (n,), seed=t)
+        x2 = random_irreps(L2, (n,), seed=t + 10)
+        ins.append((x1, x2))
+        refs.append((L1, L2, Lout))
+    outs = bp.apply([(jnp.asarray(a), jnp.asarray(b)) for a, b in ins])
+    rot_outs = bp.apply([
+        (jnp.asarray(a @ wigner_D(L1, angles).T),
+         jnp.asarray(b @ wigner_D(L2, angles).T))
+        for (a, b), (L1, L2, _) in zip(ins, refs)])
+    for o, ro, (_, _, Lout) in zip(outs, rot_outs, refs):
+        _close(np.asarray(ro), np.asarray(o) @ wigner_D(Lout, angles).T)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps (skipped cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+_angles_st = st.tuples(
+    st.floats(0.0, 2 * np.pi), st.floats(0.05, np.pi - 0.05),
+    st.floats(0.0, 2 * np.pi),
+) if HAVE_HYPOTHESIS else st
+
+
+@given(angles=_angles_st, seed=st.integers(0, 2**16))
+@settings(max_examples=20, deadline=None)
+def test_pairwise_equivariance_property(angles, seed):
+    """Random rotations x random inputs on the default-selected backend."""
+    _check_pairwise(None, 2, 2, 3, tuple(angles), seed=seed)
+
+
+@given(angles=_angles_st, seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_escn_equivariance_property(angles, seed):
+    angles = tuple(angles)
+    R = rotation_matrix(angles)
+    x = random_irreps(2, (B,), seed=seed)
+    r = random_unit_vectors((B,), seed=seed + 1)
+    p = engine.plan(2, 2, 3, kind="conv_filter", backend="escn_aligned")
+    lhs = np.asarray(p.apply(jnp.asarray(x @ wigner_D(2, angles).T),
+                             jnp.asarray((r @ R.T).astype(np.float32))))
+    rhs = np.asarray(p.apply(jnp.asarray(x), jnp.asarray(r))) @ wigner_D(3, angles).T
+    _close(lhs, rhs, tol=5e-4)

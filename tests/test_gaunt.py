@@ -18,10 +18,11 @@ from repro.core.gaunt import (
     sh_to_fourier,
 )
 from repro.core.irreps import num_coeffs
+from repro.testing import random_angles, random_array, wigner_D
 
 
 def _rand(shape, seed=0):
-    return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype=jnp.float32)
+    return jnp.asarray(random_array(shape, seed))
 
 
 def test_numpy_pipeline_exact():
@@ -77,14 +78,13 @@ def test_equivariance_rotation():
     """D(g) (x1 @G@ x2) == (D(g)x1) @G@ (D(g)x2) for random rotations."""
     L1, L2 = 2, 2
     Lout = L1 + L2
-    rng = np.random.default_rng(9)
-    x1 = rng.normal(size=num_coeffs(L1)).astype(np.float32)
-    x2 = rng.normal(size=num_coeffs(L2)).astype(np.float32)
+    x1 = random_array((num_coeffs(L1),), seed=9)
+    x2 = random_array((num_coeffs(L2),), seed=19)
     tp = GauntTensorProduct(L1, L2)
-    a, b, g = 0.7, 1.2, -0.4
-    D1 = so3.wigner_D_real_packed(L1, a, b, g).astype(np.float32)
-    D2 = so3.wigner_D_real_packed(L2, a, b, g).astype(np.float32)
-    D3 = so3.wigner_D_real_packed(Lout, a, b, g).astype(np.float32)
+    angles = random_angles(seed=9)
+    D1 = wigner_D(L1, angles)
+    D2 = wigner_D(L2, angles)
+    D3 = wigner_D(Lout, angles)
     lhs = D3 @ np.asarray(tp(jnp.asarray(x1), jnp.asarray(x2)))
     rhs = np.asarray(tp(jnp.asarray(D1 @ x1), jnp.asarray(D2 @ x2)))
     np.testing.assert_allclose(lhs, rhs, atol=3e-5)
