@@ -96,8 +96,16 @@ def run(L_list=(1, 2, 3, 4, 6), B_list=(64, 1024), backend: str = "auto", csv=Tr
                 p = eng.plan(L, L, L, backend=backend, **kw)
             heuristic = eng.select(p.key)
             t = time_fn(jax.jit(lambda a, b: p.apply(a, b)), x1, x2)
+            extra = {}
+            if heuristic != p.backend:
+                # cost-model/measured disagreement: time the heuristic pick so
+                # the record (and the CI guard) can bound the regret
+                ph = eng.plan(L, L, L, backend=heuristic, **kw)
+                th = time_fn(jax.jit(lambda a, b: ph.apply(a, b)), x1, x2)
+                extra = {"heuristic_us": round(th, 1),
+                         "heuristic_ratio": round(th / t, 2)}
             record(records, f"engine_pairwise_L{L}_B{B}", t, echo=csv,
-                   backend=p.backend, heuristic=heuristic)
+                   backend=p.backend, heuristic=heuristic, **extra)
         # conv_filter: the message-passing hot path
         B = B_list[-1]
         x = _rand((B, num_coeffs(L)), 2)
@@ -116,5 +124,151 @@ def run(L_list=(1, 2, 3, 4, 6), B_list=(64, 1024), backend: str = "auto", csv=Tr
     return records
 
 
+def run_chain(csv=True):
+    """Fourier-resident chain plans vs the looped per-product Fourier path.
+
+    Each workload is a *chained* product (many-body trees, shared-operand
+    selfmix, a conv layer stack with fixed edge geometry).  The looped
+    baseline pays the full SH->Fourier->SH round trip per product (the 'fft'
+    backend); the resident path plans the whole chain, converting each
+    operand once and projecting once.  Records per-workload eliminated
+    conversion counts (measured by the `repro.core.rep` counters, not
+    inferred) and end-to-end speedup.
+    """
+    import numpy as _np
+
+    from repro.core import rep
+    from repro.core.engine import expand_degree_weights
+    from repro.core.irreps import num_coeffs as _nc
+    from repro.core.rep import Rep
+    from repro.core.so3 import real_sph_harm_jax
+
+    records = []
+    eng = engine.get_engine()
+
+    def _counts(fn):
+        rep.reset_conversion_stats()
+        jax.block_until_ready(fn())
+        c = rep.conversion_stats()
+        return c["sh_to_fourier"], c["fourier_to_sh"]
+
+    # ---- chained products: many-body trees + shared-operand selfmix ------
+    workloads = [
+        # MACE's actual many-body shape: B_nu = A (x) A (x) A, per-operand
+        # weights — the shared operand converts ONCE (degree-resolved).
+        # Measured at L=3: the regime where the Fourier path is competitive
+        # at all (at L<=2 CG wins regardless of conversion strategy)
+        ("mace_mb_L3_nu3_B128", (3, 3, 3), 3, 128, True),
+        ("manybody_L3_nu3_B128", (3, 3, 3), 3, 128, False),
+        ("manybody_L2_nu4_B256", (2, 2, 2, 2), 2, 256, False),
+        ("manybody_L4_nu3_B64", (4, 4, 4), 4, 64, False),
+        ("selfmix_L4_B256", (4, 4), 4, 256, True),
+        ("selfmix_L6_B64", (6, 6), 6, 64, True),
+    ]
+    for name, Ls, Lout, B, shared in workloads:
+        if shared:
+            x = _rand((B, _nc(Ls[0])), 1)
+            xs = [x] * len(Ls)
+            ws = [_rand((B, L + 1), 10 + i) for i, L in enumerate(Ls)]
+        else:
+            xs = [_rand((B, _nc(L)), i) for i, L in enumerate(Ls)]
+            ws = None
+        plans = []
+        La = Ls[0]
+        for i, L in enumerate(Ls[1:], start=1):
+            Lt = Lout if i == len(Ls) - 1 else La + L
+            # the historical per-product default: direct for small L, else fft
+            be = engine.spectral_default(La, L)
+            plans.append(eng.plan(La, L, Lt, backend=be, requires_grad=False))
+            La += L
+
+        def looped(*xf, _plans=plans, _ws=ws, _Ls=Ls):
+            acc = xf[0]
+            if _ws is not None:
+                acc = acc * expand_degree_weights(_ws[0], _Ls[0]).astype(acc.dtype)
+            for i, p in enumerate(_plans, start=1):
+                acc = p.apply(acc, xf[i], None, _ws[i] if _ws else None)
+            return acc
+
+        cp = eng.plan_chain(Ls, Lout)  # auto: half grids, direct/rfft by shape
+
+        s2f_l, f2s_l = _counts(lambda: looped(*xs))
+        s2f_c, f2s_c = _counts(lambda: cp.apply(xs, weights=ws))
+        t_loop = time_fn(jax.jit(looped), *xs)
+        # time apply_jit, NOT jax.jit(cp.apply): a bare jit boundary hands a
+        # shared operand to n distinct tracers, silently un-deduplicating the
+        # very conversion this benchmark measures — apply_jit dedups first
+        t_chain = time_fn(lambda: cp.apply_jit(xs, weights=ws))
+        record(records, f"engine_chain_{name}", t_chain, echo=csv,
+               looped_us=round(t_loop, 1),
+               speedup_vs_looped=round(t_loop / t_chain, 2),
+               conversions=f"{s2f_c}+{f2s_c}",
+               looped_conversions=f"{s2f_l}+{f2s_l}",
+               pairs_eliminated=min(s2f_l - s2f_c, f2s_l - f2s_c),
+               conversions_eliminated=(s2f_l + f2s_l) - (s2f_c + f2s_c))
+
+    # ---- conv layer stack: filter resident across layers -----------------
+    # Execution matches the real consumer pattern: one dispatch per layer
+    # (each layer's plan is its own jitted call, as in the model stacks), so
+    # the looped path genuinely re-materializes and re-converts the filter
+    # every layer — a single mega-jit would let XLA CSE hide that cost, which
+    # is exactly what eager/streaming serving does NOT get.
+    for name, L, n_layers, B in [("convstack_L2_x8_B512", 2, 8, 512),
+                                 ("convstack_L3_x8_B256", 3, 8, 256)]:
+        x0 = _rand((B, _nc(L)), 3)
+        v = _np.random.default_rng(4).normal(size=(B, 3))
+        r = jnp.asarray(v / _np.linalg.norm(v, axis=-1, keepdims=True),
+                        jnp.float32)
+        be = engine.spectral_default(L, L)
+        p_loop = eng.plan(L, L, L, kind="conv_filter", backend=be,
+                          requires_grad=False)
+        # resident stack: half-grid (real-input) boundary plan + a filter
+        # converted once for the whole stack; conv follows the chain policy
+        p_res = eng.plan(L, L, L, backend="rfft", requires_grad=False,
+                         options={"boundary": ("sh", "fourier", "sh"),
+                                  "conv": "direct" if L <= 4 else "rfft"})
+        f_loop = jax.jit(lambda x, r: p_loop.apply(x, r))
+        f_res = jax.jit(lambda x, filt: p_res.apply(x, filt))
+        f_filt = jax.jit(
+            lambda r: Rep.from_sh(real_sph_harm_jax(L, r), L).to_fourier("half"))
+
+        def looped(x, r):
+            for _ in range(n_layers):
+                x = f_loop(x, r)
+            return x
+
+        def resident(x, r):
+            filt = f_filt(r)
+            for _ in range(n_layers):
+                x = f_res(x, filt)
+            return x
+
+        # count the REAL executions (eager per-layer applies — each dispatch
+        # runs its conversions), not a one-layer count extrapolated by hand
+        def looped_eager():
+            for _ in range(n_layers):
+                p_loop.apply(x0, r)
+
+        def resident_eager():
+            filt = Rep.from_sh(real_sph_harm_jax(L, r), L).to_fourier("half")
+            for _ in range(n_layers):
+                p_res.apply(x0, filt)
+
+        s2f_l, f2s_l = _counts(looped_eager)
+        s2f_c, f2s_c = _counts(resident_eager)
+        t_loop = time_fn(lambda: looped(x0, r))
+        t_chain = time_fn(lambda: resident(x0, r))
+        # each layer still checkpoints to SH (the projection is the layer's
+        # degree truncation), so the elision here is the filter's sh->F
+        record(records, f"engine_chain_{name}", t_chain, echo=csv,
+               looped_us=round(t_loop, 1),
+               speedup_vs_looped=round(t_loop / t_chain, 2),
+               conversions=f"{s2f_c}+{f2s_c}",
+               looped_conversions=f"{s2f_l}+{f2s_l}",
+               conversions_eliminated=(s2f_l + f2s_l) - (s2f_c + f2s_c))
+    return records
+
+
 if __name__ == "__main__":
     run()
+    run_chain()

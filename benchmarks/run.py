@@ -43,6 +43,7 @@ def main() -> None:
             B_list=(64, 1024) if args.fast else (64, 1024, 8192),
             backend=args.backend),
         "engine_batched": lambda: bench_engine.run_batched(backend=args.backend),
+        "engine_chain": bench_engine.run_chain,
         "fig1a": lambda: bench_feature_interaction.run(
             L_list=(1, 2, 3, 4) if args.fast else (1, 2, 3, 4, 5, 6, 8),
             backend=args.backend),

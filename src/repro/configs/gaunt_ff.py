@@ -23,6 +23,11 @@ class EquivariantConfig:
     # NOT a config knob — model loops reuse operand buffers across layers,
     # so donating them is only safe for callers that own buffer lifetimes
     shard_data: bool = False       # shard rows over the activation mesh's data axes
+    # basis-residency knob (DESIGN.md §6): keep layer-constant operands (the
+    # edge SH filter) Fourier-resident across the layer stack and run chained
+    # products through engine.plan_chain.  Off only for A/B debugging — the
+    # resident path is numerically identical up to dtype roundoff.
+    fourier_resident: bool = True
 
 
 gaunt_mace_ff = EquivariantConfig(

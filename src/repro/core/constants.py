@@ -30,6 +30,8 @@ __all__ = [
     "z_dense",
     "y_packed",
     "z_packed",
+    "y_half",
+    "z_half",
     "pack_index",
     "filter_fourier_col",
     "conv_u_index",
@@ -80,6 +82,18 @@ def z_packed(Lf: int, Lout: int, cdtype: str = "complex64") -> tuple[np.ndarray,
     """Packed Fourier->sh matrices (zp, zn)."""
     zp, zn = _fx.fourier_to_sh_packed(Lf, Lout, z=_z_raw(Lf, Lout))
     return zp.astype(cdtype), zn.astype(cdtype)
+
+
+@lru_cache(maxsize=None)
+def y_half(L: int, cdtype: str = "complex64") -> np.ndarray:
+    """Half (Hermitian / real-input) sh->Fourier tensor: v >= 0 columns only."""
+    return _fx.sh_to_fourier_half(L, y=_y_raw(L)).astype(cdtype)
+
+
+@lru_cache(maxsize=None)
+def z_half(Lf: int, Lout: int, cdtype: str = "complex64") -> np.ndarray:
+    """Half Fourier->sh tensor with the v < 0 columns conjugate-folded in."""
+    return _fx.fourier_to_sh_half(Lf, Lout, z=_z_raw(Lf, Lout)).astype(cdtype)
 
 
 @lru_cache(maxsize=None)
@@ -185,8 +199,9 @@ def gaunt_dense(L1: int, L2: int, Lout: int, dtype: str = "float32") -> np.ndarr
 # --------------------------------------------------------------------------
 
 _CACHED = (
-    _y_raw, _z_raw, y_dense, z_dense, y_packed, z_packed, pack_index,
-    filter_fourier_col, conv_u_index, cg_11_blocks, fused_matrices, gaunt_dense,
+    _y_raw, _z_raw, y_dense, z_dense, y_packed, z_packed, y_half, z_half,
+    pack_index, filter_fourier_col, conv_u_index, cg_11_blocks, fused_matrices,
+    gaunt_dense,
 )
 
 

@@ -96,6 +96,12 @@ class EquivariantConv:
     default); method='general' -> a generic pairwise backend with the SH
     filter materialized; method='auto' -> engine selection.  `backend` pins
     any registered backend directly.
+
+    Fourier-resident filters (DESIGN.md §6): when the edge geometry is fixed
+    across several products (a layer stack over one graph), materialize the
+    filter ONCE with :meth:`filter_rep` and pass the resulting Rep instead of
+    ``rhat`` — the call routes through a Fourier-boundary pairwise plan that
+    skips the filter's SH->Fourier conversion on every reuse.
     """
 
     def __init__(self, L1: int, L2: int, Lout: int | None = None, method: str = "escn",
@@ -126,6 +132,8 @@ class EquivariantConv:
         )
         self._plan = self._bplan.buckets[0].plan
         self.backend = self._plan.backend
+        self._donate, self._shard_spec = donate, shard_spec
+        self._resident_plan = None
 
     @property
     def plan(self):
@@ -135,7 +143,57 @@ class EquivariantConv:
     def batched_plan(self):
         return self._bplan
 
+    # -- Fourier-resident filters -----------------------------------------
+
+    def _spectral_backend(self) -> str:
+        """A Fourier-boundary-capable backend matching this conv's choice."""
+        from .engine import spectral_default
+
+        if self.backend in ("fft", "direct", "packed", "rfft"):
+            return self.backend
+        return spectral_default(self.L1, self.L2)
+
+    def filter_rep(self, rhat, w2=None):
+        """Materialize Y(rhat) and convert it to a Fourier-resident Rep once.
+
+        ``w2`` (per-degree filter weights [..., L2+1]) must be folded in here
+        — a resident operand cannot take per-degree weights downstream."""
+        from .gaunt import expand_degree_weights
+        from .rep import Rep
+        from .so3 import real_sph_harm_jax
+
+        filt = real_sph_harm_jax(self.L2, rhat)
+        if w2 is not None:
+            filt = filt * expand_degree_weights(w2, self.L2).astype(filt.dtype)
+        conversion = "half" if self._spectral_backend() == "rfft" else "dense"
+        return Rep.from_sh(filt, self.L2).to_fourier(conversion, self.cdtype)
+
     def __call__(self, x, rhat, w1=None, w2=None, w3=None):
-        """x [..., (L1+1)^2], rhat [..., 3] -> [..., (Lout+1)^2]."""
+        """x [..., (L1+1)^2], rhat [..., 3] (or a resident Rep from
+        :meth:`filter_rep`) -> [..., (Lout+1)^2]."""
+        from .rep import Rep
+
+        if isinstance(rhat, Rep):
+            from . import engine as _engine
+
+            if self._donate or self._shard_spec is not None:
+                # the resident route is a plain (unsharded, non-donating)
+                # pairwise plan; silently dropping the configured execution
+                # knobs would run replicated/undonated without warning
+                raise ValueError(
+                    "resident filters are not supported with donate/shard_spec "
+                    "(ROADMAP: resident batched plans); pass rhat to use the "
+                    "batched sharded path")
+            if w2 is not None:
+                raise ValueError("fold w2 into filter_rep(rhat, w2=...) — a "
+                                 "resident filter cannot be reweighted")
+            if self._resident_plan is None:
+                self._resident_plan = _engine.plan(
+                    self.L1, self.L2, self.Lout, kind="pairwise",
+                    backend=self._spectral_backend(),
+                    dtype=_engine._dtype_str(self.cdtype),
+                    options={"boundary": ("sh", "fourier", "sh")})
+            out = self._resident_plan.apply(x, rhat, w1, None, w3)
+            return out.astype(self.rdtype)
         out = self._bplan.apply([(x, rhat)], weights=[(w1, w2, w3)])[0]
         return out.astype(self.rdtype)

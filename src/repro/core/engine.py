@@ -12,9 +12,9 @@ A plan is keyed by ``(L1, L2, Lout, kind, batch_hint, dtype)`` (+ kind
 specific extras) and resolved to a registered backend:
 
     kind         backends
-    pairwise     dense_einsum | fft | direct | packed | fused_xla | fused_pallas
+    pairwise     dense_einsum | fft | direct | packed | rfft | fused_xla | fused_pallas
     conv_filter  escn_aligned + every pairwise backend (filter materialized)
-    manybody     dense_einsum | fft | direct | packed
+    manybody     dense_einsum | fft | direct | packed | rfft
     channel_mix  dense_einsum | fused_xla
 
 Backends carry capability flags (grad support, dtype support, whether Pallas
@@ -27,6 +27,17 @@ central :mod:`repro.core.constants` cache.
 Thin public wrappers (`GauntTensorProduct`, `EquivariantConv`,
 `manybody_gaunt_product`, `gaunt_tp_channel_mix`, the model `_tp` hook) keep
 their historical signatures and route here.
+
+Basis residency (DESIGN.md §6): spectral plans accept ``options={"boundary":
+(in1, in2, out)}`` with entries in {'sh', 'fourier'} — 'fourier' operands
+arrive as Fourier-resident :class:`repro.core.rep.Rep` grids (their SH->F
+conversion is skipped), and a 'fourier' output returns a Rep without the
+final projection.  ``engine.plan_chain(Ls, Lout)`` plans a whole chained
+product (the many-body tree, selfmix stacks): every operand is converted at
+most once — identical operands share one (degree-resolved) conversion even
+under different per-degree weights — grids combine by 2D convolution, and a
+single projection happens at the chain exit, eliminating the interior
+``fourier_to_sh . sh_to_fourier`` pairs the looped per-product path pays.
 
 Batched execution (DESIGN.md §5): ``engine.plan_batch(items, ...)`` buckets a
 ragged multi-degree workload (items sharing an (L1, L2, Lout) signature) into
@@ -58,13 +69,16 @@ __all__ = [
     "BatchItem",
     "ShardSpec",
     "BatchedGauntPlan",
+    "ChainPlan",
     "GauntEngine",
     "register_backend",
     "available_backends",
+    "spectral_default",
     "expand_degree_weights",
     "get_engine",
     "plan",
     "plan_batch",
+    "plan_chain",
 ]
 
 KINDS = ("pairwise", "conv_filter", "manybody", "channel_mix")
@@ -90,6 +104,14 @@ def _dtype_str(dtype) -> str:
     if s not in _RDTYPE:
         raise ValueError(f"unsupported dtype {s!r} (expected one of {sorted(_RDTYPE)})")
     return s
+
+
+def spectral_default(*Ls: int) -> str:
+    """The dense-spectral conv crossover (DESIGN.md §3.2): shift-and-add
+    'direct' wins on small grids, 'fft' above.  The ONE home of the
+    historical ``conv='auto'`` rule — wrappers, models, and benches all
+    call this instead of re-stating the threshold."""
+    return "direct" if max(Ls) <= 4 else "fft"
 
 
 def expand_degree_weights(w, L: int):
@@ -138,11 +160,16 @@ class Backend:
     supports_grad: bool = True
     dtypes: frozenset = frozenset({"float32", "bfloat16", "float64"})
     needs_interpret: bool = False  # Pallas: off-TPU only via (slow) interpret mode
+    # spectral backends can take/return Fourier-resident operands (Rep grids)
+    fourier_boundary: bool = False
 
     def eligible(self, key: PlanKey, requires_grad: bool) -> bool:
         if key.dtype not in self.dtypes:
             return False
         if requires_grad and not self.supports_grad:
+            return False
+        bound = key.opt("boundary")
+        if bound and "fourier" in bound and not self.fourier_boundary:
             return False
         if key.kind in self.kinds:
             return True
@@ -561,6 +588,171 @@ class BatchedGauntPlan:
 
 
 # --------------------------------------------------------------------------
+# chain plans: whole chained products, Fourier-resident between steps
+# (DESIGN.md §6) — each operand converts at most once, one projection at exit
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainPlan:
+    """A chained Gaunt product  x_1 (x) x_2 (x) ... (x) x_n  planned as one
+    Fourier-resident pass.
+
+    ``apply(xs, weights=None, w_out=None, out_basis='sh')``:
+      xs      : per-operand SH arrays, SH Reps, or Fourier-resident Reps
+                (residents skip conversion entirely).
+      weights : per-operand per-degree weights [..., L_i+1] (None entries ok).
+                Identical operand arrays convert ONCE even under different
+                weights (degree-resolved conversion, `sh_to_fourier_bydeg`).
+      w_out   : per-degree output weights, applied after the exit projection.
+      out_basis: 'sh' projects to degrees <= Lout; 'fourier' returns the
+                resident product Rep (requires Lout == sum(Ls), no w_out).
+
+    Versus the looped per-product left fold (2(n-1) sh->F + (n-1) F->sh),
+    a chain runs at most n sh->F and exactly one F->sh — eliminating
+    ``interior_pairs_eliminated`` = n-2 interior conversion pairs, plus one
+    more sh->F per duplicate operand.  Numerically identical to the looped
+    path up to dtype roundoff (2D convolution is associative).
+    """
+
+    Ls: tuple
+    Lout: int
+    conversion: str          # 'dense' | 'half'
+    conv: str                # 'fft' | 'direct' | 'rfft'
+    dtype: str
+    tree: bool
+    apply: Callable = dataclasses.field(repr=False, compare=False, default=None)
+    _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                         compare=False)
+
+    def apply_jit(self, xs, weights=None, w_out=None, out_basis: str = "sh"):
+        """``apply`` behind a cached ``jax.jit`` — the default consumer route.
+
+        Duplicate operands are detected BEFORE the jit boundary: jit hands
+        two identical arrays to two distinct tracers, which would defeat the
+        shared-operand single conversion, so the compiled chain closes over
+        the duplication pattern and sees each unique operand exactly once.
+        """
+        xs = list(xs)
+        uniq, idx_map, seen = [], [], {}
+        for x in xs:
+            k = seen.get(id(x))
+            if k is None:
+                k = seen[id(x)] = len(uniq)
+                uniq.append(x)
+            idx_map.append(k)
+        ws = list(weights) if weights is not None else None
+        key = (tuple(idx_map),
+               None if ws is None else tuple(w is not None for w in ws),
+               w_out is not None, out_basis)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            imap = tuple(idx_map)
+
+            def run(uniq, ws, w_out):
+                return self.apply([uniq[i] for i in imap], weights=ws,
+                                  w_out=w_out, out_basis=out_basis)
+
+            fn = self._jit_cache[key] = jax.jit(run)
+        return fn(uniq, ws, w_out)
+
+    @property
+    def interior_pairs_eliminated(self) -> int:
+        """fourier_to_sh . sh_to_fourier pairs the looped path pays and this
+        plan does not (excludes extra savings from duplicate operands)."""
+        return max(0, len(self.Ls) - 2)
+
+    def conversion_counts(self, n_unique: int | None = None) -> dict:
+        """{'chain': (s2f, f2s), 'looped': (s2f, f2s)} conversion tallies."""
+        n = len(self.Ls)
+        return {"chain": (n if n_unique is None else n_unique, 1),
+                "looped": (2 * (n - 1), n - 1)}
+
+    def describe(self) -> str:
+        return (f"chain(Ls={list(self.Ls)}, Lout={self.Lout}, "
+                f"conversion={self.conversion}, conv={self.conv}, "
+                f"dtype={self.dtype}, tree={self.tree}) "
+                f"[-{self.interior_pairs_eliminated} interior pairs]")
+
+
+def _build_chain(Ls: tuple, Lout: int, conversion: str, conv: str,
+                 dtype: str, tree: bool) -> Callable:
+    cd = _CDTYPE[dtype]
+    rd = _RDTYPE[dtype]
+    form = "half" if conversion == "half" else "dense"
+    Ltot = sum(Ls)
+    _warm_spectral_constants(conversion, Ls, Ltot, Lout, cd)
+
+    def apply(xs, weights=None, w_out=None, out_basis: str = "sh"):
+        from .gaunt import fourier_to_sh, sh_to_fourier, sh_to_fourier_bydeg
+        from .manybody import _tree_convolve
+        from .rep import Rep
+
+        xs = list(xs)
+        if len(xs) != len(Ls):
+            raise ValueError(f"chain got {len(xs)} operands for degrees {Ls}")
+        ws = list(weights) if weights is not None else [None] * len(xs)
+        if len(ws) != len(xs):
+            raise ValueError(f"chain got {len(ws)} weight entries for "
+                             f"{len(xs)} operands")
+        grids: list = [None] * len(xs)
+        groups: dict[int, list[int]] = {}
+        for i, x in enumerate(xs):
+            if isinstance(x, Rep):
+                if x.is_fourier:
+                    if x.L != Ls[i]:
+                        raise ValueError(f"operand {i}: resident bandlimit "
+                                         f"{x.L} != planned degree {Ls[i]}")
+                    if ws[i] is not None:
+                        raise ValueError("resident operands cannot take "
+                                         "per-degree weights (apply in SH)")
+                    grids[i] = x.with_form(form).data
+                    continue
+                xs[i] = x.data
+            groups.setdefault(id(xs[i]), []).append(i)
+        for idxs in groups.values():
+            x, L = xs[idxs[0]], Ls[idxs[0]]
+            w_ids = {id(ws[i]) for i in idxs}
+            if len(idxs) == 1 or len(w_ids) == 1:
+                # one conversion; duplicates (same weights too) share the grid
+                F = sh_to_fourier(_wmul(x, ws[idxs[0]], L), L, conversion,
+                                  jnp.dtype(cd))
+                for i in idxs:
+                    grids[i] = F
+            else:
+                # shared operand, different weights: ONE degree-resolved
+                # conversion + a cheap per-variant degree combination
+                Fl = sh_to_fourier_bydeg(x, L, conversion, jnp.dtype(cd))
+                for i in idxs:
+                    if ws[i] is None:
+                        grids[i] = jnp.sum(Fl, axis=-3)
+                    else:
+                        grids[i] = jnp.einsum("...l,...luv->...uv",
+                                              ws[i].astype(Fl.dtype), Fl)
+        if tree:
+            F = _tree_convolve(grids, conv, herm=(form == "half"))
+        else:
+            from .gaunt import conv2d_full, conv2d_herm
+
+            fn = conv2d_herm if form == "half" else conv2d_full
+            F = grids[0]
+            for G in grids[1:]:
+                F = fn(F, G, conv)
+        if out_basis == "fourier":
+            if w_out is not None:
+                raise ValueError("w_out applies in SH; project first")
+            if Lout != Ltot:
+                raise ValueError(f"out_basis='fourier' keeps the full grid "
+                                 f"(L={Ltot}); plan with Lout={Ltot} or "
+                                 "project to SH")
+            return Rep(F, Ltot, "fourier", form)
+        out = fourier_to_sh(F, Ltot, Lout, conversion, rd)
+        return _wmul(out, w_out, Lout)
+
+    return apply
+
+
+# --------------------------------------------------------------------------
 # cost model (relative real-MAC counts; calibrated coarsely, see DESIGN.md §4)
 # --------------------------------------------------------------------------
 
@@ -626,6 +818,24 @@ def _cost_packed(key):
     return _spectral_common(key, conv, packed=True)
 
 
+def _cost_rfft(key):
+    """Half (Hermitian) conversions + real spatial rfft convolution."""
+    B, d1, d2, do, n1, n2, N = _dims(key)
+    if key.kind == "manybody":
+        Ls = key.opt("Ls", (key.L1, key.L2))
+        Lt = sum(Ls)
+        Nr = 2 * Lt + 2
+        conv_in = sum(2.0 * B * num_coeffs(L) * (2 * L + 1) * (L + 1) for L in Ls)
+        convs = 1.5 * _C_FFT * len(Ls) * B * Nr * Nr * max(1.0, math.log2(Nr * Nr))
+        proj = _C_CPLX * B * Nr * (Lt + 1) * num_coeffs(key.Lout) / 2
+        return conv_in + convs + proj + _OVERHEAD * (6 + 2 * len(Ls))
+    Nr = N + 1  # the even alias-free spatial grid 2(L1+L2)+2
+    conv_in = 2.0 * B * (d1 * n1 * (key.L1 + 1) + d2 * n2 * (key.L2 + 1))
+    c = 1.5 * _C_FFT * B * Nr * Nr * max(1.0, math.log2(Nr * Nr)) + B * Nr * Nr
+    proj = _C_CPLX * B * N * (key.L1 + key.L2 + 1) * do / 2
+    return conv_in + c + proj + _OVERHEAD * 9
+
+
 def _cost_manybody_spectral(key: PlanKey, conv: str, packed: bool) -> float:
     Ls = key.opt("Ls", (key.L1, key.L2))
     B = key.batch_hint or 1
@@ -642,7 +852,11 @@ def _cost_fused(key: PlanKey, pallas: bool) -> float:
     B, d1, d2, do, n1, n2, N = _dims(key)
     Nf = 2 * (key.L1 + key.L2) + 2
     G = ((Nf * Nf + 127) // 128) * 128
-    c = B * G * (d1 + d2 + do) + _OVERHEAD * 4
+    # x4: the collocation matmuls are skinny (G >> d, memory-bound) while
+    # dense_einsum is one well-blocked contraction — measured crossovers
+    # (BENCH_gaunt.json engine_pairwise_L6_B64 et al.) sit ~4x off the raw
+    # MAC ratio, so fold that into the per-element constant
+    c = 4.0 * B * G * (d1 + d2 + do) + _OVERHEAD * 4
     if key.kind == "channel_mix":
         c = 16.0 * B * G * (d1 + d2 + do) + _OVERHEAD * 4
     if pallas:
@@ -710,33 +924,46 @@ def _build_dense_einsum(key: PlanKey) -> Callable:
     return apply_pair
 
 
+def _warm_spectral_constants(conversion: str, Ls, Lf: int, Lout: int, cd) -> None:
+    """Build the conversion constants at plan time so jit tracing never
+    re-runs numpy precompute."""
+    warm_y = {"dense": constants.y_dense, "packed": constants.y_packed,
+              "half": constants.y_half}[conversion]
+    warm_z = {"dense": constants.z_dense, "packed": constants.z_packed,
+              "half": constants.z_half}[conversion]
+    for L in Ls:
+        warm_y(L, cd)
+    warm_z(Lf, Lout, cd)
+
+
+def _resident_grid(op, L: int, form: str):
+    """A 'fourier' boundary operand: a Rep (validated) or a raw grid."""
+    from .rep import Rep
+
+    if isinstance(op, Rep):
+        if op.basis != "fourier":
+            raise ValueError("boundary='fourier' operand must be Fourier-resident "
+                             f"(got basis={op.basis!r}; convert with .to_fourier())")
+        if op.L != L:
+            raise ValueError(f"resident operand bandlimit {op.L} != planned degree {L}")
+        return op.with_form(form).data
+    return op
+
+
 def _build_spectral(key: PlanKey, conversion: str, conv: str) -> Callable:
-    from .gaunt import conv2d_full, fourier_to_sh, sh_to_fourier  # lazy: gaunt imports engine
+    from .gaunt import conv2d_full, conv2d_herm, fourier_to_sh, sh_to_fourier  # lazy: gaunt imports engine
 
     cd = _CDTYPE[key.dtype]
     rd = _RDTYPE[key.dtype]
-    # warm constants at plan time so jit tracing never re-runs numpy precompute
-    if key.kind != "manybody":
-        if conversion == "dense":
-            constants.y_dense(key.L1, cd), constants.y_dense(key.L2, cd)
-            constants.z_dense(key.L1 + key.L2, key.Lout, cd)
-        else:
-            constants.y_packed(key.L1, cd), constants.y_packed(key.L2, cd)
-            constants.z_packed(key.L1 + key.L2, key.Lout, cd)
+    form = "half" if conversion == "half" else "dense"
+    conv_fn = conv2d_herm if conversion == "half" else conv2d_full
 
     if key.kind == "manybody":
         from .manybody import _tree_convolve
 
         Ls = key.opt("Ls")
         Ltot = sum(Ls)
-        if conversion == "dense":
-            for L in Ls:
-                constants.y_dense(L, cd)
-            constants.z_dense(Ltot, key.Lout, cd)
-        else:
-            for L in Ls:
-                constants.y_packed(L, cd)
-            constants.z_packed(Ltot, key.Lout, cd)
+        _warm_spectral_constants(conversion, Ls, Ltot, key.Lout, cd)
 
         def apply_mb(xs, weights=None):
             grids = []
@@ -744,17 +971,34 @@ def _build_spectral(key: PlanKey, conversion: str, conv: str) -> Callable:
                 if weights is not None and weights[i] is not None:
                     x = _wmul(x, weights[i], L)
                 grids.append(sh_to_fourier(x, L, conversion, jnp.dtype(cd)))
-            F = _tree_convolve(grids, conv)
+            F = _tree_convolve(grids, conv, herm=(conversion == "half"))
             return fourier_to_sh(F, Ltot, key.Lout, conversion, rd)
 
         return apply_mb
 
+    _warm_spectral_constants(conversion, (key.L1, key.L2), key.L1 + key.L2,
+                             key.Lout, cd)
+    b1, b2, bo = key.opt("boundary") or ("sh", "sh", "sh")
+
+    def convert_in(x, w, L, b):
+        if b == "fourier":
+            if w is not None:
+                raise ValueError("per-degree weights need an SH operand; apply "
+                                 "them before converting to the Fourier basis")
+            return _resident_grid(x, L, form)
+        return sh_to_fourier(_wmul(x, w, L), L, conversion, jnp.dtype(cd))
+
     def apply_pair(x1, x2, w1=None, w2=None, w3=None):
-        x1 = _wmul(x1, w1, key.L1)
-        x2 = _wmul(x2, w2, key.L2)
-        F1 = sh_to_fourier(x1, key.L1, conversion, jnp.dtype(cd))
-        F2 = sh_to_fourier(x2, key.L2, conversion, jnp.dtype(cd))
-        F3 = conv2d_full(F1, F2, conv)
+        F1 = convert_in(x1, w1, key.L1, b1)
+        F2 = convert_in(x2, w2, key.L2, b2)
+        F3 = conv_fn(F1, F2, conv)
+        if bo == "fourier":
+            from .rep import Rep
+
+            if w3 is not None:
+                raise ValueError("w3 applies in SH; a Fourier-boundary output "
+                                 "cannot carry per-degree output weights")
+            return Rep(F3, key.L1 + key.L2, "fourier", form)
         out = fourier_to_sh(F3, key.L1 + key.L2, key.Lout, conversion, rd)
         return _wmul(out, w3, key.Lout)
 
@@ -866,18 +1110,28 @@ register_backend(Backend(
     kinds=frozenset({"pairwise", "conv_filter", "manybody"}),
     build=lambda key: _build_spectral(key, "dense", "fft"),
     cost=_cost_fft,
+    fourier_boundary=True,
 ))
 register_backend(Backend(
     name="direct",
     kinds=frozenset({"pairwise", "conv_filter", "manybody"}),
     build=lambda key: _build_spectral(key, "dense", "direct"),
     cost=_cost_direct,
+    fourier_boundary=True,
 ))
 register_backend(Backend(
     name="packed",
     kinds=frozenset({"pairwise", "conv_filter", "manybody"}),
     build=lambda key: _build_spectral(key, "packed", key.opt("conv", "fft")),
     cost=_cost_packed,
+    fourier_boundary=True,
+))
+register_backend(Backend(
+    name="rfft",
+    kinds=frozenset({"pairwise", "conv_filter", "manybody"}),
+    build=lambda key: _build_spectral(key, "half", key.opt("conv", "rfft")),
+    cost=_cost_rfft,
+    fourier_boundary=True,
 ))
 register_backend(Backend(
     name="fused_xla",
@@ -914,6 +1168,7 @@ class GauntEngine:
     def __init__(self):
         self._plans: dict[tuple, GauntPlan] = {}
         self._batched: dict[tuple, BatchedGauntPlan] = {}
+        self._chains: dict[tuple, ChainPlan] = {}
         self._measured: dict[PlanKey, str] = {}
 
     # -- public API --------------------------------------------------------
@@ -931,7 +1186,21 @@ class GauntEngine:
         """
         if kind not in KINDS:
             raise ValueError(f"unknown kind {kind!r} (expected one of {KINDS})")
-        extra = tuple(sorted((options or {}).items()))
+        options = dict(options or {})
+        bound = options.get("boundary")
+        if bound is not None:
+            bound = tuple(bound)
+            if kind != "pairwise":
+                raise ValueError("boundary options are only defined for "
+                                 "pairwise plans (chains cover the rest)")
+            if len(bound) != 3 or any(b not in ("sh", "fourier") for b in bound):
+                raise ValueError(f"boundary must be 3 entries of 'sh'|'fourier', "
+                                 f"got {bound!r}")
+            if bound == ("sh", "sh", "sh"):
+                options.pop("boundary")  # the default; don't fragment the cache
+            else:
+                options["boundary"] = bound
+        extra = tuple(sorted(options.items()))
         if kind == "manybody":
             if Ls is None or len(Ls) < 2:
                 raise ValueError("manybody plans need Ls with >= 2 degrees")
@@ -945,6 +1214,10 @@ class GauntEngine:
             Lout = L1 + L2 if Lout is None else Lout
         if Lout > (sum(Ls) if kind == "manybody" else L1 + L2):
             raise ValueError("Lout cannot exceed the total degree (Gaunt selection rule)")
+        if bound is not None and bound[2] == "fourier" and Lout != L1 + L2:
+            raise ValueError("a Fourier-boundary output keeps the full product "
+                             f"grid (L={L1 + L2}); plan with Lout={L1 + L2} and "
+                             "project at the chain exit")
         key = PlanKey(L1, L2, Lout, kind, batch_hint, _dtype_str(dtype), extra)
         cache_key = (key, backend, tune, requires_grad)
         hit = self._plans.get(cache_key)
@@ -1043,6 +1316,56 @@ class GauntEngine:
         self._batched[cache_key] = bp
         return bp
 
+    def plan_chain(self, Ls, Lout: int | None = None, *,
+                   conversion: str | None = None, conv: str | None = None,
+                   dtype="float32", tree: bool = True) -> ChainPlan:
+        """Plan a chained product  x_1 (x) ... (x) x_n  as ONE resident pass.
+
+        Ls: per-operand max degrees (n >= 2).  Lout defaults to sum(Ls).
+        conversion: 'half' (Hermitian real-input grids) or 'dense'; default
+        (None) is 'half' — it halves conversion FLOPs for free.
+        conv: grid-combination method — 'rfft' (half only), 'fft', 'direct';
+        default (None) follows the measured crossover: 'direct' for a single
+        small product (len == 2, max L <= 4, tiny grids where shift-and-add
+        wins), 'rfft' otherwise (longer chains grow interior grids past the
+        spatial-FFT crossover); dense conversions keep the historical
+        direct/fft small-L rule.
+        tree=True combines grids divide-and-conquer (the paper's many-body
+        parallelization); False is the sequential left fold.
+
+        Every operand converts at most once (duplicates share a single
+        degree-resolved conversion even with different per-degree weights),
+        interior products stay in the Fourier basis, and a single projection
+        runs at the exit — see :class:`ChainPlan`.
+        """
+        Ls = tuple(int(L) for L in Ls)
+        if len(Ls) < 2:
+            raise ValueError("chain plans need at least 2 operands")
+        Lout = sum(Ls) if Lout is None else int(Lout)
+        if Lout > sum(Ls):
+            raise ValueError("Lout cannot exceed the total degree (Gaunt selection rule)")
+        if conversion is None:
+            conversion = "half"
+        if conversion not in ("dense", "half"):
+            raise ValueError(f"chain conversion must be 'dense'|'half', got {conversion!r}")
+        if conv is None:
+            if conversion == "half":
+                conv = "direct" if (len(Ls) == 2 and max(Ls) <= 4) else "rfft"
+            else:
+                conv = spectral_default(*Ls)
+        if conv == "rfft" and conversion != "half":
+            raise ValueError("conv='rfft' operates on half grids (conversion='half')")
+        dts = _dtype_str(dtype)
+        key = (Ls, Lout, conversion, conv, dts, tree)
+        hit = self._chains.get(key)
+        if hit is not None:
+            return hit
+        cp = ChainPlan(Ls=Ls, Lout=Lout, conversion=conversion, conv=conv,
+                       dtype=dts, tree=tree,
+                       apply=_build_chain(Ls, Lout, conversion, conv, dts, tree))
+        self._chains[key] = cp
+        return cp
+
     def select(self, key: PlanKey, tune: str = "heuristic",
                requires_grad: bool = True) -> str:
         """Pick the backend for ``key`` by cost model or measurement."""
@@ -1064,6 +1387,7 @@ class GauntEngine:
     def clear(self) -> None:
         self._plans.clear()
         self._batched.clear()
+        self._chains.clear()
         self._measured.clear()
 
     # -- measured autotune -------------------------------------------------
@@ -1141,3 +1465,8 @@ def plan(*args, **kw) -> GauntPlan:
 def plan_batch(*args, **kw) -> BatchedGauntPlan:
     """Module-level shorthand for ``get_engine().plan_batch(...)``."""
     return _ENGINE.plan_batch(*args, **kw)
+
+
+def plan_chain(*args, **kw) -> ChainPlan:
+    """Module-level shorthand for ``get_engine().plan_chain(...)``."""
+    return _ENGINE.plan_chain(*args, **kw)

@@ -18,9 +18,18 @@ by expanding Theta sin t in its (finite) theta-Fourier series and using
 
 Both tensors are numpy float64/complex128 precompute; `packed` variants expose
 the v = +-m block sparsity as stacked per-|m| matmuls (the O(L^3) path; the
-dense einsum is the O(L^4)-but-MXU-friendly path).  The builders here are
-*pure* — caching lives in `core.constants`, the engine's single constant-cache
-module (DESIGN.md §2.4); only the internal theta-integral memo stays local.
+dense einsum is the O(L^4)-but-MXU-friendly path); `half` variants exploit the
+Hermitian symmetry F[-u,-v] = conj(F[u,v]) of any *real* spherical function's
+coefficient grid, storing only the v >= 0 columns (the real-input packed form
+— it halves conversion FLOPs and enables the rfft-based spatial convolution,
+see `core.gaunt.conv2d_herm`).  The builders here are *pure* — caching lives
+in `core.constants`, the engine's single constant-cache module (DESIGN.md
+§2.4); only the internal theta-integral memo stays local.
+
+This module also hosts the jax-side *grid ops* used by Fourier-resident
+activations (`core.rep.Rep`): centered bandlimit resize and Hermitian
+pack/unpack, so a resident tensor can change grid size or storage form
+without ever leaving the Fourier basis.
 """
 from __future__ import annotations
 
@@ -37,6 +46,12 @@ __all__ = [
     "fourier_to_sh_dense",
     "sh_to_fourier_packed",
     "fourier_to_sh_packed",
+    "sh_to_fourier_half",
+    "fourier_to_sh_half",
+    "grid_resize",
+    "grid_resize_half",
+    "pack_hermitian",
+    "unpack_hermitian",
 ]
 
 
@@ -197,3 +212,90 @@ def fourier_to_sh_packed(Lf: int, Lout: int, z: np.ndarray | None = None) -> tup
                 zp[mm, 1, l] = z[:, Lf + mm, idx(l, -mm)]
                 zn[mm, 1, l] = z[:, Lf - mm, idx(l, -mm)]
     return zp, zn
+
+
+# --------------------------------------------------------------------------
+# half (Hermitian, real-input) forms
+# --------------------------------------------------------------------------
+#
+# The torus coefficient grid of a REAL spherical function satisfies
+#     F[-u, -v] = conj(F[u, v]),
+# so the v >= 0 columns determine the whole grid.  The half form stores
+# exactly those columns: Fh[..., u, v] with u centered (2L+1) and v = 0..L.
+
+
+def sh_to_fourier_half(L: int, y: np.ndarray | None = None) -> np.ndarray:
+    """yh[(L+1)^2, 2L+1 (u), L+1 (v >= 0)] — the v >= 0 columns of `y_dense`."""
+    y = sh_to_fourier_dense(L) if y is None else y
+    return np.ascontiguousarray(y[:, :, L:])
+
+
+def fourier_to_sh_half(Lf: int, Lout: int, z: np.ndarray | None = None) -> np.ndarray:
+    """zh[2Lf+1 (u), Lf+1 (v >= 0), (Lout+1)^2] with the v < 0 columns folded in.
+
+    For Hermitian F,  Re(sum_{u,v} F[u,v] z[u,v,k])
+      = Re( sum_u F[u,0] z[u,0,k]
+            + sum_{u,v>0} F[u,v] (z[u,v,k] + conj(z[-u,-v,k])) ),
+    so  x = Re(einsum('...uv,uvk->...k', Fh, zh))  is exact.
+    """
+    z = fourier_to_sh_dense(Lf, Lout) if z is None else z
+    zh = z[:, Lf:, :].copy()  # columns v = 0..Lf
+    # fold conj(z[-u, -v, k]) into the v = 1..Lf columns (u flipped)
+    zh[:, 1:, :] += np.conj(z[::-1, Lf - 1 :: -1, :])
+    return zh
+
+
+# --------------------------------------------------------------------------
+# jax grid ops for Fourier-resident tensors (basis-preserving reshapes)
+# --------------------------------------------------------------------------
+
+
+def pack_hermitian(F, L: int):
+    """Full centered grid [..., 2L+1, 2L+1] -> half form [..., 2L+1, L+1].
+
+    Keeps the v >= 0 columns; valid (lossless) only for grids of *real*
+    spherical functions, which is every grid produced by `sh_to_fourier` of
+    real SH coefficients and every convolution of such grids.
+    """
+    return F[..., L:]
+
+
+def unpack_hermitian(Fh, L: int):
+    """Half form [..., 2L+1, L+1] -> full grid via F[-u,-v] = conj(F[u,v])."""
+    import jax.numpy as jnp  # local: keep the numpy builders importable sans jax
+
+    neg = jnp.conj(jnp.flip(Fh[..., 1:], axis=(-2, -1)))  # v = -L .. -1
+    return jnp.concatenate([neg, Fh], axis=-1)
+
+
+def grid_resize(F, L_from: int, L_to: int):
+    """Centered bandlimit change of a full grid: zero-pad up or truncate down.
+
+    Padding (L_to > L_from) is exact.  Truncation is exact only when the
+    resident function is actually bandlimited at L_to — chain exits that need
+    a *projection* to lower degrees must go through `fourier_to_sh` instead.
+    """
+    import jax.numpy as jnp
+
+    d = L_to - L_from
+    if d == 0:
+        return F
+    if d > 0:
+        pad = [(0, 0)] * (F.ndim - 2) + [(d, d), (d, d)]
+        return jnp.pad(F, pad)
+    c = -d
+    return F[..., c:-c, c:-c]
+
+
+def grid_resize_half(Fh, L_from: int, L_to: int):
+    """`grid_resize` for half grids: u pads both sides, v pads the far end."""
+    import jax.numpy as jnp
+
+    d = L_to - L_from
+    if d == 0:
+        return Fh
+    if d > 0:
+        pad = [(0, 0)] * (Fh.ndim - 2) + [(d, d), (0, d)]
+        return jnp.pad(Fh, pad)
+    c = -d
+    return Fh[..., c:-c, : L_to + 1]

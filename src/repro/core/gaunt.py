@@ -27,14 +27,17 @@ import numpy as np
 
 from . import constants as _const
 from . import engine as _engine
+from . import rep as _rep
 from .engine import expand_degree_weights  # noqa: F401 — canonical impl lives there
-from .irreps import num_coeffs
+from .irreps import degree_slices, num_coeffs
 
 __all__ = [
     "GauntTensorProduct",
     "sh_to_fourier",
     "fourier_to_sh",
+    "sh_to_fourier_bydeg",
     "conv2d_full",
+    "conv2d_herm",
     "gaunt_product_numpy",
     "expand_degree_weights",
 ]
@@ -46,11 +49,20 @@ __all__ = [
 
 
 def sh_to_fourier(x, L: int, conversion: str = "dense", cdtype=jnp.complex64):
-    """x [..., (L+1)^2] real -> centered Fourier grid [..., 2L+1, 2L+1] complex."""
+    """x [..., (L+1)^2] real -> centered Fourier grid, complex.
+
+    conversion 'dense'/'packed' -> the full grid [..., 2L+1, 2L+1];
+    'half' -> the Hermitian (real-input) half form [..., 2L+1, L+1]
+    holding only the v >= 0 columns (see `core.fourier`).
+    """
+    _rep.count_conversion("sh_to_fourier")
     cd = jnp.dtype(cdtype).name
     if conversion == "dense":
         y = jnp.asarray(_const.y_dense(L, cd))
         return jnp.einsum("...i,iuv->...uv", x.astype(y.dtype), y)
+    if conversion == "half":
+        yh = jnp.asarray(_const.y_half(L, cd))
+        return jnp.einsum("...i,iuv->...uv", x.astype(yh.dtype), yh)
     if conversion == "packed":
         yp, yn = (jnp.asarray(a) for a in _const.y_packed(L, cd))
         gidx, mask = _const.pack_index(L)
@@ -67,11 +79,19 @@ def sh_to_fourier(x, L: int, conversion: str = "dense", cdtype=jnp.complex64):
 
 
 def fourier_to_sh(F, Lf: int, Lout: int, conversion: str = "dense", rdtype=jnp.float32):
-    """Centered grid [..., 2Lf+1, 2Lf+1] -> real irreps [..., (Lout+1)^2]."""
+    """Centered grid -> real irreps [..., (Lout+1)^2].
+
+    conversion 'dense'/'packed' expect the full grid [..., 2Lf+1, 2Lf+1];
+    'half' expects the Hermitian half form [..., 2Lf+1, Lf+1].
+    """
+    _rep.count_conversion("fourier_to_sh")
     cd = F.dtype.name
     if conversion == "dense":
         z = jnp.asarray(_const.z_dense(Lf, Lout, cd))
         return jnp.einsum("...uv,uvk->...k", F, z).real.astype(rdtype)
+    if conversion == "half":
+        zh = jnp.asarray(_const.z_half(Lf, Lout, cd))
+        return jnp.einsum("...uv,uvk->...k", F, zh).real.astype(rdtype)
     if conversion == "packed":
         zp, zn = (jnp.asarray(a) for a in _const.z_packed(Lf, Lout, cd))
         mmax = min(Lf, Lout)
@@ -124,6 +144,71 @@ def conv2d_full(F1, F2, method: str = "fft"):
     raise ValueError(f"unknown conv method {method!r}")
 
 
+def sh_to_fourier_bydeg(x, L: int, conversion: str = "dense", cdtype=jnp.complex64):
+    """Degree-resolved conversion: x [..., (L+1)^2] -> [..., L+1, n, nv].
+
+    Slice l of the result is the grid contribution of degree l alone, so the
+    full grid of any per-degree reweighting  w . x  is the cheap combination
+    ``einsum('...l,...luv->...uv', w, Fl)`` — ONE conversion serves every
+    reweighted variant of the same tensor (chain plans use this to convert a
+    shared operand once; see DESIGN.md §6).  Total FLOPs equal one ordinary
+    `sh_to_fourier` (the conversion tensor is block-diagonal over l).
+    """
+    _rep.count_conversion("sh_to_fourier")
+    cd = jnp.dtype(cdtype).name
+    if conversion == "dense":
+        y = _const.y_dense(L, cd)
+    elif conversion == "half":
+        y = _const.y_half(L, cd)
+    else:
+        raise ValueError(f"bydeg conversion supports 'dense'|'half', got {conversion!r}")
+    yj = jnp.asarray(y)
+    parts = [jnp.einsum("...i,iuv->...uv", x[..., sl].astype(yj.dtype), yj[sl])
+             for sl in degree_slices(L)]
+    return jnp.stack(parts, axis=-3)
+
+
+def _herm_spatial(Fh, L: int, N: int):
+    """Half grid [..., 2L+1, L+1] -> real spatial samples [..., N, N].
+
+    After the (full) inverse transform over u, each row's v-spectrum of a
+    real spherical function is Hermitian in v alone, so `irfft2` applies
+    directly to the standard-order half spectrum.
+    """
+    pos = Fh[..., L:, :]   # u = 0..L
+    neg = Fh[..., :L, :]   # u = -L..-1  -> rows N-L..N-1
+    lead = Fh.shape[:-2]
+    mid = jnp.zeros(lead + (N - 2 * L - 1, L + 1), dtype=Fh.dtype)
+    G = jnp.concatenate([pos, mid, neg], axis=-2)          # [..., N, L+1]
+    G = jnp.pad(G, [(0, 0)] * len(lead) + [(0, 0), (0, N // 2 + 1 - (L + 1))])
+    return jnp.fft.irfft2(G, s=(N, N)) * (N * N)
+
+
+def conv2d_herm(F1h, F2h, method: str = "rfft"):
+    """Full 2D convolution of Hermitian *half* grids -> product half grid.
+
+    F1h [..., 2L1+1, L1+1], F2h [..., 2L2+1, L2+1] -> [..., 2Lt+1, Lt+1]
+    with Lt = L1+L2.  method='rfft' multiplies the (real) spatial samples on
+    an alias-free N x N grid and transforms back with `rfft2` — all-real
+    FLOPs and half-size spectra, the real-input analogue of the fft path.
+    Any other method unpacks to full grids, runs `conv2d_full`, and repacks.
+    """
+    L1 = (F1h.shape[-2] - 1) // 2
+    L2 = (F2h.shape[-2] - 1) // 2
+    Lt = L1 + L2
+    if method != "rfft":
+        from .fourier import pack_hermitian, unpack_hermitian
+
+        full = conv2d_full(unpack_hermitian(F1h, L1), unpack_hermitian(F2h, L2),
+                           method)
+        return pack_hermitian(full, Lt)
+    N = 2 * Lt + 2  # even and > 2Lt+1: alias-free for the product
+    s = _herm_spatial(F1h, L1, N) * _herm_spatial(F2h, L2, N)
+    H = jnp.fft.rfft2(s) / (N * N)                       # [..., N, N//2+1]
+    return jnp.concatenate([H[..., N - Lt :, : Lt + 1],  # u = -Lt..-1
+                            H[..., : Lt + 1, : Lt + 1]], axis=-2)
+
+
 # --------------------------------------------------------------------------
 # the module
 # --------------------------------------------------------------------------
@@ -159,7 +244,9 @@ class GauntTensorProduct:
         self.L1, self.L2 = L1, L2
         self.Lout = L1 + L2 if Lout is None else Lout
         self.conversion = conversion
-        self.conv = ("direct" if max(L1, L2) <= 4 else "fft") if conv == "auto" else conv
+        if conv == "auto":
+            conv = "rfft" if conversion == "half" else _engine.spectral_default(L1, L2)
+        self.conv = conv
         self.cdtype = cdtype
         self.rdtype = rdtype
         dtype = _engine._dtype_str(cdtype)
@@ -169,6 +256,8 @@ class GauntTensorProduct:
                 backend = self.conv  # 'fft' | 'direct'
             elif conversion == "packed":
                 backend, options = "packed", {"conv": self.conv}
+            elif conversion == "half":
+                backend, options = "rfft", {"conv": self.conv}
             else:
                 raise ValueError(f"unknown conversion {conversion!r}")
         elif backend == "auto":

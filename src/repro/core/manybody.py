@@ -8,18 +8,31 @@ stacked and convolved in a single batched call — this is the paper's
 parallelization, O(n^2 L^2 log L) vs O(n^3 L^2 log L) for the sequential
 left-fold.  No intermediate degree truncation (faithful to the paper);
 the final grid is projected to SH degrees <= Lout.
+
+`manybody_gaunt_product` is a thin consumer of the engine's **chain plans**
+(`engine.plan_chain`, DESIGN.md §6): the whole tree is one Fourier-resident
+pass — each operand converts at most once (a shared operand converts once
+*total*, even under different per-degree weights, via the degree-resolved
+conversion), interior products never round-trip through SH, and a single
+projection runs at the exit.  Operands may already be Fourier-resident
+``Rep``s (their conversion is skipped), and ``out_basis='fourier'`` keeps
+the product resident for a downstream chain.  The legacy batched/sharded
+dispatch (`engine.plan_batch`) remains behind ``donate``/``shard_spec``/
+``backend`` for callers that need those execution knobs.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .gaunt import conv2d_full
+from .gaunt import conv2d_full, conv2d_herm
 
 __all__ = ["manybody_gaunt_product", "manybody_selfmix"]
 
 
-def _tree_convolve(grids: list, method: str):
-    """grids: list of [..., n_i, n_i] centered coefficient grids."""
+def _tree_convolve(grids: list, method: str, herm: bool = False):
+    """grids: list of centered coefficient grids — full [..., n_i, n_i] or,
+    with ``herm``, Hermitian half forms [..., n_i, L_i+1]."""
+    conv = conv2d_herm if herm else conv2d_full
     while len(grids) > 1:
         nxt = []
         i = 0
@@ -35,11 +48,11 @@ def _tree_convolve(grids: list, method: str):
                     j += 2
                 A = jnp.stack(As, axis=0)
                 B = jnp.stack(Bs, axis=0)
-                C = conv2d_full(A, B, method)
+                C = conv(A, B, method)
                 nxt.extend([C[t] for t in range(C.shape[0])])
                 i = j
             else:
-                nxt.append(conv2d_full(a, b, method))
+                nxt.append(conv(a, b, method))
                 i += 2
         if i < len(grids):
             nxt.append(grids[i])
@@ -48,35 +61,55 @@ def _tree_convolve(grids: list, method: str):
 
 
 def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
-                           conv: str = "fft", conversion: str = "dense",
+                           conv: str | None = None, conversion: str | None = None,
                            cdtype=jnp.complex64, rdtype=jnp.float32,
                            backend: str | None = None, tune: str = "heuristic",
-                           donate: bool = False, shard_spec=None):
-    """xs: list of [..., (L_i+1)^2] features; Ls: their max degrees.
+                           donate: bool = False, shard_spec=None,
+                           out_basis: str = "sh"):
+    """xs: list of [..., (L_i+1)^2] features (or Fourier-resident ``Rep``s);
+    Ls: their max degrees.
 
     weights: optional list of per-degree weights w_i [..., L_i+1] (the paper's
-    reparameterized (lm)->l couplings).  Returns [..., (Lout+1)^2].
+    reparameterized (lm)->l couplings).  Returns [..., (Lout+1)^2], or a
+    resident ``Rep`` when ``out_basis='fourier'``.
 
-    Thin wrapper over the unified engine, routed through a batched plan
-    (kind='manybody'): leading dims flatten to one row axis executed as a
-    single fused invocation, with optional buffer donation and sharded
-    dispatch (`shard_spec`, see engine.ShardSpec).  (conversion, conv) map
-    onto the 'fft'/'direct'/'packed' backends; `backend` pins any registered
-    many-body backend ('auto' -> engine selection).
+    Default route: one Fourier-resident chain plan (`engine.plan_chain`) —
+    conversion/conv default to the plan's measured auto policy ('half' grids,
+    direct-vs-rfft by chain shape); 'dense' keeps full grids (conv
+    'fft'|'direct').  Passing ``backend`` / ``donate`` / ``shard_spec`` falls back to
+    the batched engine dispatch (kind='manybody', DESIGN.md §5), which keeps
+    donation and sharded execution but converts through the plan's own
+    boundary (no resident operands).
     """
     from . import engine as _engine
 
     assert len(xs) == len(Ls) and len(xs) >= 2
+    if (backend is None and not donate and shard_spec is None
+            and conversion in (None, "dense", "half")):
+        # jit-cached chain dispatch (apply_jit) so eager callers keep one
+        # compiled invocation per call, as the batched route gave them.
+        # ``tune`` has no effect here: chain conversion/conv follow the
+        # plan's measured auto policy (ROADMAP: fold chains into autotune).
+        cp = _engine.plan_chain(
+            Ls, Lout, conversion=conversion, conv=conv,
+            dtype=_engine._dtype_str(cdtype))
+        out = cp.apply_jit(list(xs), weights=weights, out_basis=out_basis)
+        return out if out_basis == "fourier" else out.astype(rdtype)
+    if out_basis != "sh":
+        raise ValueError("out_basis='fourier' requires the chain route "
+                         "(no backend/donate/shard_spec overrides)")
     options = None
-    if backend is None:
-        if conversion == "dense":
-            backend = conv  # 'fft' | 'direct'
+    if backend == "auto":
+        backend = None
+    elif backend is None:
+        if conversion in (None, "dense"):
+            backend = conv or "fft"
         elif conversion == "packed":
-            backend, options = "packed", {"conv": conv}
+            backend, options = "packed", {"conv": conv or "fft"}
+        elif conversion == "half":
+            backend, options = "rfft", {"conv": conv or "rfft"}
         else:
             raise ValueError(f"unknown conversion {conversion!r}")
-    elif backend == "auto":
-        backend = None
     item = _engine.BatchItem(Ls=tuple(int(L) for L in Ls), Lout=Lout,
                              options=tuple(sorted((options or {}).items())))
     bp = _engine.plan_batch([item], kind="manybody",
@@ -86,5 +119,9 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
 
 
 def manybody_selfmix(x, L: int, nu: int, Lout: int | None = None, weights=None, **kw):
-    """MACE-style B_nu = A (x) ... (x) A (nu operands)."""
+    """MACE-style B_nu = A (x) ... (x) A (nu operands).
+
+    The nu operands are the SAME tensor, so the chain route converts A to
+    the Fourier basis exactly once (degree-resolved when ``weights`` differ
+    per operand) instead of nu times."""
     return manybody_gaunt_product([x] * nu, [L] * nu, Lout=Lout, weights=weights, **kw)

@@ -1,0 +1,199 @@
+"""Basis-tagged representations — Fourier-resident activations (DESIGN.md §6).
+
+The Gaunt pipeline's cost at practical L is dominated by the SH <-> Fourier
+conversions, not the 2D convolution.  `Rep` makes the basis a first-class,
+persistent property of an activation so consumers (the engine's chain plans,
+the models, the serving engine) can keep tensors *resident* in the Fourier
+basis across consecutive products and only project back to SH where the
+math demands it (per-degree weights, gates, degree-wise channel mixing).
+
+A Rep carries:
+  basis : 'sh'      — ``data`` is the packed real irrep vector [..., (L+1)^2]
+          'fourier' — ``data`` is the centered torus-coefficient grid
+  form  : fourier storage: 'dense' full grid [..., 2L+1, 2L+1] complex, or
+          'half' Hermitian (real-input) form [..., 2L+1, L+1] keeping only
+          the v >= 0 columns (lossless for real spherical functions)
+  L     : the bandlimit (max SH degree / grid bandlimit)
+
+Rep is a jax pytree (``data`` is the single leaf; ``L``/``basis``/``form``
+are static), so Reps flow through ``jit``/``grad``/``vmap`` unchanged.
+
+This module also hosts the global conversion counters: every
+``sh_to_fourier`` / ``fourier_to_sh`` call (see `core.gaunt`) increments
+them, which is how tests and benchmarks *prove* that chain plans elide
+interior round trips instead of merely claiming to.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import fourier as _fx
+from .irreps import num_coeffs
+
+__all__ = [
+    "Rep",
+    "count_conversion",
+    "conversion_stats",
+    "reset_conversion_stats",
+]
+
+
+# --------------------------------------------------------------------------
+# conversion counters (incremented by core.gaunt at call/trace time)
+# --------------------------------------------------------------------------
+
+_COUNTS = {"sh_to_fourier": 0, "fourier_to_sh": 0}
+
+
+def count_conversion(name: str) -> None:
+    """Record one basis conversion (called by `core.gaunt`'s converters)."""
+    _COUNTS[name] += 1
+
+
+def conversion_stats() -> dict[str, int]:
+    """{'sh_to_fourier': n, 'fourier_to_sh': m} since the last reset.
+
+    Counts are incremented when the conversion *code path runs* — once per
+    eager call, once per jit trace.  To compare two execution strategies,
+    reset, trace/run each on fresh (uncached) callables, and diff.
+    """
+    return dict(_COUNTS)
+
+
+def reset_conversion_stats() -> None:
+    for k in _COUNTS:
+        _COUNTS[k] = 0
+
+
+# --------------------------------------------------------------------------
+# the Rep type
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Rep:
+    """A degree-L equivariant activation tagged with its current basis."""
+
+    data: object
+    L: int
+    basis: str = "sh"
+    form: str = "dense"
+
+    def __post_init__(self):
+        if self.basis not in ("sh", "fourier"):
+            raise ValueError(f"unknown basis {self.basis!r}")
+        if self.basis == "fourier" and self.form not in ("dense", "half"):
+            raise ValueError(f"unknown fourier form {self.form!r}")
+
+    # -- pytree protocol ---------------------------------------------------
+
+    def tree_flatten(self):
+        return (self.data,), (self.L, self.basis, self.form)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_sh(cls, x, L: int) -> "Rep":
+        if jnp.shape(x)[-1] != num_coeffs(L):
+            raise ValueError(
+                f"sh data last dim {jnp.shape(x)[-1]} != (L+1)^2 = {num_coeffs(L)}")
+        return cls(x, L, "sh")
+
+    @classmethod
+    def from_fourier(cls, F, L: int, form: str = "dense") -> "Rep":
+        n = 2 * L + 1
+        want = (n, n) if form == "dense" else (n, L + 1)
+        if jnp.shape(F)[-2:] != want:
+            raise ValueError(
+                f"fourier data trailing dims {jnp.shape(F)[-2:]} != {want} "
+                f"for L={L}, form={form!r}")
+        return cls(F, L, "fourier", form)
+
+    # -- basis / form changes ---------------------------------------------
+
+    def to_fourier(self, conversion: str = "dense", cdtype=jnp.complex64,
+                   form: str | None = None) -> "Rep":
+        """-> Fourier-resident Rep (a no-op modulo form when already there).
+
+        ``conversion`` is the SH->Fourier realization ('dense' | 'packed' |
+        'half'); ``form`` fixes the resident storage (defaults to 'half'
+        when conversion='half', else 'dense').
+        """
+        from . import gaunt as _g  # lazy: gaunt imports this module
+
+        if form is None:
+            form = "half" if conversion == "half" else "dense"
+        if self.basis == "fourier":
+            return self.with_form(form)
+        F = _g.sh_to_fourier(self.data, self.L, conversion, jnp.dtype(cdtype))
+        got = "half" if conversion == "half" else "dense"
+        return Rep(F, self.L, "fourier", got).with_form(form)
+
+    def to_sh(self, Lout: int | None = None, rdtype=jnp.float32) -> "Rep":
+        """Project to SH degrees <= Lout (default: this Rep's bandlimit)."""
+        from . import gaunt as _g
+
+        Lout = self.L if Lout is None else Lout
+        if self.basis == "sh":
+            if Lout > self.L:
+                raise ValueError(f"cannot raise SH degree {self.L} -> {Lout}")
+            x = self.data if Lout == self.L else self.data[..., : num_coeffs(Lout)]
+            return Rep(x, Lout, "sh")
+        conv = "half" if self.form == "half" else "dense"
+        x = _g.fourier_to_sh(self.data, self.L, Lout, conv, rdtype)
+        return Rep(x, Lout, "sh")
+
+    def with_form(self, form: str) -> "Rep":
+        """Change fourier storage form (Hermitian pack/unpack — no FLOPs)."""
+        if self.basis != "fourier" or form == self.form:
+            return self
+        if form == "half":
+            return Rep(_fx.pack_hermitian(self.data, self.L), self.L,
+                       "fourier", "half")
+        if form == "dense":
+            return Rep(_fx.unpack_hermitian(self.data, self.L), self.L,
+                       "fourier", "dense")
+        raise ValueError(f"unknown fourier form {form!r}")
+
+    def resize(self, L_new: int) -> "Rep":
+        """Change grid bandlimit without leaving the basis (pad is exact;
+        truncate assumes the content is bandlimited at ``L_new``)."""
+        if self.basis != "fourier":
+            raise ValueError("resize is a Fourier-grid op; project SH Reps "
+                             "with to_sh(Lout) instead")
+        fn = _fx.grid_resize_half if self.form == "half" else _fx.grid_resize
+        return Rep(fn(self.data, self.L, L_new), L_new, "fourier", self.form)
+
+    def grid(self, form: str = "dense"):
+        """The raw coefficient grid in the requested form (fourier Reps)."""
+        if self.basis != "fourier":
+            raise ValueError("grid() requires a Fourier-resident Rep")
+        return self.with_form(form).data
+
+    # -- conveniences ------------------------------------------------------
+
+    @property
+    def is_fourier(self) -> bool:
+        return self.basis == "fourier"
+
+    def astype(self, dtype) -> "Rep":
+        return dataclasses.replace(self, data=self.data.astype(dtype))
+
+    def __add__(self, other: "Rep") -> "Rep":
+        """Linear combination inside one basis (residuals on residents)."""
+        if not isinstance(other, Rep):
+            return NotImplemented
+        if (self.basis, self.L) != (other.basis, other.L):
+            raise ValueError(
+                f"cannot add Rep(basis={self.basis}, L={self.L}) and "
+                f"Rep(basis={other.basis}, L={other.L})")
+        o = other.with_form(self.form) if self.basis == "fourier" else other
+        return dataclasses.replace(self, data=self.data + o.data)

@@ -26,7 +26,7 @@ which corresponds to the unitary change of basis  S^l = U^l Y^l  with
 Wigner-3j is computed exactly (python ints / Fractions) via the Racah
 formula; Gaunt coefficients for *real* SH are assembled from an analytic
 azimuthal integral and a Gauss-Legendre polar integral that is **exact**
-because the integrand is polynomial in cos(t) (see DESIGN.md §8).
+because the integrand is polynomial in cos(t) (see DESIGN.md §9).
 """
 from __future__ import annotations
 

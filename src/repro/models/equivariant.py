@@ -89,10 +89,12 @@ _TP_BACKEND = {"gaunt": None, "gaunt_fused": "fused_xla", "gaunt_auto": "auto"}
 
 def _resolve_tp_backend(impl: str, L1: int, L2: int):
     """Map a tp_impl name to a concrete engine backend name (or None=auto)."""
+    from repro.core.engine import spectral_default
+
     backend = _TP_BACKEND[impl]
     if impl == "gaunt":
         # historical spectral default (GauntTensorProduct's conv='auto' rule)
-        backend = "direct" if max(L1, L2) <= 4 else "fft"
+        backend = spectral_default(L1, L2)
     elif backend == "auto":
         backend = None
     return backend
@@ -121,6 +123,29 @@ def _tp(cfg: EquivariantConfig, L1, L2, Lout):
         )
         return lambda a, b: bp.apply([(a, b)])[0]
     return lambda a, b: cg_full_tensor_product(a, b, L1, L2, Lout)
+
+
+def _tp_resident(cfg: EquivariantConfig, L1, L2, Lout):
+    """A Fourier-boundary tensor product for a *layer-constant* second
+    operand (DESIGN.md §6), or None when the config cannot use one.
+
+    Returns (to_rep, tp): ``to_rep(filt)`` converts the SH filter to a
+    Fourier-resident Rep ONCE; ``tp(x, rep)`` runs the product with the
+    filter conversion elided — a stack of n layers over one graph pays 1
+    filter conversion instead of n.
+    """
+    from repro.core import engine as _engine
+    from repro.core.rep import Rep
+
+    if (cfg.tp_impl not in ("gaunt", "gaunt_auto")
+            or not getattr(cfg, "fourier_resident", True)
+            or getattr(cfg, "shard_data", False)):
+        return None
+    backend = _resolve_tp_backend("gaunt", L1, L2)  # spectral: fft | direct
+    p = _engine.plan(L1, L2, Lout, kind="pairwise", backend=backend,
+                     options={"boundary": ("sh", "fourier", "sh")})
+    to_rep = lambda filt: Rep.from_sh(filt, L2).to_fourier("dense")  # noqa: E731
+    return to_rep, (lambda a, rep: p.apply(a, rep))
 
 
 # --------------------------------------------------------------------------
@@ -159,7 +184,17 @@ class MaceGaunt:
         return params
 
     def features(self, params, species, pos):
-        """-> per-atom invariant energy features."""
+        """-> per-atom invariant energy features.
+
+        Basis residency (DESIGN.md §6): the many-body self-product runs as
+        ONE chain plan per layer — A converts to the Fourier basis once
+        (degree-resolved, serving all nu reweighted operands) and projects
+        back once, instead of nu conversions and nu-1 round trips.  With
+        conv_impl='general' the edge filter Y(rhat), constant across layers,
+        converts once for the whole stack via `EquivariantConv.filter_rep`.
+        SH checkpoints stay where the math demands them: equi_linear mixes
+        and the gate act degree-wise on SH coefficients.
+        """
         c = self.cfg
         n = pos.shape[0]
         from repro.core.engine import ShardSpec
@@ -170,6 +205,10 @@ class MaceGaunt:
             shard_spec=ShardSpec() if getattr(c, "shard_data", False) else None,
         )
         rhat, dist, mask = _pair_geometry(pos, c.cutoff)
+        filt = None
+        if (c.conv_impl == "general" and getattr(c, "fourier_resident", True)
+                and not getattr(c, "shard_data", False)):
+            filt = conv.filter_rep(rhat[:, :, None, :])
         x = jnp.zeros((n, c.channels, num_coeffs(c.L)))
         x = x.at[..., 0].set(params["species"][species])
         for lp in params["layers"]:
@@ -178,7 +217,7 @@ class MaceGaunt:
             h = h.reshape(n, n, c.channels, c.L + 1)  # per-edge per-degree weights
             # messages: conv(x_j, r_ij) summed over j (channel-wise, eSCN path)
             xj = jnp.broadcast_to(x[None, :, :, :], (n, n, c.channels, x.shape[-1]))
-            m = conv(xj, rhat[:, :, None, :], w1=h)
+            m = conv(xj, filt if filt is not None else rhat[:, :, None, :], w1=h)
             m = jnp.sum(m * mask[:, :, None, None], axis=1)  # [n, C, dim]
             A = equi_linear(lp["mix"], m, c.L) + x
             # many-body: nu-fold Gaunt self-product, per-degree weights
@@ -262,18 +301,28 @@ class SegnnNBody:
     def forward(self, params, charge, pos, vel):
         c = self.cfg
         n = pos.shape[0]
-        tp = _tp(c, c.L, c.L_edge, c.L)
         rhat, dist, mask = _pair_geometry(pos, cutoff=1e9)  # fully connected
         x = equi_linear(params["embed"], self._node_feats(charge, vel), c.L)
         edge_sh = real_sph_harm_jax(c.L_edge, rhat)  # [n,n,(Le+1)^2]
+        # the edge filter is layer-constant: with the resident path it
+        # converts to the Fourier basis ONCE for the whole layer stack
+        # (n_layers - 1 conversions elided) instead of once per layer
+        res = _tp_resident(c, c.L, c.L_edge, c.L)
+        if res is not None:
+            to_rep, tp_res = res
+            edge_rep = to_rep(edge_sh[:, :, None, :])  # [n,n,1,...] broadcasts over C
+            tp = lambda a: tp_res(a, edge_rep)  # noqa: E731
+        else:
+            tp0 = _tp(c, c.L, c.L_edge, c.L)
+            tp = lambda a: tp0(a, jnp.broadcast_to(  # noqa: E731
+                edge_sh[:, :, None, :], (n, n, c.channels, edge_sh.shape[-1])))
         for lp in params["layers"]:
             rb = radial_basis(dist, c.n_radial, cutoff=10.0)
             h = jax.nn.silu(rb @ lp["radial"]["w1"]) @ lp["radial"]["w2"]
             h = h.reshape(n, n, c.channels, c.L + 1)
             xj = jnp.broadcast_to(x[None], (n, n, c.channels, x.shape[-1]))
             hw = expand_degree_weights(h, c.L)
-            m = tp(xj * hw, jnp.broadcast_to(edge_sh[:, :, None, :],
-                                             (n, n, c.channels, edge_sh.shape[-1])))
+            m = tp(xj * hw)
             m = jnp.sum(m * mask[:, :, None, None], axis=1)[..., : num_coeffs(c.L)]
             x = x + gate_apply(lp["gate"], equi_linear(lp["mix"], m, c.L), c.L)
             x = x + equi_linear(lp["self_mix"], x, c.L)
@@ -298,11 +347,20 @@ class SegnnNBody:
 
 @dataclasses.dataclass
 class SelfmixLayer:
-    """x -> x + mix(GauntTP(w1 . x, w2 . x)) — the paper's added layer."""
+    """x -> x + mix(GauntTP(w1 . x, w2 . x)) — the paper's added layer.
+
+    With ``resident`` (default) the spectral 'gaunt' impl runs as a chain
+    plan: the two operands are the SAME tensor under different per-degree
+    weights, so ONE degree-resolved conversion serves both (DESIGN.md §6) —
+    one sh->Fourier elided per call versus the looped per-operand path.
+    The residual and channel mix are degree-diagonal SH ops, so the layer
+    output checkpoints back to SH (as every gate/mix boundary must).
+    """
 
     L: int
     channels: int
     tp_impl: str = "gaunt"
+    resident: bool = True
 
     def init(self, key):
         k1, k2, k3 = jax.random.split(key, 3)
@@ -315,7 +373,13 @@ class SelfmixLayer:
 
     def __call__(self, params, x):
         L = self.L
-        if self.tp_impl in _TP_BACKEND:
+        if self.tp_impl == "gaunt" and self.resident:
+            from repro.core import engine as _engine
+
+            cp = _engine.plan_chain([L, L], Lout=L)
+            y = cp.apply_jit([x, x], weights=[params["w1"], params["w2"]],
+                             w_out=params["w3"][: L + 1])
+        elif self.tp_impl in _TP_BACKEND:
             from repro.core import engine as _engine
 
             bp = _engine.plan_batch([(L, L, L)], kind="pairwise",

@@ -14,7 +14,14 @@ force-field inference (energy/forces/relaxation requests on a Gaunt-MACE
 model): ragged molecules are padded into fixed atom slots, ghost atoms are
 parked beyond the cutoff and masked out of the energy, and every step
 evaluates ALL active slots in one jitted vmapped call — whose tensor
-products route through the engine's batched Gaunt plans (DESIGN.md §5).
+products route through the engine's batched Gaunt plans (DESIGN.md §5) and,
+since the basis-residency refactor (DESIGN.md §6), through Fourier-resident
+chain plans: inside every relaxation step each layer's many-body product
+converts once and projects once, and the compiled step function (plus the
+plan/constant caches backing it) is carried across ALL relaxation steps of
+every request — so the per-step cost is pure resident math, no replanning
+and no interior SH round trips.  ``warmup()`` builds and compiles that step
+on ghost-only slots so the first real request pays serving cost only.
 """
 from __future__ import annotations
 
@@ -175,7 +182,8 @@ class EquivariantServeEngine:
     """Continuous batching for a MaceGaunt-style model: fixed atom-padded
     slots, one fused batched evaluation per step for every active request."""
 
-    def __init__(self, model, params, n_slots: int = 4, max_atoms: int = 16):
+    def __init__(self, model, params, n_slots: int = 4, max_atoms: int = 16,
+                 warmup: bool = False):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -197,6 +205,18 @@ class EquivariantServeEngine:
         # host-side slot state), so donating them is safe on accelerators
         donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
         self._step_fn = jax.jit(batched, donate_argnums=donate)
+        if warmup:
+            self.warmup()
+
+    def warmup(self) -> None:
+        """Compile the fused step (and build every Gaunt chain/boundary plan
+        + conversion constant behind it) on ghost-only slots, so admission
+        latency for the first real request is serving cost only.  The
+        compiled step — with its Fourier-resident plans — is what every
+        subsequent relaxation step of every request reuses."""
+        jax.block_until_ready(self._step_fn(
+            self.params, jnp.asarray(self.species), jnp.asarray(self.pos),
+            jnp.asarray(self.mask)))
 
     def _parked(self) -> np.ndarray:
         """Ghost-atom positions: distinct sites far outside any cutoff, so

@@ -26,10 +26,10 @@ def _rand(shape, seed=0, dtype=jnp.float32):
 
 
 def test_registry_is_complete():
-    assert set(PAIRWISE) == {"dense_einsum", "fft", "direct", "packed",
+    assert set(PAIRWISE) == {"dense_einsum", "fft", "direct", "packed", "rfft",
                              "fused_xla", "fused_pallas"}
     assert set(CONV) == set(PAIRWISE) | {"escn_aligned"}
-    assert set(MANYBODY) == {"dense_einsum", "fft", "direct", "packed"}
+    assert set(MANYBODY) == {"dense_einsum", "fft", "direct", "packed", "rfft"}
     assert set(CHANNEL_MIX) == {"dense_einsum", "fused_xla"}
 
 

@@ -1,0 +1,194 @@
+"""SH <-> Fourier round-trip precision (DESIGN.md §6 acceptance).
+
+Exact float64 round trips (the conversion tensors are analytic), bounded
+float32/complex64 error up to L=8 for the dense, packed, and half (Hermitian
+real-input) forms, and chained-product (Fourier-resident) vs looped
+(per-product round trip) numerical identity including per-degree weights and
+gradients.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constants, engine
+from repro.core import fourier as fx
+from repro.core import rep as rep_mod
+from repro.core.cg import gaunt_einsum_reference
+from repro.core.gaunt import expand_degree_weights, fourier_to_sh, sh_to_fourier
+from repro.core.irreps import num_coeffs
+
+LS = [1, 2, 3, 5, 8]
+
+
+def _rand(shape, seed, dtype=np.float64):
+    return np.random.default_rng(seed).normal(size=shape).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# float64 exactness (numpy: the conversion tensors at full precision)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L", LS)
+def test_roundtrip_exact_float64_dense(L):
+    x = _rand((4, num_coeffs(L)), L)
+    y = constants.y_dense(L, "complex128")
+    z = constants.z_dense(L, L, "complex128")
+    F = np.einsum("...i,iuv->...uv", x, y)
+    back = np.einsum("...uv,uvk->...k", F, z).real
+    np.testing.assert_allclose(back, x, atol=1e-12)
+
+
+@pytest.mark.parametrize("L", LS)
+def test_roundtrip_exact_float64_half(L):
+    x = _rand((4, num_coeffs(L)), L + 10)
+    yh = constants.y_half(L, "complex128")
+    zh = constants.z_half(L, L, "complex128")
+    Fh = np.einsum("...i,iuv->...uv", x, yh)
+    back = np.einsum("...uv,uvk->...k", Fh, zh).real
+    np.testing.assert_allclose(back, x, atol=1e-12)
+    # the half grid really is the v >= 0 slab of the full (Hermitian) grid
+    F = np.einsum("...i,iuv->...uv", x, constants.y_dense(L, "complex128"))
+    np.testing.assert_allclose(Fh, F[..., L:], atol=1e-12)
+    np.testing.assert_allclose(F[..., ::-1, ::-1], np.conj(F), atol=1e-12)
+
+
+@pytest.mark.parametrize("L", LS)
+def test_roundtrip_exact_float64_truncating_projection(L):
+    """Projecting a bandlimited grid to FEWER degrees slices exactly."""
+    x = _rand((3, num_coeffs(L)), L + 20)
+    Lout = max(0, L - 1)
+    y = constants.y_dense(L, "complex128")
+    z = constants.z_dense(L, Lout, "complex128")
+    F = np.einsum("...i,iuv->...uv", x, y)
+    back = np.einsum("...uv,uvk->...k", F, z).real
+    np.testing.assert_allclose(back, x[..., : num_coeffs(Lout)], atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# float32 / complex64 bounded error (jax, all conversion forms)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("conversion", ["dense", "packed", "half"])
+@pytest.mark.parametrize("L", LS)
+def test_roundtrip_float32_bounded(conversion, L):
+    x = jnp.asarray(_rand((8, num_coeffs(L)), L + 30), jnp.float32)
+    F = sh_to_fourier(x, L, conversion, jnp.complex64)
+    back = fourier_to_sh(F, L, L, conversion, jnp.float32)
+    scale = float(jnp.abs(x).max())
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=2e-5 * max(1.0, scale))
+
+
+@pytest.mark.parametrize("L", LS)
+def test_grid_ops_roundtrip(L):
+    """resize up then down and pack/unpack are lossless."""
+    x = jnp.asarray(_rand((2, num_coeffs(L)), L + 40), jnp.float32)
+    F = sh_to_fourier(x, L, "dense", jnp.complex64)
+    up = fx.grid_resize(F, L, L + 3)
+    down = fx.grid_resize(up, L + 3, L)
+    np.testing.assert_allclose(np.asarray(down), np.asarray(F), atol=0)
+    Fh = fx.pack_hermitian(F, L)
+    full = fx.unpack_hermitian(Fh, L)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(F), atol=1e-6)
+    Fh_up = fx.grid_resize_half(Fh, L, L + 2)
+    np.testing.assert_allclose(
+        np.asarray(fx.grid_resize_half(Fh_up, L + 2, L)), np.asarray(Fh), atol=0)
+
+
+@pytest.mark.parametrize("L", LS)
+def test_rep_roundtrip_and_forms(L):
+    x = jnp.asarray(_rand((3, num_coeffs(L)), L + 50), jnp.float32)
+    r = rep_mod.Rep.from_sh(x, L)
+    for conversion in ("dense", "half"):
+        back = r.to_fourier(conversion).to_sh()
+        assert back.basis == "sh" and back.L == L
+        np.testing.assert_allclose(np.asarray(back.data), np.asarray(x), atol=2e-5)
+    # form change on the resident side is lossless
+    rf = r.to_fourier("dense")
+    np.testing.assert_allclose(
+        np.asarray(rf.with_form("half").with_form("dense").data),
+        np.asarray(rf.data), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# chained (Fourier-resident) vs looped (per-product round trip) identity
+# --------------------------------------------------------------------------
+
+
+def _looped_fold(xs, Ls, Lout, weights=None):
+    """The per-product path: every step converts in and projects out."""
+    acc, La = xs[0], Ls[0]
+    if weights is not None and weights[0] is not None:
+        acc = acc * expand_degree_weights(weights[0], La).astype(acc.dtype)
+    for i, (x, L) in enumerate(zip(xs[1:], Ls[1:]), start=1):
+        if weights is not None and weights[i] is not None:
+            x = x * expand_degree_weights(weights[i], L).astype(x.dtype)
+        last = i == len(Ls) - 1
+        Lt = Lout if last else La + L
+        p = engine.plan(La, L, Lt, backend="fft", requires_grad=True)
+        acc = p.apply(acc, x)
+        La += L
+    return acc
+
+
+@pytest.mark.parametrize("conversion", ["dense", "half"])
+def test_chain_matches_looped(conversion):
+    Ls = (2, 1, 2, 3)
+    Lout = 3
+    xs = [jnp.asarray(_rand((6, num_coeffs(L)), 60 + i), jnp.float32)
+          for i, L in enumerate(Ls)]
+    cp = engine.plan_chain(Ls, Lout, conversion=conversion)
+    got = cp.apply(xs)
+    ref = _looped_fold(xs, Ls, Lout)
+    scale = max(1.0, float(jnp.abs(ref).max()))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=5e-4 * scale)
+
+
+@pytest.mark.parametrize("conversion", ["dense", "half"])
+def test_chain_matches_looped_with_weights_and_grad(conversion):
+    L, nu, Lout = 2, 3, 2
+    x = jnp.asarray(_rand((4, num_coeffs(L)), 70), jnp.float32)
+    ws = [jnp.asarray(_rand((4, L + 1), 71 + i), jnp.float32) for i in range(nu)]
+
+    def chained(x):
+        cp = engine.plan_chain((L,) * nu, Lout, conversion=conversion)
+        return cp.apply([x] * nu, weights=ws)
+
+    def looped(x):
+        return _looped_fold([x] * nu, (L,) * nu, Lout, weights=ws)
+
+    got, ref = chained(x), looped(x)
+    scale = max(1.0, float(jnp.abs(ref).max()))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=5e-4 * scale)
+    g1 = jax.grad(lambda a: jnp.sum(chained(a) ** 2))(x)
+    g2 = jax.grad(lambda a: jnp.sum(looped(a) ** 2))(x)
+    gscale = max(1.0, float(jnp.abs(g2).max()))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=5e-4 * gscale)
+
+
+def test_chain_jit_matches_eager():
+    Ls = (2, 2, 2)
+    xs = [jnp.asarray(_rand((5, num_coeffs(2)), 80 + i), jnp.float32)
+          for i in range(3)]
+    cp = engine.plan_chain(Ls, 2)
+    eager = cp.apply(xs)
+    jitted = jax.jit(lambda *a: cp.apply(list(a)))(*xs)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager), atol=1e-5)
+
+
+def test_chain_oracle_reference():
+    """Chained product equals the exact dense-Gaunt fold, not just the
+    looped spectral path."""
+    Ls = (2, 2, 2)
+    xs = [jnp.asarray(_rand((4, num_coeffs(2)), 90 + i), jnp.float32)
+          for i in range(3)]
+    got = engine.plan_chain(Ls, 2).apply(xs)
+    acc = gaunt_einsum_reference(xs[0], xs[1], 2, 2)
+    acc = gaunt_einsum_reference(acc, xs[2], 4, 2, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(acc), atol=2e-3)

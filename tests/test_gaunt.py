@@ -35,8 +35,11 @@ def test_numpy_pipeline_exact():
         np.testing.assert_allclose(got, ref, atol=1e-12)
 
 
-@pytest.mark.parametrize("conversion", ["dense", "packed"])
-@pytest.mark.parametrize("conv", ["fft", "direct"])
+@pytest.mark.parametrize("conversion,conv", [
+    ("dense", "fft"), ("dense", "direct"),
+    ("packed", "fft"), ("packed", "direct"),
+    ("half", "rfft"), ("half", "direct"), ("half", "auto"),
+])
 def test_jax_paths_match_oracle(conversion, conv):
     L1, L2 = 3, 2
     x1 = _rand((4, num_coeffs(L1)), 2)
