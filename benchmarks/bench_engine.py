@@ -266,6 +266,40 @@ def run_chain(csv=True):
                conversions=f"{s2f_c}+{f2s_c}",
                looped_conversions=f"{s2f_l}+{f2s_l}",
                conversions_eliminated=(s2f_l + f2s_l) - (s2f_c + f2s_c))
+
+    # ---- eSCN geometry residency: Wigner blocks hoisted per geometry -----
+    # The rotation-aligned conv used to rebuild align_rotation + the CG
+    # Wigner recursion from the SAME layer-constant rhat inside every
+    # layer's dispatch; `EquivariantConv.geometry_rep` hoists them once per
+    # geometry (ROADMAP "eSCN geometry residency") and the aligned banded
+    # conv consumes the precomputed WignerBlocks through its bucket.
+    from repro.core.conv import EquivariantConv
+
+    for name, L, n_layers, B in [("escn_wigner_L2_x8_B512", 2, 8, 512),
+                                 ("escn_wigner_L3_x8_B256", 3, 8, 256)]:
+        x0 = _rand((B, _nc(L)), 5)
+        v = _np.random.default_rng(6).normal(size=(B, 3))
+        r = jnp.asarray(v / _np.linalg.norm(v, axis=-1, keepdims=True),
+                        jnp.float32)
+        conv = EquivariantConv(L, L, L, method="escn")
+
+        def looped(x, r, _conv=conv, _n=n_layers):
+            for _ in range(_n):
+                x = _conv(x, r)
+            return x
+
+        def resident(x, r, _conv=conv, _n=n_layers):
+            geom = _conv.geometry_rep(r)
+            for _ in range(_n):
+                x = _conv(x, geom)
+            return x
+
+        t_loop = time_fn(lambda: looped(x0, r))
+        t_res = time_fn(lambda: resident(x0, r))
+        record(records, f"engine_chain_{name}", t_res, echo=csv,
+               looped_us=round(t_loop, 1),
+               speedup_vs_looped=round(t_loop / t_res, 2),
+               wigner_builds=f"1-vs-{n_layers}")
     return records
 
 

@@ -8,12 +8,20 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "=== tier-1 tests (conformance files deferred to their own tier) ==="
+echo "=== tier-1 tests (conformance + resident-sharded files deferred to their own tiers) ==="
 python -m pytest -x -q \
-  --ignore=tests/test_equivariance.py --ignore=tests/test_engine_transforms.py "$@"
+  --ignore=tests/test_equivariance.py --ignore=tests/test_engine_transforms.py \
+  --ignore=tests/test_resident_batched.py "$@"
 
 echo "=== conformance tier: equivariance + transform/batched-plan parity ==="
 python -m pytest -q tests/test_equivariance.py tests/test_engine_transforms.py
+
+echo "=== resident x sharded tier: MaceGaunt shard_data+fourier_resident on 2 devices ==="
+# the unification gate: counter-proven no-fallback residency under
+# donate/shard_spec, and the sharded resident MaceGaunt matching the
+# unsharded legacy path numerically (subprocess tests set the XLA 2-device
+# flag) — a silent fallback or divergence fails CI here
+python -m pytest -q tests/test_resident_batched.py
 
 echo "=== batched-bench smoke (batched vs looped dispatch) ==="
 python -m benchmarks.run --fast --only engine_batched --json ''

@@ -24,9 +24,11 @@ class EquivariantConfig:
     # so donating them is only safe for callers that own buffer lifetimes
     shard_data: bool = False       # shard rows over the activation mesh's data axes
     # basis-residency knob (DESIGN.md §6): keep layer-constant operands (the
-    # edge SH filter) Fourier-resident across the layer stack and run chained
-    # products through engine.plan_chain.  Off only for A/B debugging — the
-    # resident path is numerically identical up to dtype roundoff.
+    # edge SH filter / eSCN Wigner blocks) Fourier-resident across the layer
+    # stack and run chained products through engine.plan_chain.  Composes
+    # with shard_data (resident grids shard like SH rows).  Off only for A/B
+    # debugging — the resident path is numerically identical up to dtype
+    # roundoff.
     fourier_resident: bool = True
 
 

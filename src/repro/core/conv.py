@@ -19,6 +19,9 @@ matrices instead).
 """
 from __future__ import annotations
 
+import dataclasses
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,6 +31,7 @@ __all__ = [
     "align_rotation",
     "wigner_blocks_from_rotmat",
     "apply_wigner_blocks",
+    "WignerBlocks",
     "EquivariantConv",
 ]
 
@@ -82,6 +86,39 @@ def apply_wigner_blocks(Ds, x, transpose: bool = False):
     return jnp.concatenate(outs, axis=-1)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class WignerBlocks:
+    """Precomputed rotation-aligned geometry for the eSCN conv path.
+
+    Holds the Wigner-D blocks [D^0, ..., D^L] built from `align_rotation` of
+    a fixed edge geometry — the analogue of `EquivariantConv.filter_rep` for
+    the rotation-aligned backend: edge geometry is layer-constant in a model
+    stack, so the alignment rotation and the CG Wigner recursion run ONCE per
+    geometry instead of once per layer.  A pytree (the blocks are the leaves),
+    so it flows through jit/vmap/grad and the engine's batched bucket layout
+    (each block is a [..., 2l+1, 2l+1] row-parallel leaf).
+    """
+
+    blocks: tuple
+
+    @property
+    def L(self) -> int:
+        return len(self.blocks) - 1
+
+    def tree_flatten(self):
+        return tuple(self.blocks), len(self.blocks)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(tuple(children))
+
+    @classmethod
+    def from_rhat(cls, rhat, L: int) -> "WignerBlocks":
+        R = align_rotation(rhat.astype(jnp.float32))
+        return cls(tuple(wigner_blocks_from_rotmat(L, R)))
+
+
 class EquivariantConv:
     """Gaunt-accelerated equivariant convolution  (x (x) Y(rhat)) with the
     paper's w_{l1} w_{l2} w_l weight reparameterization.
@@ -133,7 +170,10 @@ class EquivariantConv:
         self._plan = self._bplan.buckets[0].plan
         self.backend = self._plan.backend
         self._donate, self._shard_spec = donate, shard_spec
+        self._tune = tune
         self._resident_plan = None
+        self._resident_bplan = None
+        self._geom_bplan = None
 
     @property
     def plan(self):
@@ -168,25 +208,74 @@ class EquivariantConv:
         conversion = "half" if self._spectral_backend() == "rfft" else "dense"
         return Rep.from_sh(filt, self.L2).to_fourier(conversion, self.cdtype)
 
+    def geometry_rep(self, rhat) -> "WignerBlocks":
+        """Precompute the rotation-aligned geometry (eSCN path) ONCE.
+
+        `align_rotation` + the CG Wigner recursion are the dominant per-call
+        setup of the 'escn_aligned' backend; edge geometry is layer-constant
+        in a model stack, so hoist them per geometry and pass the resulting
+        :class:`WignerBlocks` in place of ``rhat`` — the analogue of
+        :meth:`filter_rep` for the aligned path."""
+        if self.backend != "escn_aligned":
+            raise ValueError("geometry_rep is the eSCN (rotation-aligned) "
+                             f"residency hook; this conv uses {self.backend!r} "
+                             "— use filter_rep for the general path")
+        return WignerBlocks.from_rhat(rhat, max(self.L1, self.Lout))
+
+    def _resident_batched(self):
+        """The Fourier-boundary batched plan (built lazily): same execution
+        knobs (donate/shard_spec/tune) as the raw-rhat route, so residency
+        and batched/donated/sharded dispatch compose instead of excluding
+        each other."""
+        from . import engine as _engine
+
+        if self._resident_bplan is None:
+            self._resident_bplan = _engine.plan_batch(
+                [_engine.BatchItem(
+                    L1=self.L1, L2=self.L2, Lout=self.Lout,
+                    options=(("boundary", ("sh", "fourier", "sh")),))],
+                kind="pairwise", dtype=_engine._dtype_str(self.cdtype),
+                backend=self._spectral_backend(), tune=self._tune,
+                donate=self._donate, shard_spec=self._shard_spec,
+            )
+        return self._resident_bplan
+
+    def _geometry_batched(self):
+        """The precomputed-Wigner batched plan for WignerBlocks operands."""
+        from . import engine as _engine
+
+        if self._geom_bplan is None:
+            self._geom_bplan = _engine.plan_batch(
+                [_engine.BatchItem(L1=self.L1, L2=self.L2, Lout=self.Lout,
+                                   options=(("geometry", "wigner"),))],
+                kind="conv_filter", dtype=_engine._dtype_str(self.cdtype),
+                backend="escn_aligned", tune=self._tune,
+                donate=self._donate, shard_spec=self._shard_spec,
+            )
+        return self._geom_bplan
+
     def __call__(self, x, rhat, w1=None, w2=None, w3=None):
         """x [..., (L1+1)^2], rhat [..., 3] (or a resident Rep from
-        :meth:`filter_rep`) -> [..., (Lout+1)^2]."""
+        :meth:`filter_rep`, or WignerBlocks from :meth:`geometry_rep`)
+        -> [..., (Lout+1)^2]."""
         from .rep import Rep
 
+        if isinstance(rhat, WignerBlocks):
+            out = self._geometry_batched().apply([(x, rhat)],
+                                                 weights=[(w1, w2, w3)])[0]
+            return out.astype(self.rdtype)
         if isinstance(rhat, Rep):
             from . import engine as _engine
 
-            if self._donate or self._shard_spec is not None:
-                # the resident route is a plain (unsharded, non-donating)
-                # pairwise plan; silently dropping the configured execution
-                # knobs would run replicated/undonated without warning
-                raise ValueError(
-                    "resident filters are not supported with donate/shard_spec "
-                    "(ROADMAP: resident batched plans); pass rhat to use the "
-                    "batched sharded path")
             if w2 is not None:
                 raise ValueError("fold w2 into filter_rep(rhat, w2=...) — a "
                                  "resident filter cannot be reweighted")
+            if self._donate or self._shard_spec is not None:
+                # resident x batched: the boundary-aware bucket flattens the
+                # filter's half/dense grid rows like SH rows (DESIGN.md §5/§6)
+                out = self._resident_batched().apply(
+                    [(x, rhat)], weights=[(w1, None, w3)])[0]
+                return out.astype(self.rdtype)
             if self._resident_plan is None:
                 self._resident_plan = _engine.plan(
                     self.L1, self.L2, self.Lout, kind="pairwise",

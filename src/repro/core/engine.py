@@ -47,6 +47,13 @@ hot path and sharding-aware dispatch over the mesh's data axes:
     bp  = engine.plan_batch([(2, 2, 4, nE), (1, 1, 2, nN)], donate=True,
                             shard_spec=ShardSpec(mode="shard_map"))
     o1, o2 = bp.apply([(x1, x2), (a, b)])
+
+Residency and batching COMPOSE (no "resident OR scaled" fork): buckets key
+on (degree signature, basis/geometry options), so batched items may carry
+Fourier-resident ``Rep`` operands (their half/dense grids flatten, concat,
+pad, shard, and donate like SH rows), a 'fourier' output boundary returns
+resident Reps per item, and ``plan_chain(..., donate=..., shard_spec=...)``
+runs whole chains donated/sharded with <= 1 conversion per operand.
 """
 from __future__ import annotations
 
@@ -162,6 +169,8 @@ class Backend:
     needs_interpret: bool = False  # Pallas: off-TPU only via (slow) interpret mode
     # spectral backends can take/return Fourier-resident operands (Rep grids)
     fourier_boundary: bool = False
+    # conv_filter backends that accept precomputed WignerBlocks geometry
+    wigner_geometry: bool = False
 
     def eligible(self, key: PlanKey, requires_grad: bool) -> bool:
         if key.dtype not in self.dtypes:
@@ -170,6 +179,8 @@ class Backend:
             return False
         bound = key.opt("boundary")
         if bound and "fourier" in bound and not self.fourier_boundary:
+            return False
+        if key.opt("geometry") and not self.wigner_geometry:
             return False
         if key.kind in self.kinds:
             return True
@@ -329,23 +340,86 @@ def _bucket_runner(plan: GauntPlan, kind: str) -> Callable:
     return run
 
 
+def _op_parts(op) -> tuple:
+    """Decompose a (possibly structured) operand into row-layout leaves.
+
+    Returns ``(leaves, event_ranks, rebuild)``: each leaf batches over its
+    leading dims, with ``event_rank`` trailing dims belonging to the math —
+    1 for packed SH rows and raw conv directions, 2 for Fourier coefficient
+    grids (Rep) and Wigner rotation blocks.  ``rebuild(leaves)`` reassembles
+    the operand around new (flattened/concatenated/padded) leaves, so half-
+    Hermitian grids concat/pad/slice through the bucket layout exactly like
+    SH rows (DESIGN.md §5.1/§6).
+    """
+    from .conv import WignerBlocks  # lazy: conv routes through the engine
+    from .rep import Rep
+
+    if isinstance(op, Rep):
+        meta = (op.L, op.basis, op.form)
+        return [op.data], (2,), lambda ls: Rep(ls[0], *meta)
+    if isinstance(op, WignerBlocks):
+        return list(op.blocks), (2,) * len(op.blocks), \
+            lambda ls: WignerBlocks(tuple(ls))
+    return [op], (1,), lambda ls: ls[0]
+
+
+def _norm_operand(op, j: int, kind: str, item: BatchItem, form: str):
+    """Validate/canonicalize one operand before leaf decomposition: SH Reps
+    unwrap to their data, Fourier Reps check their bandlimit against the
+    item's degree and coerce to the bucket plan's storage form."""
+    from .rep import Rep
+
+    if isinstance(op, Rep):
+        if op.basis == "sh":
+            return op.data
+        degs = item.Ls if kind == "manybody" else (item.L1, item.L2)
+        if j < len(degs) and op.L != degs[j]:
+            raise ValueError(f"operand {j}: resident bandlimit {op.L} != "
+                             f"planned degree {degs[j]}")
+        return op.with_form(form)
+    return op
+
+
 def _bucket_batch_body(run: Callable, kind: str, item: BatchItem,
-                       granularity: int, rd, item_ops, item_ws):
+                       granularity: int, rd, form: str, item_ops, item_ws):
     """Trace-time batching: flatten/broadcast/concat/pad the per-item
     operands, execute the core once, slice per-item results back out.
 
-    Layout: each item's leading dims split into (row prefix, inner broadcast
-    dims) via `_split_leads`; rows concatenate across items and tail-pad to
-    `granularity`.  All of this is shape logic + cheap jnp ops that XLA fuses
-    into the single bucket dispatch.
+    Operands may be plain SH arrays, Fourier-resident ``Rep`` grids, or
+    precomputed ``WignerBlocks`` geometry — each decomposes into row-layout
+    leaves (`_op_parts`).  Every item's leading dims split into (row prefix,
+    inner broadcast dims) via `_split_leads`; rows concatenate across items
+    and tail-pad to `granularity`.  All of this is shape logic + cheap jnp
+    ops that XLA fuses into the single bucket dispatch.  A bucket whose plan
+    has a 'fourier' output boundary returns resident Reps per item.
     """
+    from .rep import Rep
+
     n_ops = _n_operands(kind, item)
     wdeg = _weight_degrees(kind, item)
+    item_parts = []   # per item: per operand (leaves, event_ranks, rebuild)
+    for ops_i in item_ops:
+        item_parts.append([_op_parts(_norm_operand(op, j, kind, item, form))
+                           for j, op in enumerate(ops_i)])
+    # structure check per EVENT-RANK signature, not leaf count: a Fourier
+    # Rep and a plain SH array both decompose to one leaf, but their grids
+    # cannot concatenate — catch the mix here with a real message instead
+    # of an opaque downstream concat shape error
+    n_leaves = [len(item_parts[0][j][0]) for j in range(n_ops)]
+    struct0 = [p[1] for p in item_parts[0]]
+    for t, parts in enumerate(item_parts):
+        if [p[1] for p in parts] != struct0:
+            raise ValueError(f"item {t}: operand structure (Rep/WignerBlocks/"
+                             "array mix) differs from the bucket's first item "
+                             f"({[p[1] for p in parts]} vs {struct0})")
     # pass 1: per-item lead splits; concatenation needs identical post-row
     # shapes, so if items disagree on inner dims fall back to a full flatten
     splits = []
-    for ops_i, ws_i in zip(item_ops, item_ws):
-        prefix, inner = _split_leads([jnp.shape(x)[:-1] for x in ops_i])
+    for parts_i, ws_i in zip(item_parts, item_ws):
+        leads = [jnp.shape(leaf)[: len(jnp.shape(leaf)) - er]
+                 for leaves, ers, _ in parts_i
+                 for leaf, er in zip(leaves, ers)]
+        prefix, inner = _split_leads(leads)
         # weights usually broadcast INTO prefix+inner (they are materialized
         # per row below).  A weight whose lead extends BEYOND the operands'
         # broadcast shape broadens the output instead (plan.apply contract:
@@ -359,10 +433,11 @@ def _bucket_batch_body(run: Callable, kind: str, item: BatchItem,
     if len({inner for _, inner in splits}) > 1:
         splits = [(prefix + inner, ()) for prefix, inner in splits]
     prefixes, inner_leads, rows = [], [], []
-    ops_flat = [[] for _ in range(n_ops)]   # per operand: per item [rows, *inner, k]
+    # per operand, per leaf: per item [rows, *inner, *event]
+    leaf_cols = [[[] for _ in range(n_leaves[j])] for j in range(n_ops)]
     ws_used = [any(ws[j] is not None for ws in item_ws)
                for j in range(len(wdeg))]
-    for t, ops_i in enumerate(item_ops):
+    for t, parts_i in enumerate(item_parts):
         prefix, inner = splits[t]
         r = int(np.prod(prefix)) if prefix else 1
         prefixes.append(prefix)
@@ -370,20 +445,25 @@ def _bucket_batch_body(run: Callable, kind: str, item: BatchItem,
         rows.append(r)
         np_ = len(prefix)
         rank = np_ + len(inner)
-        for j, x in enumerate(ops_i):
-            shp = jnp.shape(x)
-            pl = (1,) * (rank - (len(shp) - 1)) + tuple(shp[:-1])
-            x = jnp.reshape(x, pl + shp[-1:])
-            x = jnp.broadcast_to(x, prefix + pl[np_:] + shp[-1:])
-            ops_flat[j].append(jnp.reshape(x, (r,) + pl[np_:] + shp[-1:]))
+        for j, (leaves, ers, _) in enumerate(parts_i):
+            for q, (x, er) in enumerate(zip(leaves, ers)):
+                shp = jnp.shape(x)
+                ev = tuple(shp[len(shp) - er:])
+                pl = (1,) * (rank - (len(shp) - er)) + tuple(shp[: len(shp) - er])
+                x = jnp.reshape(x, pl + ev)
+                x = jnp.broadcast_to(x, prefix + pl[np_:] + ev)
+                leaf_cols[j][q].append(jnp.reshape(x, (r,) + pl[np_:] + ev))
     if len(item_ops) > 1:
-        # same broadcast inner dims, but an operand may still carry an
+        # same broadcast inner dims, but a leaf may still carry an
         # un-materialized size-1 inner dim on one item only
-        for col in ops_flat:
-            if len({jnp.shape(x)[1:-1] for x in col}) > 1:
-                for t, x in enumerate(col):
-                    col[t] = jnp.broadcast_to(
-                        x, (rows[t],) + inner_leads[t] + (jnp.shape(x)[-1],))
+        for j in range(n_ops):
+            for q, col in enumerate(leaf_cols[j]):
+                er = item_parts[0][j][1][q]
+                if len({jnp.shape(x)[1: x.ndim - er] for x in col}) > 1:
+                    for t, x in enumerate(col):
+                        ev = tuple(jnp.shape(x)[x.ndim - er:])
+                        col[t] = jnp.broadcast_to(
+                            x, (rows[t],) + inner_leads[t] + ev)
     # weights: flatten each used slot per item (ones where absent) so the
     # concatenation stays row-aligned with the operands
     ws_cat = []
@@ -402,31 +482,91 @@ def _bucket_batch_body(run: Callable, kind: str, item: BatchItem,
                 cols.append(jnp.reshape(
                     w, (rows[t],) + inner_leads[t] + (wdeg[j],)).astype(rd))
         ws_cat.append(jnp.concatenate(cols, axis=0))
-    ops_cat = [jnp.concatenate(col, axis=0) for col in ops_flat]
     total = sum(rows)
     pad = -(-total // granularity) * granularity - total
+    ops_cat = []
+    for j in range(n_ops):
+        _, ers, rebuild = item_parts[0][j]
+        cat = []
+        for q, col in enumerate(leaf_cols[j]):
+            x = jnp.concatenate(col, axis=0)
+            if pad:
+                if kind == "conv_filter" and j == 1 and ers[q] == 1:
+                    # raw conv directions pad with e_z, not zeros —
+                    # align_rotation of a zero vector is NaN (precomputed
+                    # Wigner blocks and grids pad with inert zero rows)
+                    ez = jnp.broadcast_to(jnp.asarray([0.0, 0.0, 1.0], x.dtype),
+                                          (pad,) + x.shape[1:])
+                    x = jnp.concatenate([x, ez], axis=0)
+                else:
+                    x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+            cat.append(x)
+        ops_cat.append(rebuild(cat))
     if pad:
-        def pad_rows(x, operand):
-            # conv_filter directions pad with e_z, not zeros —
-            # align_rotation of a zero vector is NaN
-            if kind == "conv_filter" and operand == 1:
-                ez = jnp.broadcast_to(jnp.asarray([0.0, 0.0, 1.0], x.dtype),
-                                      (pad,) + x.shape[1:])
-                return jnp.concatenate([x, ez], axis=0)
-            return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
-
-        ops_cat = [pad_rows(x, j) for j, x in enumerate(ops_cat)]
         ws_cat = [None if w is None else
                   jnp.pad(w, [(0, pad)] + [(0, 0)] * (w.ndim - 1),
                           constant_values=1.0)
                   for w in ws_cat]
     out = run(tuple(ops_cat), tuple(ws_cat))
+    out_leaf = out.data if isinstance(out, Rep) else out
     res, off = [], 0
     for t in range(len(item_ops)):
-        res.append(jnp.reshape(out[off:off + rows[t]],
-                               prefixes[t] + out.shape[1:]))
+        o = jnp.reshape(out_leaf[off:off + rows[t]],
+                        prefixes[t] + out_leaf.shape[1:])
+        if isinstance(out, Rep):
+            o = Rep(o, out.L, out.basis, out.form)
+        res.append(o)
         off += rows[t]
     return tuple(res)
+
+
+def _row_constraint(mesh, dp: tuple) -> Callable:
+    """The one home of the rank-aware row rule: dim0 of a leaf shards over
+    the dp axes, everything else replicates (used by `_shard_rows`'
+    constraint mode and the chain plans' grid/exit constraints)."""
+    from repro.distributed.sharding import row_sharding
+
+    def con(a):
+        return jax.lax.with_sharding_constraint(
+            a, row_sharding(mesh, jnp.ndim(a), dp))
+
+    return con
+
+
+def _shard_rows(run: Callable, mesh, dp: tuple, mode: str) -> Callable:
+    """Wrap a row-layout callable in sharded dispatch over the mesh's data
+    axes.  Every array leaf entering/leaving ``run`` is [rows, ...] with dim0
+    the concatenated row axis, but ranks differ per leaf (SH rows [rows, k],
+    half/dense grids [rows, n, nv], Wigner blocks [rows, d, d]) — so specs
+    are built rank-aware per leaf at trace time: dim0 shards over ``dp``,
+    everything else replicates.
+    """
+    if mesh is None or not dp:
+        return run
+    from repro.distributed.sharding import row_pspec
+
+    if mode == "constraint":
+        con = _row_constraint(mesh, dp)
+
+        def sharded(*args):
+            args = jax.tree.map(con, args)
+            return jax.tree.map(con, run(*args))
+
+        return sharded
+    if mode == "shard_map":
+        from jax.experimental.shard_map import shard_map
+
+        def sharded(*args):
+            in_specs = jax.tree.map(lambda a: row_pspec(jnp.ndim(a), dp), args)
+            out_sds = jax.eval_shape(run, *args)
+            out_specs = jax.tree.map(
+                lambda s: row_pspec(len(s.shape), dp), out_sds)
+            return shard_map(run, mesh=mesh, in_specs=tuple(in_specs),
+                             out_specs=out_specs)(*args)
+
+        return sharded
+    raise ValueError(f"unknown shard mode {mode!r} "
+                     "(expected 'constraint' or 'shard_map')")
 
 
 def _make_bucket_fn(plan: GauntPlan, kind: str, item: BatchItem, donate: bool,
@@ -436,39 +576,17 @@ def _make_bucket_fn(plan: GauntPlan, kind: str, item: BatchItem, donate: bool,
     The pre/post layout work traces into the SAME jitted call as the backend
     math, so one bucket invocation is one dispatch — otherwise the eager
     reshapes/concats would cost more dispatches than the loop being replaced.
-    The concatenated row layout entering the core is uniform [rows, *inner,
-    k], so the partition spec is the row spec P(dp) with trailing dims
-    replicated.
+    The concatenated layout entering the core is a uniform row layout, so
+    sharding is the rank-aware row spec per leaf (`_shard_rows`).
     """
-    run = _bucket_runner(plan, kind)
-    if mesh is not None and dp:
-        from jax.sharding import NamedSharding
-
-        from repro.distributed.sharding import row_pspec
-
-        spec = row_pspec(2, dp)
-        if mode == "shard_map":
-            from jax.experimental.shard_map import shard_map
-
-            run = shard_map(run, mesh=mesh, in_specs=(spec, spec),
-                            out_specs=spec)
-        elif mode == "constraint":
-            ns = NamedSharding(mesh, spec)
-            inner = run
-
-            def run(ops, ws):  # noqa: F811 — deliberate wrap
-                con = lambda a: jax.lax.with_sharding_constraint(a, ns)  # noqa: E731
-                ops = jax.tree.map(con, ops)
-                ws = jax.tree.map(con, ws)
-                return jax.lax.with_sharding_constraint(inner(ops, ws), ns)
-        else:
-            raise ValueError(f"unknown shard mode {mode!r} "
-                             "(expected 'constraint' or 'shard_map')")
-
+    run = _shard_rows(_bucket_runner(plan, kind), mesh, dp, mode)
     rd = _RDTYPE[plan.key.dtype]
+    # the storage form resident (Rep) operands are coerced to before their
+    # grids enter the row layout — must match what the backend consumes
+    form = "half" if plan.backend == "rfft" else "dense"
 
     def full(item_ops, item_ws):
-        return _bucket_batch_body(run, kind, item, granularity, rd,
+        return _bucket_batch_body(run, kind, item, granularity, rd, form,
                                   item_ops, item_ws)
 
     # donation hands the per-item operand buffers to XLA (callers must not
@@ -543,18 +661,29 @@ class BatchedGauntPlan:
     def _copy_donation_aliases(self, inputs, weights):
         """Donating one buffer twice is invalid, and a buffer donated by an
         earlier bucket is DEAD for later ones — so before any bucket runs,
-        copy every repeat reference (operand or weight) to an operand that
+        copy every repeat reference (operand or weight) to a buffer that
         will have been donated by then (e.g. selfmix's [x, x, x], or one
-        rhat shared across degree items)."""
+        rhat shared across degree items).  Dedup runs per LEAF buffer, not
+        per operand object: structured operands (Rep grids, WignerBlocks)
+        are freshly-wrapped pytrees whose ``id()`` differs even when their
+        underlying grid buffers are shared — comparing wrapper ids would
+        donate one grid twice."""
         donated: set[int] = set()
         for bucket in self.buckets:
             for i in bucket.item_ids:
                 ops_i = list(inputs[i])
                 for j, x in enumerate(ops_i):
-                    if id(x) in donated:
-                        ops_i[j] = jnp.copy(x)
-                    else:
-                        donated.add(id(x))
+                    leaves, _, rebuild = _op_parts(x)
+                    fresh, copied = [], False
+                    for leaf in leaves:
+                        if id(leaf) in donated:
+                            leaf = jnp.copy(leaf)
+                            copied = True
+                        else:
+                            donated.add(id(leaf))
+                        fresh.append(leaf)
+                    if copied:
+                        ops_i[j] = rebuild(fresh)
                 inputs[i] = tuple(ops_i)
                 w_i = weights[i]
                 if w_i is not None:
@@ -613,6 +742,12 @@ class ChainPlan:
     ``interior_pairs_eliminated`` = n-2 interior conversion pairs, plus one
     more sh->F per duplicate operand.  Numerically identical to the looped
     path up to dtype roundoff (2D convolution is associative).
+
+    Execution knobs (plan_chain): ``donate`` hands the unique operand
+    buffers to XLA through ``apply_jit`` (callers must not reuse them);
+    ``shard`` = (mesh, dp_axes, mode) runs the chain row-sharded — converted
+    grids and the exit projection carry rank-aware row constraints, and with
+    mode='shard_map' the grid-combination stage runs per-shard.
     """
 
     Ls: tuple
@@ -621,6 +756,8 @@ class ChainPlan:
     conv: str                # 'fft' | 'direct' | 'rfft'
     dtype: str
     tree: bool
+    donate: bool = False
+    shard: tuple = (None, (), "constraint")   # (mesh, dp_axes, mode)
     apply: Callable = dataclasses.field(repr=False, compare=False, default=None)
     _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                          compare=False)
@@ -632,13 +769,22 @@ class ChainPlan:
         two identical arrays to two distinct tracers, which would defeat the
         shared-operand single conversion, so the compiled chain closes over
         the duplication pattern and sees each unique operand exactly once.
+        With ``donate`` the unique operand list is donated to XLA (dedup
+        also means a shared operand's buffer is never donated twice).
         """
+        from .rep import Rep
+
         xs = list(xs)
         uniq, idx_map, seen = [], [], {}
         for x in xs:
-            k = seen.get(id(x))
+            # dedup by the underlying BUFFER (plus Rep meta), not the
+            # wrapper: two Rep wrappers around one grid are the same
+            # operand — and under donation the same donation target
+            dk = (("rep", id(x.data), x.L, x.basis, x.form)
+                  if isinstance(x, Rep) else id(x))
+            k = seen.get(dk)
             if k is None:
-                k = seen[id(x)] = len(uniq)
+                k = seen[dk] = len(uniq)
                 uniq.append(x)
             idx_map.append(k)
         ws = list(weights) if weights is not None else None
@@ -653,7 +799,9 @@ class ChainPlan:
                 return self.apply([uniq[i] for i in imap], weights=ws,
                                   w_out=w_out, out_basis=out_basis)
 
-            fn = self._jit_cache[key] = jax.jit(run)
+            donate_args = (0,) if self.donate and \
+                jax.default_backend() != "cpu" else ()
+            fn = self._jit_cache[key] = jax.jit(run, donate_argnums=donate_args)
         return fn(uniq, ws, w_out)
 
     @property
@@ -676,12 +824,20 @@ class ChainPlan:
 
 
 def _build_chain(Ls: tuple, Lout: int, conversion: str, conv: str,
-                 dtype: str, tree: bool) -> Callable:
+                 dtype: str, tree: bool, mesh=None, dp: tuple = (),
+                 mode: str = "constraint") -> Callable:
     cd = _CDTYPE[dtype]
     rd = _RDTYPE[dtype]
     form = "half" if conversion == "half" else "dense"
     Ltot = sum(Ls)
     _warm_spectral_constants(conversion, Ls, Ltot, Lout, cd)
+
+    def _row_con(a, er: int):
+        """Rank-aware row constraint: shard dim0 over dp, replicate the rest
+        (a no-op for unbatched leaves — a bare [n, nv] grid has no row axis)."""
+        if mesh is None or not dp or jnp.ndim(a) <= er:
+            return a
+        return _row_constraint(mesh, dp)(a)
 
     def apply(xs, weights=None, w_out=None, out_basis: str = "sh"):
         from .gaunt import fourier_to_sh, sh_to_fourier, sh_to_fourier_bydeg
@@ -729,15 +885,35 @@ def _build_chain(Ls: tuple, Lout: int, conversion: str, conv: str,
                     else:
                         grids[i] = jnp.einsum("...l,...luv->...uv",
                                               ws[i].astype(Fl.dtype), Fl)
-        if tree:
-            F = _tree_convolve(grids, conv, herm=(form == "half"))
-        else:
+        def combine(gs):
+            if tree:
+                return _tree_convolve(list(gs), conv, herm=(form == "half"))
             from .gaunt import conv2d_full, conv2d_herm
 
             fn = conv2d_herm if form == "half" else conv2d_full
-            F = grids[0]
-            for G in grids[1:]:
+            F = gs[0]
+            for G in gs[1:]:
                 F = fn(F, G, conv)
+            return F
+
+        grids = [_row_con(g, 2) for g in grids]
+        # per-shard grid combination is valid only when every grid batches
+        # over ONE shared row axis that splits evenly: all batched, same
+        # dim0, divisible by the dp device count (chains do not pad rows —
+        # ROADMAP "Chain shard_map granularity").  Anything else falls back
+        # to the constrained combine, which is sharded but collective-free
+        # only where the partitioner proves it.
+        use_map = (mesh is not None and dp and mode == "shard_map"
+                   and all(jnp.ndim(g) > 2 for g in grids)
+                   and len({jnp.shape(g)[0] for g in grids}) == 1)
+        if use_map:
+            from repro.distributed import sharding as _sh
+
+            use_map = jnp.shape(grids[0])[0] % _sh.dp_size(mesh, dp) == 0
+        if use_map:
+            F = _shard_rows(combine, mesh, dp, "shard_map")(tuple(grids))
+        else:
+            F = combine(tuple(grids))
         if out_basis == "fourier":
             if w_out is not None:
                 raise ValueError("w_out applies in SH; project first")
@@ -745,9 +921,9 @@ def _build_chain(Ls: tuple, Lout: int, conversion: str, conv: str,
                 raise ValueError(f"out_basis='fourier' keeps the full grid "
                                  f"(L={Ltot}); plan with Lout={Ltot} or "
                                  "project to SH")
-            return Rep(F, Ltot, "fourier", form)
+            return Rep(_row_con(F, 2), Ltot, "fourier", form)
         out = fourier_to_sh(F, Ltot, Lout, conversion, rd)
-        return _wmul(out, w_out, Lout)
+        return _row_con(_wmul(out, w_out, Lout), 1)
 
     return apply
 
@@ -1056,15 +1232,30 @@ def _build_escn(key: PlanKey) -> Callable:
     constants.cg_11_blocks(max(L1, Lout))
     fl0 = np.array([math.sqrt((2 * l + 1) / (4 * math.pi)) for l in range(L2 + 1)],
                    dtype=np.float32)
+    geometry = key.opt("geometry")
 
     def apply_conv(x, rhat, w1=None, w2=None, w3=None):
         # lazy: conv.py routes through the engine, so import its helpers at call
-        from .conv import align_rotation, apply_wigner_blocks, wigner_blocks_from_rotmat
+        from .conv import (WignerBlocks, align_rotation, apply_wigner_blocks,
+                           wigner_blocks_from_rotmat)
         from .gaunt import fourier_to_sh, sh_to_fourier
 
         x = _wmul(x, w1, L1)
-        R = align_rotation(rhat.astype(jnp.float32))
-        Ds = wigner_blocks_from_rotmat(max(L1, Lout), R)
+        if geometry == "wigner":
+            # rotation residency: the caller precomputed the alignment
+            # rotation + Wigner recursion once per geometry (conv.geometry_rep)
+            if not isinstance(rhat, WignerBlocks):
+                raise ValueError("plans with options={'geometry': 'wigner'} "
+                                 "take precomputed WignerBlocks (see "
+                                 "EquivariantConv.geometry_rep), got "
+                                 f"{type(rhat).__name__}")
+            if rhat.L < max(L1, Lout):
+                raise ValueError(f"WignerBlocks cover degrees <= {rhat.L}, "
+                                 f"need max(L1, Lout) = {max(L1, Lout)}")
+            Ds = list(rhat.blocks)
+        else:
+            R = align_rotation(rhat.astype(jnp.float32))
+            Ds = wigner_blocks_from_rotmat(max(L1, Lout), R)
         x_rot = apply_wigner_blocks(Ds[: L1 + 1], x)
         F1 = sh_to_fourier(x_rot, L1, "dense", jnp.dtype(cd))  # [..., n1, n1]
         # filter coefficients: only m=0 -> single v=0 column, O(L^2)
@@ -1154,6 +1345,7 @@ register_backend(Backend(
     kinds=frozenset({"conv_filter"}),
     build=_build_escn,
     cost=_cost_escn,
+    wigner_geometry=True,
 ))
 
 
@@ -1200,6 +1392,13 @@ class GauntEngine:
                 options.pop("boundary")  # the default; don't fragment the cache
             else:
                 options["boundary"] = bound
+        geom = options.get("geometry")
+        if geom is not None:
+            if kind != "conv_filter":
+                raise ValueError("geometry options only apply to conv_filter "
+                                 "plans (precomputed Wigner alignment)")
+            if geom != "wigner":
+                raise ValueError(f"unknown geometry {geom!r} (expected 'wigner')")
         extra = tuple(sorted(options.items()))
         if kind == "manybody":
             if Ls is None or len(Ls) < 2:
@@ -1318,7 +1517,8 @@ class GauntEngine:
 
     def plan_chain(self, Ls, Lout: int | None = None, *,
                    conversion: str | None = None, conv: str | None = None,
-                   dtype="float32", tree: bool = True) -> ChainPlan:
+                   dtype="float32", tree: bool = True, donate: bool = False,
+                   shard_spec: ShardSpec | None = None) -> ChainPlan:
         """Plan a chained product  x_1 (x) ... (x) x_n  as ONE resident pass.
 
         Ls: per-operand max degrees (n >= 2).  Lout defaults to sum(Ls).
@@ -1332,6 +1532,12 @@ class GauntEngine:
         direct/fft small-L rule.
         tree=True combines grids divide-and-conquer (the paper's many-body
         parallelization); False is the sequential left fold.
+
+        donate=True donates the unique operand buffers through ``apply_jit``
+        (callers must not reuse them); ``shard_spec`` runs the chain
+        row-sharded over the mesh's data axes (see :class:`ShardSpec`) —
+        both compose with residency, so the former "resident OR
+        donated/sharded" fork is gone.
 
         Every operand converts at most once (duplicates share a single
         degree-resolved conversion even with different per-degree weights),
@@ -1356,13 +1562,17 @@ class GauntEngine:
         if conv == "rfft" and conversion != "half":
             raise ValueError("conv='rfft' operates on half grids (conversion='half')")
         dts = _dtype_str(dtype)
-        key = (Ls, Lout, conversion, conv, dts, tree)
+        mesh, dp = (None, ()) if shard_spec is None else shard_spec.resolve()
+        mode = shard_spec.mode if shard_spec is not None else "constraint"
+        key = (Ls, Lout, conversion, conv, dts, tree, donate, mesh, dp, mode)
         hit = self._chains.get(key)
         if hit is not None:
             return hit
         cp = ChainPlan(Ls=Ls, Lout=Lout, conversion=conversion, conv=conv,
-                       dtype=dts, tree=tree,
-                       apply=_build_chain(Ls, Lout, conversion, conv, dts, tree))
+                       dtype=dts, tree=tree, donate=donate,
+                       shard=(mesh, dp, mode),
+                       apply=_build_chain(Ls, Lout, conversion, conv, dts,
+                                          tree, mesh, dp, mode))
         self._chains[key] = cp
         return cp
 

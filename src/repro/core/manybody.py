@@ -16,9 +16,12 @@ pass — each operand converts at most once (a shared operand converts once
 conversion), interior products never round-trip through SH, and a single
 projection runs at the exit.  Operands may already be Fourier-resident
 ``Rep``s (their conversion is skipped), and ``out_basis='fourier'`` keeps
-the product resident for a downstream chain.  The legacy batched/sharded
-dispatch (`engine.plan_batch`) remains behind ``donate``/``shard_spec``/
-``backend`` for callers that need those execution knobs.
+the product resident for a downstream chain.  Residency composes with the
+execution knobs: ``donate`` hands the unique operand buffers to XLA and
+``shard_spec`` row-shards the whole chain (grids, combination, projection)
+over the mesh's data axes — both keep the <= 1-conversion-per-operand
+guarantee.  Only an explicit ``backend`` (or conversion='packed') pins the
+per-plan batched dispatch (`engine.plan_batch`, kind='manybody') instead.
 """
 from __future__ import annotations
 
@@ -76,28 +79,30 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
     Default route: one Fourier-resident chain plan (`engine.plan_chain`) —
     conversion/conv default to the plan's measured auto policy ('half' grids,
     direct-vs-rfft by chain shape); 'dense' keeps full grids (conv
-    'fft'|'direct').  Passing ``backend`` / ``donate`` / ``shard_spec`` falls back to
-    the batched engine dispatch (kind='manybody', DESIGN.md §5), which keeps
-    donation and sharded execution but converts through the plan's own
-    boundary (no resident operands).
+    'fft'|'direct').  ``donate`` and ``shard_spec`` stay ON the chain route:
+    the plan donates the unique operand buffers and/or row-shards the whole
+    resident pass, still converting each distinct operand at most once.
+    Only an explicit ``backend`` (or conversion='packed') pins the per-plan
+    batched engine dispatch (kind='manybody', DESIGN.md §5) instead, which
+    converts through the plan's own boundary.
     """
     from . import engine as _engine
 
     assert len(xs) == len(Ls) and len(xs) >= 2
-    if (backend is None and not donate and shard_spec is None
-            and conversion in (None, "dense", "half")):
+    if backend is None and conversion in (None, "dense", "half"):
         # jit-cached chain dispatch (apply_jit) so eager callers keep one
         # compiled invocation per call, as the batched route gave them.
         # ``tune`` has no effect here: chain conversion/conv follow the
         # plan's measured auto policy (ROADMAP: fold chains into autotune).
         cp = _engine.plan_chain(
             Ls, Lout, conversion=conversion, conv=conv,
-            dtype=_engine._dtype_str(cdtype))
+            dtype=_engine._dtype_str(cdtype),
+            donate=donate, shard_spec=shard_spec)
         out = cp.apply_jit(list(xs), weights=weights, out_basis=out_basis)
         return out if out_basis == "fourier" else out.astype(rdtype)
     if out_basis != "sh":
         raise ValueError("out_basis='fourier' requires the chain route "
-                         "(no backend/donate/shard_spec overrides)")
+                         "(no explicit backend/conversion override)")
     options = None
     if backend == "auto":
         backend = None

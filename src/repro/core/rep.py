@@ -18,10 +18,12 @@ A Rep carries:
 Rep is a jax pytree (``data`` is the single leaf; ``L``/``basis``/``form``
 are static), so Reps flow through ``jit``/``grad``/``vmap`` unchanged.
 
-This module also hosts the global conversion counters: every
-``sh_to_fourier`` / ``fourier_to_sh`` call (see `core.gaunt`) increments
-them, which is how tests and benchmarks *prove* that chain plans elide
-interior round trips instead of merely claiming to.
+This module also hosts the conversion counters: every ``sh_to_fourier`` /
+``fourier_to_sh`` call (see `core.gaunt`) increments them, which is how
+tests and benchmarks *prove* that chain plans elide interior round trips
+instead of merely claiming to.  ``with conversion_stats(fresh=True) as c:``
+scopes a measurement (snapshot/restore semantics, warm chain-jit caches
+dropped) so counter-diffing is order-independent.
 """
 from __future__ import annotations
 
@@ -35,6 +37,7 @@ from .irreps import num_coeffs
 
 __all__ = [
     "Rep",
+    "ConversionStats",
     "count_conversion",
     "conversion_stats",
     "reset_conversion_stats",
@@ -53,14 +56,66 @@ def count_conversion(name: str) -> None:
     _COUNTS[name] += 1
 
 
-def conversion_stats() -> dict[str, int]:
-    """{'sh_to_fourier': n, 'fourier_to_sh': m} since the last reset.
+class ConversionStats(dict):
+    """A snapshot of the conversion counters, and a scoped counting context.
+
+    Read: ``conversion_stats()["sh_to_fourier"]`` (a plain dict snapshot).
+
+    Count: ``with conversion_stats(fresh=True) as c: run()`` — on entry the
+    module counters are snapshotted and zeroed; on exit ``c`` holds the
+    conversions that ran inside the block, and the module counters are
+    restored to snapshot + delta.  Sequential measurements are isolated
+    from each other and from earlier leftovers (the bare-global counters
+    made counter-diffing tests order-dependent); an OUTER block is
+    *inclusive* of any nested block's delta — nesting scopes the inner
+    reading, it does not subtract it from the enclosing one.
+
+    ``fresh=True`` additionally drops the engine's cached ``ChainPlan``
+    jit dispatches on entry: conversions tick once per eager call or per jit
+    *trace*, so a warm ``apply_jit`` cache would report zero for work that
+    certainly ran — fresh forces those chains to retrace inside the block.
+    (Batched bucket jits cannot be un-traced; count those on fresh operand
+    shapes instead.)
+    """
+
+    def __init__(self, data, fresh: bool = False):
+        super().__init__(data)
+        self._fresh = fresh
+        self._snap = None
+
+    def __enter__(self) -> "ConversionStats":
+        if self._fresh:
+            from . import engine as _engine  # lazy: engine imports this module
+
+            for cp in _engine.get_engine()._chains.values():
+                cp._jit_cache.clear()
+        self._snap = dict(_COUNTS)
+        for k in _COUNTS:
+            _COUNTS[k] = 0
+        self.clear()
+        self.update({k: 0 for k in self._snap})
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        delta = dict(_COUNTS)
+        self.clear()
+        self.update(delta)
+        for k in _COUNTS:
+            _COUNTS[k] = self._snap[k] + delta[k]
+        return False
+
+
+def conversion_stats(fresh: bool = False) -> ConversionStats:
+    """{'sh_to_fourier': n, 'fourier_to_sh': m} since the last reset —
+    and a context manager for scoped, order-independent counting (see
+    :class:`ConversionStats`).
 
     Counts are incremented when the conversion *code path runs* — once per
     eager call, once per jit trace.  To compare two execution strategies,
-    reset, trace/run each on fresh (uncached) callables, and diff.
+    count each inside its own ``with conversion_stats(fresh=True)`` block
+    (or reset + run on fresh uncached callables, the historical protocol).
     """
-    return dict(_COUNTS)
+    return ConversionStats(_COUNTS, fresh=fresh)
 
 
 def reset_conversion_stats() -> None:

@@ -43,8 +43,13 @@ def get_activation_mesh() -> Mesh | None:
 # --- row-parallel helpers (the Gaunt engine's batched/sharded dispatch) ------
 # A "row" layout is any array whose dim0 is a flat batch of independent work
 # items (edges, nodes, stacked tensor-product operands).  The batched Gaunt
-# plans (core/engine.py plan_batch, DESIGN.md §5) shard that axis over the
-# data-parallel mesh axes and replicate everything else.
+# plans (core/engine.py plan_batch, DESIGN.md §5) and the resident chain
+# plans (plan_chain, DESIGN.md §6) shard that axis over the data-parallel
+# mesh axes and replicate everything else.  Specs are built RANK-AWARE per
+# leaf (`row_pspec(a.ndim, dp)` / `row_sharding(mesh, a.ndim)`): the row
+# layout mixes leaf ranks — SH rows [rows, k], half/dense Fourier grids
+# [rows, n, nv], Wigner blocks [rows, d, d] — and a fixed-rank spec would
+# silently shard a grid's frequency axis.
 
 
 def dp_axes(mesh: Mesh, prefer: tuple = DP_AXES) -> tuple:

@@ -132,19 +132,29 @@ def _tp_resident(cfg: EquivariantConfig, L1, L2, Lout):
     Returns (to_rep, tp): ``to_rep(filt)`` converts the SH filter to a
     Fourier-resident Rep ONCE; ``tp(x, rep)`` runs the product with the
     filter conversion elided — a stack of n layers over one graph pays 1
-    filter conversion instead of n.
+    filter conversion instead of n.  Residency now composes with
+    ``shard_data``: the sharded config routes the same boundary plan through
+    a row-sharded batched bucket (Rep grids shard like SH rows) instead of
+    falling back to per-layer filter conversions.
     """
     from repro.core import engine as _engine
     from repro.core.rep import Rep
 
     if (cfg.tp_impl not in ("gaunt", "gaunt_auto")
-            or not getattr(cfg, "fourier_resident", True)
-            or getattr(cfg, "shard_data", False)):
+            or not getattr(cfg, "fourier_resident", True)):
         return None
     backend = _resolve_tp_backend("gaunt", L1, L2)  # spectral: fft | direct
+    to_rep = lambda filt: Rep.from_sh(filt, L2).to_fourier("dense")  # noqa: E731
+    if getattr(cfg, "shard_data", False):
+        bp = _engine.plan_batch(
+            [_engine.BatchItem(L1=L1, L2=L2, Lout=Lout,
+                               options=(("boundary", ("sh", "fourier", "sh")),))],
+            kind="pairwise", backend=backend,
+            shard_spec=_engine.ShardSpec(),
+        )
+        return to_rep, (lambda a, rep: bp.apply([(a, rep)])[0])
     p = _engine.plan(L1, L2, Lout, kind="pairwise", backend=backend,
                      options={"boundary": ("sh", "fourier", "sh")})
-    to_rep = lambda filt: Rep.from_sh(filt, L2).to_fourier("dense")  # noqa: E731
     return to_rep, (lambda a, rep: p.apply(a, rep))
 
 
@@ -160,7 +170,10 @@ class MaceGaunt:
     def init(self, key):
         c = self.cfg
         dim = num_coeffs(c.L)
-        ks = jax.random.split(key, 4 + 4 * c.n_layers)
+        # one key per random leaf group, each consumed exactly once (reusing
+        # a key across leaves makes them bitwise-correlated — see the
+        # test_no_duplicate_init_leaves regression test)
+        ks = jax.random.split(key, 3 + 5 * c.n_layers)
         params = {
             "species": jax.random.normal(ks[0], (c.n_species, c.channels)) * 0.5,
             "layers": [],
@@ -170,7 +183,7 @@ class MaceGaunt:
             },
         }
         for i in range(c.n_layers):
-            k1, k2, k3, k4 = ks[4 + 4 * i : 8 + 4 * i]
+            k1, k2, k3, k4, k5 = ks[3 + 5 * i : 8 + 5 * i]
             params["layers"].append({
                 "radial": {
                     "w1": jax.random.normal(k1, (c.n_radial, 32)) / math.sqrt(c.n_radial),
@@ -179,7 +192,7 @@ class MaceGaunt:
                 "mix": equi_linear_init(k3, c.L, c.channels, c.channels),
                 "mb_mix": equi_linear_init(k4, c.L, c.channels, c.channels),
                 "mb_w": jnp.ones((c.nu, c.L + 1)) / c.nu,
-                "gate": gate_init(k4, c.channels),
+                "gate": gate_init(k5, c.channels),
             })
         return params
 
@@ -189,26 +202,31 @@ class MaceGaunt:
         Basis residency (DESIGN.md §6): the many-body self-product runs as
         ONE chain plan per layer — A converts to the Fourier basis once
         (degree-resolved, serving all nu reweighted operands) and projects
-        back once, instead of nu conversions and nu-1 round trips.  With
-        conv_impl='general' the edge filter Y(rhat), constant across layers,
-        converts once for the whole stack via `EquivariantConv.filter_rep`.
-        SH checkpoints stay where the math demands them: equi_linear mixes
-        and the gate act degree-wise on SH coefficients.
+        back once, instead of nu conversions and nu-1 round trips.  The
+        layer-constant edge geometry converts once for the whole stack:
+        conv_impl='general' keeps the filter Y(rhat) Fourier-resident
+        (`EquivariantConv.filter_rep`); conv_impl='escn' hoists the
+        alignment rotation + Wigner recursion (`geometry_rep`) out of the
+        layer loop.  Both compose with ``shard_data`` — resident grids and
+        Wigner blocks row-shard like SH rows.  SH checkpoints stay where
+        the math demands them: equi_linear mixes and the gate act
+        degree-wise on SH coefficients.
         """
         c = self.cfg
         n = pos.shape[0]
         from repro.core.engine import ShardSpec
 
+        shard = ShardSpec() if getattr(c, "shard_data", False) else None
         # no donation: rhat is reused by every layer's conv call
-        conv = EquivariantConv(
-            c.L, c.L_edge, c.L, method=c.conv_impl,
-            shard_spec=ShardSpec() if getattr(c, "shard_data", False) else None,
-        )
+        conv = EquivariantConv(c.L, c.L_edge, c.L, method=c.conv_impl,
+                               shard_spec=shard)
         rhat, dist, mask = _pair_geometry(pos, c.cutoff)
-        filt = None
-        if (c.conv_impl == "general" and getattr(c, "fourier_resident", True)
-                and not getattr(c, "shard_data", False)):
-            filt = conv.filter_rep(rhat[:, :, None, :])
+        geom = None
+        if getattr(c, "fourier_resident", True):
+            if c.conv_impl == "general":
+                geom = conv.filter_rep(rhat[:, :, None, :])
+            elif c.conv_impl == "escn":
+                geom = conv.geometry_rep(rhat[:, :, None, :])
         x = jnp.zeros((n, c.channels, num_coeffs(c.L)))
         x = x.at[..., 0].set(params["species"][species])
         for lp in params["layers"]:
@@ -217,7 +235,7 @@ class MaceGaunt:
             h = h.reshape(n, n, c.channels, c.L + 1)  # per-edge per-degree weights
             # messages: conv(x_j, r_ij) summed over j (channel-wise, eSCN path)
             xj = jnp.broadcast_to(x[None, :, :, :], (n, n, c.channels, x.shape[-1]))
-            m = conv(xj, filt if filt is not None else rhat[:, :, None, :], w1=h)
+            m = conv(xj, geom if geom is not None else rhat[:, :, None, :], w1=h)
             m = jnp.sum(m * mask[:, :, None, None], axis=1)  # [n, C, dim]
             A = equi_linear(lp["mix"], m, c.L) + x
             # many-body: nu-fold Gaunt self-product, per-degree weights
@@ -225,6 +243,7 @@ class MaceGaunt:
                 A, c.L, c.nu, Lout=c.L,
                 weights=[jnp.broadcast_to(w, (n, c.channels, c.L + 1))
                          for w in lp["mb_w"]],
+                shard_spec=shard,  # the chain route honors sharding directly
             )
             x = x + gate_apply(lp["gate"], equi_linear(lp["mb_mix"], B, c.L), c.L)
         return x[..., 0]  # invariant channels [n, C]
@@ -265,22 +284,25 @@ class SegnnNBody:
 
     def init(self, key):
         c = self.cfg
-        ks = jax.random.split(key, 2 + 3 * c.n_layers)
+        # 5 keys per layer, each consumed once: sharing k3 between mix and
+        # self_mix (and k1 between radial and gate) made those leaves
+        # bitwise-correlated at init
+        ks = jax.random.split(key, 2 + 5 * c.n_layers)
         params = {
             "embed": equi_linear_init(ks[0], c.L, 2, c.channels),  # charge,|v| + v irreps
             "out": equi_linear_init(ks[1], c.L, c.channels, 1),
             "layers": [],
         }
         for i in range(c.n_layers):
-            k1, k2, k3 = ks[2 + 3 * i : 5 + 3 * i]
+            k1, k2, k3, k4, k5 = ks[2 + 5 * i : 7 + 5 * i]
             params["layers"].append({
                 "radial": {
                     "w1": jax.random.normal(k1, (c.n_radial, 32)) / math.sqrt(c.n_radial),
                     "w2": jax.random.normal(k2, (32, c.channels * (c.L + 1))) / 32.0,
                 },
                 "mix": equi_linear_init(k3, c.L, c.channels, c.channels),
-                "self_mix": equi_linear_init(k3, c.L, c.channels, c.channels),
-                "gate": gate_init(k1, c.channels),
+                "self_mix": equi_linear_init(k4, c.L, c.channels, c.channels),
+                "gate": gate_init(k5, c.channels),
             })
         return params
 
@@ -355,12 +377,17 @@ class SelfmixLayer:
     one sh->Fourier elided per call versus the looped per-operand path.
     The residual and channel mix are degree-diagonal SH ops, so the layer
     output checkpoints back to SH (as every gate/mix boundary must).
+
+    ``shard_spec`` row-shards the layer's product over the mesh's data axes
+    on BOTH routes (the resident chain and the batched fallback) — residency
+    no longer forces single-device execution.
     """
 
     L: int
     channels: int
     tp_impl: str = "gaunt"
     resident: bool = True
+    shard_spec: object = None
 
     def init(self, key):
         k1, k2, k3 = jax.random.split(key, 3)
@@ -376,14 +403,15 @@ class SelfmixLayer:
         if self.tp_impl == "gaunt" and self.resident:
             from repro.core import engine as _engine
 
-            cp = _engine.plan_chain([L, L], Lout=L)
+            cp = _engine.plan_chain([L, L], Lout=L, shard_spec=self.shard_spec)
             y = cp.apply_jit([x, x], weights=[params["w1"], params["w2"]],
                              w_out=params["w3"][: L + 1])
         elif self.tp_impl in _TP_BACKEND:
             from repro.core import engine as _engine
 
             bp = _engine.plan_batch([(L, L, L)], kind="pairwise",
-                                    backend=_resolve_tp_backend(self.tp_impl, L, L))
+                                    backend=_resolve_tp_backend(self.tp_impl, L, L),
+                                    shard_spec=self.shard_spec)
             y = bp.apply([(x, x)],
                          weights=[(params["w1"], params["w2"],
                                    params["w3"][: L + 1])])[0]

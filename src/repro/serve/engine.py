@@ -14,14 +14,18 @@ force-field inference (energy/forces/relaxation requests on a Gaunt-MACE
 model): ragged molecules are padded into fixed atom slots, ghost atoms are
 parked beyond the cutoff and masked out of the energy, and every step
 evaluates ALL active slots in one jitted vmapped call — whose tensor
-products route through the engine's batched Gaunt plans (DESIGN.md §5) and,
-since the basis-residency refactor (DESIGN.md §6), through Fourier-resident
-chain plans: inside every relaxation step each layer's many-body product
-converts once and projects once, and the compiled step function (plus the
-plan/constant caches backing it) is carried across ALL relaxation steps of
-every request — so the per-step cost is pure resident math, no replanning
-and no interior SH round trips.  ``warmup()`` builds and compiles that step
-on ghost-only slots so the first real request pays serving cost only.
+products route through the engine's batched Gaunt plans (DESIGN.md §5) and
+through Fourier-resident chain plans (DESIGN.md §6): inside every relaxation
+step each layer's many-body product converts once and projects once, the
+edge geometry (resident filter grid or hoisted Wigner blocks) is built once
+per step, and the compiled step function (plus the plan/constant caches
+backing it) is carried across ALL relaxation steps of every request — so
+the per-step cost is pure resident math, no replanning and no interior SH
+round trips.  Residency holds for sharded configs too (``shard_data``):
+resident grids row-shard through the batched buckets, so the serving step
+is never forced off the resident route.  ``warmup()`` builds and compiles
+that step on ghost-only slots so the first real request pays serving cost
+only.
 """
 from __future__ import annotations
 

@@ -128,3 +128,24 @@ def test_selfmix_gaunt_equals_fused():
     x = jnp.asarray(np.random.default_rng(6).normal(size=(3, C, num_coeffs(L))), jnp.float32)
     np.testing.assert_allclose(np.asarray(a(params, x)), np.asarray(b(params, x)),
                                atol=2e-4, rtol=2e-4)
+
+
+def test_no_duplicate_random_init_leaves():
+    """PRNG-key hygiene regression (PR 4): MaceGaunt.init reused k4 for
+    mb_mix AND gate (with ks[3] never consumed), SegnnNBody.init reused k3
+    for mix AND self_mix and the radial key for gate — bitwise-correlated
+    parameters at init.  Every random leaf must now be unique; constant
+    leaves (ones-initialized weights) are exempt by construction."""
+    models = [
+        MaceGaunt(dataclasses.replace(CFG_MACE, n_layers=2)),
+        SegnnNBody(dataclasses.replace(CFG_SEGNN, n_layers=2)),
+        SelfmixLayer(L=2, channels=4),
+    ]
+    for i, m in enumerate(models):
+        params = m.init(jax.random.PRNGKey(i))
+        rand = [np.asarray(leaf) for leaf in jax.tree.leaves(params)
+                if np.unique(np.asarray(leaf)).size > 1]
+        assert rand, f"{type(m).__name__}: no random leaves found"
+        blobs = [leaf.tobytes() for leaf in rand]
+        assert len(blobs) == len(set(blobs)), (
+            f"{type(m).__name__}: two random init leaves are bitwise-identical")

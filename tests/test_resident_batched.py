@@ -1,0 +1,356 @@
+"""Resident ∩ batched: the resident/sharded exclusivity is gone.
+
+PR 4 (ROADMAP "Resident batched plans") makes basis-tagged ``Rep`` a
+first-class operand/result of the batched engine: resident grids flatten
+through the bucket layout (concat/pad/slice/shard/donate like SH rows),
+chains plan with ``donate``/``shard_spec``, and every consumer fallback was
+deleted.  These tests pin the acceptance criteria:
+
+* counter proofs: ``manybody_gaunt_product(..., donate=True)`` and
+  ``EquivariantConv(..., shard_spec=ShardSpec())`` still run the resident
+  route — <= 1 ``sh_to_fourier`` per distinct operand, no silent fallback;
+* numerical identity of resident batched execution vs the per-plan path,
+  including Rep outputs, broadcast inner dims, Wigner-geometry buckets, and
+  leaf-level donation alias copies for grid buffers;
+* the resident x sharded x donated matrix on 2 virtual devices (both
+  ShardSpec modes, rotation equivariance, grad through a donated resident
+  chain, and the MaceGaunt ``shard_data=True, fourier_resident=True``
+  equivalence) — in subprocesses so the XLA host-device-count flag cannot
+  leak into this process.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, rep
+from repro.core.conv import EquivariantConv, WignerBlocks
+from repro.core.irreps import num_coeffs
+from repro.core.manybody import manybody_gaunt_product, manybody_selfmix
+from repro.core.rep import Rep
+from repro.testing import random_irreps, random_unit_vectors
+
+
+def _j(a):
+    return jnp.asarray(a)
+
+
+# ---------------------------------------------------------------------------
+# counter proofs: the execution knobs no longer kick workloads off the
+# resident route
+# ---------------------------------------------------------------------------
+
+
+def test_manybody_donate_keeps_resident_route():
+    """donate=True used to fall back to the legacy batched dispatch (2(n-1)
+    conversions); now it stays on the chain plan: one sh->F per distinct
+    operand + one exit projection."""
+    L, nu = 2, 3
+    xs = [_j(random_irreps(L, (13,), seed=i)) for i in range(nu)]
+    # reference FIRST: the donated call consumes the operand buffers on
+    # accelerators (donation is a no-op only on CPU)
+    ref = manybody_gaunt_product(xs, [L] * nu, Lout=L)
+    with rep.conversion_stats(fresh=True) as c:
+        out = manybody_gaunt_product(xs, [L] * nu, Lout=L, donate=True)
+    assert c["sh_to_fourier"] == nu  # <= 1 per distinct operand
+    assert c["fourier_to_sh"] == 1
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_selfmix_donate_and_shard_single_conversion():
+    """The shared-operand elision survives donation + (inert) sharding: ONE
+    degree-resolved conversion serves all nu reweighted operands."""
+    L, nu = 2, 3
+    x = _j(random_irreps(L, (7,), seed=5))
+    ws = [_j(np.random.default_rng(40 + i).normal(size=(7, L + 1)).astype(np.float32))
+          for i in range(nu)]
+    # reference first — the donated call consumes x on accelerators
+    ref = manybody_selfmix(x, L, nu, Lout=L, weights=ws)
+    with rep.conversion_stats(fresh=True) as c:
+        out = manybody_selfmix(x, L, nu, Lout=L, weights=ws, donate=True,
+                               shard_spec=engine.ShardSpec())
+    assert (c["sh_to_fourier"], c["fourier_to_sh"]) == (1, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_conv_shard_spec_keeps_resident_route():
+    """EquivariantConv with a configured shard_spec used to RAISE on resident
+    filters; now the boundary-aware bucket serves them: across a 3-layer
+    stack the counters show 1 filter + 1 x conversion (<= 1 per distinct
+    operand), not the per-layer fallback's 2 per call."""
+    L, n_layers = 2, 3
+    conv = EquivariantConv(L, L, L, method="general",
+                           shard_spec=engine.ShardSpec())
+    x = _j(random_irreps(L, (11,), seed=1))
+    r = _j(random_unit_vectors((11,), seed=2))
+    with rep.conversion_stats(fresh=True) as c:
+        filt = conv.filter_rep(r)
+        for _ in range(n_layers):
+            out = conv(x, filt)
+    # 1 eager filter conversion + 1 x-side conversion at bucket trace time
+    assert c["sh_to_fourier"] == 2
+    assert c["fourier_to_sh"] == 1
+    ref = conv(x, r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# resident operands/results through the batched layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,form", [("fft", "dense"), ("rfft", "half")])
+def test_resident_bucket_matches_per_plan(backend, form):
+    L = 2
+    x = _j(random_irreps(L, (10,), seed=10))
+    f = _j(random_irreps(L, (10,), seed=11))
+    rf = Rep.from_sh(f, L).to_fourier(form)
+    bp = engine.plan_batch(
+        [engine.BatchItem(L1=L, L2=L, Lout=L,
+                          options=(("boundary", ("sh", "fourier", "sh")),))],
+        kind="pairwise", backend=backend, requires_grad=False, pad_to=16)
+    got = bp.apply([(x, rf)])[0]
+    ref = engine.plan(L, L, L, backend=backend, requires_grad=False).apply(x, f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_resident_bucket_broadcast_inner_dims():
+    """The SEGNN layout: one resident edge filter against C channel features
+    — the filter's grid keeps its un-materialized channel dim through the
+    bucket's (row prefix, inner broadcast) split."""
+    n, C, L = 3, 4, 1
+    x = _j(random_irreps(L, (n, n, C), seed=20))
+    f = _j(random_irreps(L, (n, n, 1), seed=21))
+    rf = Rep.from_sh(f, L).to_fourier("dense")
+    bp = engine.plan_batch(
+        [engine.BatchItem(L1=L, L2=L, Lout=L,
+                          options=(("boundary", ("sh", "fourier", "sh")),))],
+        kind="pairwise", backend="fft", requires_grad=False)
+    got = bp.apply([(x, rf)])[0]
+    assert got.shape == (n, n, C, num_coeffs(L))
+    ref = engine.plan(L, L, L, backend="fft", requires_grad=False).apply(x, f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_resident_output_bucket_returns_reps():
+    """A 'fourier' output boundary keeps bucket outputs resident: per-item
+    Reps whose projection matches the SH-boundary result."""
+    L = 1
+    items = [engine.BatchItem(L1=L, L2=L, Lout=2 * L,
+                              options=(("boundary", ("sh", "sh", "fourier")),))] * 2
+    bp = engine.plan_batch(items, kind="pairwise", backend="fft",
+                           requires_grad=False)
+    ins = [(_j(random_irreps(L, (4,), seed=30 + i)),
+            _j(random_irreps(L, (4,), seed=35 + i))) for i in range(2)]
+    outs = bp.apply(ins)
+    p = engine.plan(L, L, 2 * L, backend="fft", requires_grad=False)
+    for (x1, x2), got in zip(ins, outs):
+        assert isinstance(got, Rep) and got.is_fourier
+        np.testing.assert_allclose(np.asarray(got.to_sh().data),
+                                   np.asarray(p.apply(x1, x2)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_wigner_geometry_bucket_matches_raw_rhat():
+    """Precomputed WignerBlocks through the escn bucket == the per-call
+    align+recurse path, weights included."""
+    L = 2
+    conv = EquivariantConv(L, L, L, method="escn")
+    x = _j(random_irreps(L, (9,), seed=50))
+    r = _j(random_unit_vectors((9,), seed=51))
+    w1 = _j(np.random.default_rng(52).normal(size=(9, L + 1)).astype(np.float32))
+    geom = conv.geometry_rep(r)
+    assert isinstance(geom, WignerBlocks) and geom.L == L
+    got = conv(x, geom, w1=w1)
+    ref = conv(x, r, w1=w1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chain_apply_jit_dedups_rep_wrappers():
+    """Donation-safe dedup keys on the underlying buffer + Rep meta, not the
+    wrapper id: two Reps around one grid are ONE unique operand (donated
+    once, converted once)."""
+    L = 1
+    x = _j(random_irreps(L, (4,), seed=70))
+    r1 = Rep.from_sh(x, L).to_fourier("half")
+    alias = Rep(r1.data, r1.L, r1.basis, r1.form)   # new wrapper, same buffer
+    cp = engine.plan_chain((L, L), 2 * L, donate=True)
+    out = cp.apply_jit([r1, alias], out_basis="fourier")
+    (key,) = cp._jit_cache
+    assert key[0] == (0, 0), "alias wrapper was not deduped to one operand"
+    ref = engine.plan_chain((L, L), 2 * L).apply_jit([x, x])
+    np.testing.assert_allclose(np.asarray(out.to_sh().data), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bucket_rejects_mixed_rep_and_array_items():
+    """Two items of one bucket must agree on operand structure: a Fourier
+    Rep and a raw SH array in the same slot fail with a real message, not a
+    downstream concat shape error."""
+    L = 1
+    item = engine.BatchItem(L1=L, L2=L, Lout=L,
+                            options=(("boundary", ("sh", "fourier", "sh")),))
+    bp = engine.plan_batch([item, item], kind="pairwise", backend="fft",
+                           requires_grad=False)
+    x = _j(random_irreps(L, (3,), seed=80))
+    f = _j(random_irreps(L, (3,), seed=81))
+    rf = Rep.from_sh(f, L).to_fourier("dense")
+    with pytest.raises(ValueError, match="operand structure"):
+        bp.apply([(x, rf), (x, f)])
+
+
+def test_donation_alias_copy_dedups_grid_buffers():
+    """Donation dedup must compare LEAF buffers, not wrapper ids: two Rep
+    wrappers around one grid buffer alias the same donation target."""
+    L = 2
+    item = engine.BatchItem(L1=L, L2=L, Lout=L,
+                            options=(("boundary", ("sh", "fourier", "sh")),))
+    bp = engine.plan_batch([item, item], kind="pairwise", backend="fft",
+                           requires_grad=False, donate=True)
+    x1 = _j(random_irreps(L, (4,), seed=60))
+    x2 = _j(random_irreps(L, (4,), seed=61))
+    grid = Rep.from_sh(_j(random_irreps(L, (4,), seed=62)), L).to_fourier("dense")
+    alias = Rep(grid.data, grid.L, grid.basis, grid.form)  # new wrapper, same buffer
+    inputs, weights = bp._copy_donation_aliases(
+        [(x1, grid), (x2, alias)], [None, None])
+    assert inputs[0][1].data is grid.data          # first reference donated
+    assert inputs[1][1].data is not grid.data      # repeat reference copied
+    np.testing.assert_array_equal(np.asarray(inputs[1][1].data),
+                                  np.asarray(grid.data))
+
+
+# ---------------------------------------------------------------------------
+# the resident x sharded x donated matrix on 2 virtual devices (subprocess:
+# the XLA host-device flag must be set before jax initializes)
+# ---------------------------------------------------------------------------
+
+def _subprocess_env() -> dict:
+    """Child env: inherit the parent's, force CPU, and make the src path
+    absolute so the tests run from any cwd."""
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+def _run_subprocess(code: str, marker: str):
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=_subprocess_env(), timeout=900)
+    assert marker in out.stdout, (out.stdout[-2000:], out.stderr[-2000:])
+
+
+def test_resident_sharded_donated_matrix_two_devices():
+    """Batched-vs-looped identity + rotation equivariance for Rep operands
+    under both ShardSpec modes, and grad through a donated resident chain —
+    all on a real 2-device data mesh."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import engine
+from repro.core.rep import Rep
+from repro.testing import random_angles, random_irreps, rotate_irreps
+
+mesh = jax.make_mesh((2,), ("data",))
+L, n = 2, 8
+x = jnp.asarray(random_irreps(L, (n,), seed=1))
+f = jnp.asarray(random_irreps(L, (n,), seed=2))
+rf = Rep.from_sh(f, L).to_fourier("half")
+ref = engine.plan(L, L, L, backend="rfft", requires_grad=False).apply(x, f)
+item = engine.BatchItem(L1=L, L2=L, Lout=L,
+                        options=(("boundary", ("sh", "fourier", "sh")),))
+ang = random_angles(seed=7)
+for mode in ("constraint", "shard_map"):
+    sp = engine.ShardSpec(mesh=mesh, axes=("data",), mode=mode)
+    bp = engine.plan_batch([item], kind="pairwise", backend="rfft",
+                           requires_grad=False, shard_spec=sp, donate=True)
+    got = bp.apply([(x, rf)])[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # rotation equivariance: rotate inputs -> output rotates
+    xr = jnp.asarray(rotate_irreps(np.asarray(x), L, ang))
+    fr = jnp.asarray(rotate_irreps(np.asarray(f), L, ang))
+    got_r = bp.apply([(xr, Rep.from_sh(fr, L).to_fourier("half"))])[0]
+    want = rotate_irreps(np.asarray(ref), L, ang)
+    np.testing.assert_allclose(np.asarray(got_r), want, rtol=1e-3, atol=1e-3)
+
+# grad through a donated + sharded resident chain, both modes
+xs = [jnp.asarray(random_irreps(L, (n,), seed=20 + i)) for i in range(3)]
+cp0 = engine.plan_chain((L,) * 3, L)
+ref_c = cp0.apply_jit(list(xs))
+g0 = jax.grad(lambda a: jnp.sum(cp0.apply([a, xs[1], xs[2]]) ** 2))(xs[0])
+for mode in ("constraint", "shard_map"):
+    sp = engine.ShardSpec(mesh=mesh, axes=("data",), mode=mode)
+    cp = engine.plan_chain((L,) * 3, L, donate=True, shard_spec=sp)
+    np.testing.assert_allclose(np.asarray(cp.apply_jit(list(xs))),
+                               np.asarray(ref_c), rtol=1e-4, atol=1e-4)
+    g = jax.grad(lambda a: jnp.sum(cp.apply([a, xs[1], xs[2]]) ** 2))(xs[0])
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
+                               rtol=1e-3, atol=1e-3)
+
+# ragged rows (7 % 2 != 0): the shard_map chain falls back to the
+# constrained combine instead of crashing inside shard_map
+sp = engine.ShardSpec(mesh=mesh, axes=("data",), mode="shard_map")
+cp7 = engine.plan_chain((L, L), 2 * L, shard_spec=sp)
+x7 = jnp.asarray(random_irreps(L, (7,), seed=40))
+y7 = jnp.asarray(random_irreps(L, (7,), seed=41))
+ref7 = engine.plan_chain((L, L), 2 * L).apply_jit([x7, y7])
+np.testing.assert_allclose(np.asarray(cp7.apply_jit([x7, y7])),
+                           np.asarray(ref7), rtol=1e-4, atol=1e-4)
+# mixed leading ranks ([8,k] against [4,8,k]) broadcast fine unsharded and
+# must keep working under a shard_map spec (fallback, not a dim0 mis-shard)
+xa = jnp.asarray(random_irreps(L, (n,), seed=42))
+xb = jnp.asarray(random_irreps(L, (4, n), seed=43))
+ref_b = engine.plan_chain((L, L), 2 * L).apply_jit([xa, xb])
+np.testing.assert_allclose(np.asarray(cp7.apply_jit([xa, xb])),
+                           np.asarray(ref_b), rtol=1e-4, atol=1e-4)
+print("MATRIX_OK")
+"""
+    _run_subprocess(code, "MATRIX_OK")
+
+
+def test_mace_sharded_resident_matches_legacy_two_devices():
+    """The acceptance gate: MaceGaunt with shard_data=True AND
+    fourier_resident=True (both conv impls) matches the unsharded legacy
+    path numerically on a 2-device mesh."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.gaunt_ff import EquivariantConfig
+from repro.distributed.sharding import set_activation_mesh
+from repro.models.equivariant import MaceGaunt
+
+mesh = jax.make_mesh((2,), ("data",))
+rng = np.random.default_rng(3)
+species = jnp.asarray(rng.integers(0, 4, size=(6,)))
+pos = jnp.asarray(rng.normal(size=(6, 3)) * 1.5, jnp.float32)
+for conv_impl in ("escn", "general"):
+    cfg = EquivariantConfig(name="t", kind="mace", L=1, L_edge=1, channels=4,
+                            n_layers=2, nu=3, n_species=4, conv_impl=conv_impl,
+                            shard_data=False, fourier_resident=False)
+    model = MaceGaunt(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    e_legacy = float(model.energy(params, species, pos))
+    set_activation_mesh(mesh)
+    cfg_on = dataclasses.replace(cfg, shard_data=True, fourier_resident=True)
+    e_on = float(MaceGaunt(cfg_on).energy(params, species, pos))
+    set_activation_mesh(None)
+    assert abs(e_on - e_legacy) < 1e-3 * max(1.0, abs(e_legacy)), (
+        conv_impl, e_on, e_legacy)
+print("MACE_SHARDED_RESIDENT_OK")
+"""
+    _run_subprocess(code, "MACE_SHARDED_RESIDENT_OK")

@@ -30,14 +30,12 @@ def _rand(shape, seed, dtype=jnp.float32):
 def _count(fn):
     """Run ``fn`` and return (s2f, f2s) conversion deltas.
 
-    Chain plans dispatch through a cached jit (`ChainPlan.apply_jit`), whose
-    conversions tick only when traced — drop those caches first so every
-    counted run traces fresh."""
-    for cp in engine.get_engine()._chains.values():
-        cp._jit_cache.clear()
-    rep.reset_conversion_stats()
-    fn()
-    c = rep.conversion_stats()
+    `conversion_stats(fresh=True)` scopes the counters to the block
+    (snapshot/restore — robust to other tests' leftovers) and drops the
+    cached `ChainPlan.apply_jit` dispatches so every counted chain traces
+    fresh (warm jit caches tick zero)."""
+    with rep.conversion_stats(fresh=True) as c:
+        fn()
     return c["sh_to_fourier"], c["fourier_to_sh"]
 
 

@@ -81,3 +81,24 @@ def test_oversized_request_rejected(small_model):
     sp, pos = _mol(5, 8)
     with pytest.raises(ValueError):
         eng.add_request(EquivariantRequest(species=sp, pos=pos))
+
+
+def test_serve_step_runs_resident_and_sharded():
+    """The continuous-batching step keeps basis residency under a sharded
+    config (PR 4: no more resident/sharded fork): a shard_data=True,
+    fourier_resident=True model serves, warms up, and matches the plain
+    config's energies."""
+    cfg = dataclasses.replace(gaunt_mace_ff, channels=8, n_layers=1, L=1,
+                              L_edge=1, n_species=4, shard_data=True,
+                              fourier_resident=True)
+    model = MaceGaunt(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = EquivariantServeEngine(model, params, n_slots=2, max_atoms=6,
+                                 warmup=True)
+    sp, pos = _mol(3, 11)
+    out = eng.run([EquivariantRequest(species=sp, pos=pos)])[0]
+    assert out.done
+    ref_model = MaceGaunt(dataclasses.replace(cfg, shard_data=False,
+                                              fourier_resident=False))
+    e_ref = float(ref_model.energy(params, jnp.asarray(sp), jnp.asarray(pos)))
+    assert abs(out.energy - e_ref) < 1e-3 * max(1.0, abs(e_ref))
