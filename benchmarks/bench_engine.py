@@ -303,6 +303,60 @@ def run_chain(csv=True):
     return records
 
 
+def run_chain_kernel(csv=True):
+    """Measured chain autotune (DESIGN.md §6.4): per chained workload, which
+    ChainPlan backend does the measured autotuner pick, and how does the pick
+    compare to the resident tree-conv baseline?
+
+    Also measures and records the fused cost model's skinny-matmul
+    calibration constant (`engine_calibration_fused_skinny`) — heuristic-mode
+    plans on this host then use the measured factor instead of the CPU-era
+    default.  The CI guard fails if the autotuner picks the collocation
+    kernel on a workload where it then *loses* to tree-conv, or if the
+    kernel wins nowhere at all (the autotune fold would be dead weight).
+    """
+    from repro.core.irreps import num_coeffs as _nc
+    from repro.kernels import gaunt_fused as _gk
+
+    records = []
+    eng = engine.get_engine()
+    cal = eng.calibrate_fused()
+    record(records, "engine_calibration_fused_skinny", cal["fused_xla_us"],
+           echo=csv, factor=cal["factor"],
+           dense_einsum_us=cal["dense_einsum_us"],
+           default_factor=4.0)
+    # chained workloads spanning the regimes: short fat chains (collocation's
+    # home turf — one dispatch vs many small spectral ops), long thin chains
+    # (tree-conv's home turf: grids grow as sum(L) and the collocation grid
+    # pays G ~ (2*sum(L)+2)^2 per operand), and a full-degree exit
+    workloads = [
+        ("L1x3_B512", (1, 1, 1), 1, 512),
+        ("L2x2_B64", (2, 2), 2, 64),
+        ("L2x3_B128", (2, 2, 2), 2, 128),
+        ("L3x3_B64", (3, 3, 3), 3, 64),
+        ("L2x4_B256_full", (2, 2, 2, 2), 8, 256),
+    ]
+    for name, Ls, Lout, B in workloads:
+        xs = [_rand((B, _nc(L)), 7 + i) for i, L in enumerate(Ls)]
+        cp = eng.plan_chain(Ls, Lout, tune="measure", batch_hint=B)
+        tree = eng.plan_chain(Ls, Lout, backend="tree")
+        t_pick = time_fn(lambda: cp.apply_jit(xs))
+        t_tree = time_fn(lambda: tree.apply_jit(xs))
+        # dispatch proof data: the collocation backends tick the kernel-call
+        # counter once per trace — the pallas flavor is ONE pallas_call
+        extra = {}
+        if cp.backend == "fused_pallas":
+            _gk.reset_kernel_stats()
+            jax.block_until_ready(cp.apply(xs))
+            extra["pallas_calls"] = _gk.kernel_stats()["chain_pallas_calls"]
+        record(records, f"engine_chain_kernel_{name}", t_pick, echo=csv,
+               backend=cp.backend, tree_us=round(t_tree, 1),
+               speedup_vs_tree=round(t_tree / t_pick, 2),
+               n_operands=len(Ls), **extra)
+    return records
+
+
 if __name__ == "__main__":
     run()
     run_chain()
+    run_chain_kernel()

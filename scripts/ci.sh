@@ -8,10 +8,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-echo "=== tier-1 tests (conformance + resident-sharded files deferred to their own tiers) ==="
+echo "=== tier-1 tests (conformance + resident-sharded + chain-kernel files deferred to their own tiers) ==="
 python -m pytest -x -q \
   --ignore=tests/test_equivariance.py --ignore=tests/test_engine_transforms.py \
-  --ignore=tests/test_resident_batched.py "$@"
+  --ignore=tests/test_resident_batched.py --ignore=tests/test_chain_kernel.py "$@"
 
 echo "=== conformance tier: equivariance + transform/batched-plan parity ==="
 python -m pytest -q tests/test_equivariance.py tests/test_engine_transforms.py
@@ -22,6 +22,15 @@ echo "=== resident x sharded tier: MaceGaunt shard_data+fourier_resident on 2 de
 # unsharded legacy path numerically (subprocess tests set the XLA 2-device
 # flag) — a silent fallback or divergence fails CI here
 python -m pytest -q tests/test_resident_batched.py
+
+echo "=== Pallas interpret tier: fused pairwise + n-way chain kernels (interpret=True) ==="
+# every Pallas Gaunt kernel exercised off-TPU through the interpreter in one
+# named gate: the pairwise collocation kernel (selected from test_kernels —
+# a few seconds of dedicated re-run keeps this tier self-contained) and the
+# n-way chain kernel with its grid-blocked accumulation, grad, vmap,
+# residency, f64 and sharded paths — one pallas_call per chain, counter-proven
+python -m pytest -q tests/test_chain_kernel.py
+python -m pytest -q tests/test_kernels.py -k "gaunt_fused"
 
 echo "=== batched-bench smoke (batched vs looped dispatch) ==="
 python -m benchmarks.run --fast --only engine_batched --json ''
@@ -36,7 +45,13 @@ d = json.load(open("BENCH_gaunt.json"))
 recs = d["records"]
 print(f"{len(recs)} records; engine picks:")
 for r in recs:
-    if r["name"].startswith(("engine_batched", "engine_chain")):
+    if r["name"].startswith("engine_chain_kernel"):
+        print(f"  {r['name']:36s} {r['us']:>10.1f} us  -> {r.get('backend')} "
+              f"(tree {r.get('tree_us')} us, x{r.get('speedup_vs_tree')})")
+    elif r["name"].startswith("engine_calibration"):
+        print(f"  {r['name']:36s} factor={r.get('factor')} "
+              f"(default {r.get('default_factor')})")
+    elif r["name"].startswith(("engine_batched", "engine_chain")):
         print(f"  {r['name']:36s} {r['us']:>10.1f} us  "
               f"(looped {r.get('looped_us')} us, x{r.get('speedup_vs_looped')})")
     elif r["name"].startswith("engine_"):
@@ -72,7 +87,8 @@ if os.path.exists("/tmp/bench_baseline.json") and os.path.getsize("/tmp/bench_ba
 else:
     base = {}
 for r in recs:
-    if not r["name"].startswith("engine_chain"):
+    if not r["name"].startswith("engine_chain") or \
+            r["name"].startswith("engine_chain_kernel"):
         continue
     s = r.get("speedup_vs_looped", 0.0)
     if s < FLOOR:
@@ -80,6 +96,33 @@ for r in recs:
     b = base.get(r["name"], {}).get("speedup_vs_looped")
     if b and s < FRAC * b:
         fail.append(f"{r['name']}: chain speedup regressed x{b} -> x{s} (>20%)")
+
+# guard 3 — chain autotune: where the measured autotuner picked the
+# collocation kernel, the pick must actually beat (>= KFLOOR x) the resident
+# tree-conv on that workload — a kernel that wins the measurement but loses
+# the bench means the autotune methodology regressed.  And the kernel must
+# win SOMEWHERE: if no benchmarked chain workload selects a fused backend,
+# the chain-autotune fold is dead weight.  Both knobs are env-tunable:
+# BENCH_GUARD_KERNEL_FLOOR for the loss check, and
+# BENCH_GUARD_REQUIRE_KERNEL_WIN=0 for hosts whose matmul/FFT balance makes
+# tree the honest winner everywhere (that is a valid autotune outcome, not
+# a regression).
+KFLOOR = float(os.environ.get("BENCH_GUARD_KERNEL_FLOOR", "0.9"))
+REQUIRE_WIN = os.environ.get("BENCH_GUARD_REQUIRE_KERNEL_WIN", "1") != "0"
+kernel_recs = [r for r in recs if r["name"].startswith("engine_chain_kernel_")]
+if kernel_recs:
+    picked = [r for r in kernel_recs
+              if r.get("backend", "").startswith("fused")]
+    if not picked and REQUIRE_WIN:
+        fail.append("engine_chain_kernel: the measured autotuner picked the "
+                    "collocation kernel on NO benchmarked chain workload "
+                    "(set BENCH_GUARD_REQUIRE_KERNEL_WIN=0 if tree honestly "
+                    "wins everywhere on this host)")
+    for r in picked:
+        s = r.get("speedup_vs_tree", 0.0)
+        if s < KFLOOR:
+            fail.append(f"{r['name']}: autotuner picked {r['backend']} but it "
+                        f"LOST to tree-conv (x{s} < {KFLOOR})")
 if fail:
     print("BENCH GUARD FAILURES:")
     for f in fail:

@@ -30,6 +30,14 @@ class EquivariantConfig:
     # debugging — the resident path is numerically identical up to dtype
     # roundoff.
     fourier_resident: bool = True
+    # chain-backend policy (DESIGN.md §6.4): 'heuristic' keeps the resident
+    # spectral tree; 'measure' folds the model's chained products into the
+    # engine's measured autotuner, which may collapse a whole chain into the
+    # n-way collocation kernel (one dispatch, zero conversions).  Measurement
+    # only runs outside jit: a forward traced before any eager call stays on
+    # 'tree' for its chain keys — run one eager forward (or serve warmup(),
+    # which seeds the keys) before jitting to engage the measured picks.
+    chain_tune: str = "heuristic"
 
 
 gaunt_mace_ff = EquivariantConfig(

@@ -37,6 +37,11 @@ __all__ = [
     "conv_u_index",
     "cg_11_blocks",
     "fused_matrices",
+    "chain_matrices",
+    "chain_sample_sh",
+    "chain_sample_grid",
+    "chain_project_sh",
+    "chain_project_grid",
     "gaunt_dense",
     "cache_stats",
     "clear_all",
@@ -150,42 +155,136 @@ def cg_11_blocks(L: int) -> tuple[np.ndarray, ...]:
 
 
 # --------------------------------------------------------------------------
-# fused collocation (sample-multiply-project) matrices
+# fused collocation (sample-multiply-project) matrices — pairwise and n-way
+# chain forms share one set of builders (DESIGN.md §3.4 / §6.4)
 # --------------------------------------------------------------------------
+
+
+def _chain_grid_angles(Ltot: int) -> tuple[int, np.ndarray]:
+    """(N, angles) of the alias-free product grid for total degree Ltot.
+
+    A product of bandlimited spherical functions with degrees summing to
+    Ltot is bandlimited at Ltot on the torus double cover; N = 2*Ltot + 2
+    (> 2*Ltot + 1 and even) samples it alias-free.
+    """
+    N = 2 * Ltot + 2
+    return N, 2 * math.pi * np.arange(N) / N
+
+
+@lru_cache(maxsize=None)
+def chain_sample_sh(L: int, Ltot: int) -> np.ndarray:
+    """T [(L+1)^2, G]: real SH of degree <= L sampled on the degree-Ltot
+    product grid (float64, unpadded) — the per-operand sampling matrix of
+    the chain collocation kernel."""
+    N, t = _chain_grid_angles(Ltot)
+    tt, pp = np.meshgrid(t, t, indexing="ij")
+    xyz = np.stack([np.sin(tt) * np.cos(pp), np.sin(tt) * np.sin(pp), np.cos(tt)], -1)
+    S = real_sph_harm(L, xyz.reshape(-1, 3))  # [G, (L+1)^2]
+    return S.T.copy()
+
+
+@lru_cache(maxsize=None)
+def chain_sample_grid(L: int, Ltot: int) -> np.ndarray:
+    """T' [2*(2L+1)*(L+1), G]: Fourier-resident entry sampling matrix.
+
+    A resident operand arrives as its Hermitian *half* coefficient grid
+    F [2L+1 (u), L+1 (v >= 0)]; its real spatial samples on the product grid
+    are  V[g] = Re( sum_{u, v>=0} c_v F[u,v] e^{i(u t_g + v p_g)} )  with
+    c_0 = 1, c_v = 2 (the v < 0 half is the conjugate mirror).  Stacking the
+    grid as the real vector [Re F; Im F] makes this one REAL matmul, so
+    resident operands enter the chain kernel as grids — no SH data, no
+    sh_to_fourier, the sampling matmul just uses this matrix instead of
+    `chain_sample_sh`.
+    """
+    N, t = _chain_grid_angles(Ltot)
+    us = np.arange(-L, L + 1)
+    vs = np.arange(0, L + 1)
+    Et = np.exp(1j * np.outer(us, t))          # [2L+1, N]
+    Ep = np.exp(1j * np.outer(vs, t))          # [L+1, N]
+    c = np.where(vs == 0, 1.0, 2.0)
+    E = np.einsum("ua,vb,v->uvab", Et, Ep, c).reshape((2 * L + 1) * (L + 1), N * N)
+    return np.concatenate([E.real, -E.imag], axis=0)
+
+
+@lru_cache(maxsize=None)
+def chain_project_sh(Ltot: int, Lout: int) -> np.ndarray:
+    """P [G, (Lout+1)^2]: product-grid samples -> SH degrees <= Lout.
+
+    P[g, k] = Re((1/G) sum_{u,v} e^{-i(u t_g + v p_g)} z^k_{u,v}) — the
+    discrete projection equals the convolution-theorem result to machine
+    precision because the sampled product is alias-free (float64, unpadded).
+    """
+    N, t = _chain_grid_angles(Ltot)
+    z = _z_raw(Ltot, Lout)  # [2Lt+1, 2Lt+1, dout] complex
+    us = np.arange(-Ltot, Ltot + 1)
+    Et = np.exp(-1j * np.outer(t, us))  # [N, 2Lt+1]
+    P = np.einsum("au,bv,uvk->abk", Et, Et, z).real / (N * N)
+    return P.reshape(N * N, -1)
+
+
+@lru_cache(maxsize=None)
+def chain_project_grid(Ltot: int) -> np.ndarray:
+    """P' [G, 2*(2Lt+1)*(Lt+1)]: samples -> real-stacked half product grid.
+
+    F[u,v] = (1/G) sum_g V[g] e^{-i(u t_g + v p_g)} for v >= 0; the output
+    stacks [Re F; Im F] so a 'fourier' chain exit is one real matmul whose
+    result reassembles into the resident half grid outside the kernel.
+    """
+    N, t = _chain_grid_angles(Ltot)
+    us = np.arange(-Ltot, Ltot + 1)
+    vs = np.arange(0, Ltot + 1)
+    Et = np.exp(-1j * np.outer(t, us))          # [N, 2Lt+1]
+    Ep = np.exp(-1j * np.outer(t, vs))          # [N, Lt+1]
+    E = np.einsum("au,bv->abuv", Et, Ep).reshape(N * N, -1) / (N * N)
+    return np.concatenate([E.real, E.imag], axis=1)
+
+
+@lru_cache(maxsize=None)
+def chain_matrices(Ls: tuple, Lout: int, entries: tuple = None,
+                   out_entry: str = "sh", pad_lanes: bool = True,
+                   dtype: str = "float32"):
+    """Chain collocation matrices ((T_1..T_n), P) for  x1 (x) ... (x) xn.
+
+    entries: per-operand 'sh' (packed SH vector, T from `chain_sample_sh`)
+    or 'grid' (Fourier-resident real-stacked half grid, `chain_sample_grid`);
+    out_entry: 'sh' projects to degrees <= Lout, 'grid' returns the
+    real-stacked half product grid (requires Lout == sum(Ls)).  When
+    ``pad_lanes``, G rounds up to a multiple of 128 (zero sample columns /
+    zero projection rows — inert, keeps the TPU MXU lane-aligned).
+    """
+    Ls = tuple(int(L) for L in Ls)
+    Ltot = sum(Ls)
+    entries = ("sh",) * len(Ls) if entries is None else tuple(entries)
+    if len(entries) != len(Ls) or any(e not in ("sh", "grid") for e in entries):
+        raise ValueError(f"entries must be {len(Ls)} of 'sh'|'grid', got {entries!r}")
+    Ts = [chain_sample_sh(L, Ltot) if e == "sh" else chain_sample_grid(L, Ltot)
+          for L, e in zip(Ls, entries)]
+    if out_entry == "sh":
+        P = chain_project_sh(Ltot, Lout)
+    elif out_entry == "grid":
+        if Lout != Ltot:
+            raise ValueError(f"out_entry='grid' keeps the full product grid "
+                             f"(L={Ltot}); got Lout={Lout}")
+        P = chain_project_grid(Ltot)
+    else:
+        raise ValueError(f"unknown out_entry {out_entry!r} (expected 'sh'|'grid')")
+    if pad_lanes:
+        G = Ts[0].shape[1]
+        Gp = ((G + 127) // 128) * 128
+        Ts = [np.pad(T, [(0, 0), (0, Gp - G)]) for T in Ts]
+        P = np.pad(P, [(0, Gp - G), (0, 0)])
+    return tuple(T.astype(dtype) for T in Ts), P.astype(dtype)
 
 
 @lru_cache(maxsize=None)
 def fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True):
-    """Collocation matrices (T1 [d1,G], T2 [d2,G], P [G,dout]) — exact.
-
-    T_i samples real SH on the alias-free torus grid; P projects pointwise
-    products back to SH degrees <= Lout (see DESIGN.md §3.4).  When
-    ``pad_lanes``, G is rounded up to a multiple of 128 (extra sample points
-    get zero projection weight — harmless and keeps the TPU MXU aligned).
-    """
-    Lt = L1 + L2
-    N = 2 * Lt + 2  # > 2*Lt+1: alias-free for the product
-    t = 2 * math.pi * np.arange(N) / N
-    p = 2 * math.pi * np.arange(N) / N
-    tt, pp = np.meshgrid(t, p, indexing="ij")
-    xyz = np.stack([np.sin(tt) * np.cos(pp), np.sin(tt) * np.sin(pp), np.cos(tt)], -1)
-    S = real_sph_harm(max(L1, L2), xyz.reshape(-1, 3))  # [G, dmax]
-    T1 = S[:, : num_coeffs(L1)].T.copy()  # [d1, G]
-    T2 = S[:, : num_coeffs(L2)].T.copy()
-    # projection: F3[u,v] = (1/N^2) sum_g V[g] e^{-i(u t_g + v p_g)}; out = sum F3 z
-    z = _z_raw(Lt, Lout)  # [2Lt+1, 2Lt+1, dout] complex
-    us = np.arange(-Lt, Lt + 1)
-    Et = np.exp(-1j * np.outer(t, us))  # [N, 2Lt+1]
-    Ep = np.exp(-1j * np.outer(p, us))
-    P = np.einsum("au,bv,uvk->abk", Et, Ep, z).real / (N * N)
-    P = P.reshape(N * N, -1)
-    if pad_lanes:
-        G = T1.shape[1]
-        Gp = ((G + 127) // 128) * 128
-        T1 = np.pad(T1, [(0, 0), (0, Gp - G)])
-        T2 = np.pad(T2, [(0, 0), (0, Gp - G)])
-        P = np.pad(P, [(0, Gp - G), (0, 0)])
-    return T1.astype(np.float32), T2.astype(np.float32), P.astype(np.float32)
+    """Pairwise collocation matrices (T1 [d1,G], T2 [d2,G], P [G,dout]) —
+    the n=2 special case of `chain_matrices` (see DESIGN.md §3.4).  The
+    explicit entries/out args match the chain runners' call tuple exactly,
+    so both share ONE cache entry (lru_cache keys on raw arguments)."""
+    (T1, T2), P = chain_matrices((L1, L2), Lout, ("sh", "sh"), "sh",
+                                 pad_lanes=pad_lanes)
+    return T1, T2, P
 
 
 @lru_cache(maxsize=None)
@@ -201,7 +300,8 @@ def gaunt_dense(L1: int, L2: int, Lout: int, dtype: str = "float32") -> np.ndarr
 _CACHED = (
     _y_raw, _z_raw, y_dense, z_dense, y_packed, z_packed, y_half, z_half,
     pack_index, filter_fourier_col, conv_u_index, cg_11_blocks, fused_matrices,
-    gaunt_dense,
+    chain_matrices, chain_sample_sh, chain_sample_grid, chain_project_sh,
+    chain_project_grid, gaunt_dense,
 )
 
 

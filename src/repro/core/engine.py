@@ -38,6 +38,11 @@ most once — identical operands share one (degree-resolved) conversion even
 under different per-degree weights — grids combine by 2D convolution, and a
 single projection happens at the chain exit, eliminating the interior
 ``fourier_to_sh . sh_to_fourier`` pairs the looped per-product path pays.
+Chains additionally carry their own backend dispatch (DESIGN.md §6.4,
+:data:`CHAIN_BACKENDS`): the resident 'tree', the per-product 'looped'
+fold, or the n-way collocation kernel ('fused_xla' / 'fused_pallas' — ONE
+MXU-resident pallas_call for the whole chain), selected by the measured
+autotuner under ``tune='measure'`` and keyed like plans.
 
 Batched execution (DESIGN.md §5): ``engine.plan_batch(items, ...)`` buckets a
 ragged multi-degree workload (items sharing an (L1, L2, Lout) signature) into
@@ -77,9 +82,12 @@ __all__ = [
     "ShardSpec",
     "BatchedGauntPlan",
     "ChainPlan",
+    "CHAIN_BACKENDS",
     "GauntEngine",
     "register_backend",
     "available_backends",
+    "get_calibration",
+    "set_calibration",
     "spectral_default",
     "expand_degree_weights",
     "get_engine",
@@ -718,8 +726,17 @@ class BatchedGauntPlan:
 
 # --------------------------------------------------------------------------
 # chain plans: whole chained products, Fourier-resident between steps
-# (DESIGN.md §6) — each operand converts at most once, one projection at exit
+# (DESIGN.md §6) — each operand converts at most once, one projection at exit;
+# or collapsed entirely into the n-way collocation kernel (§6.4)
 # --------------------------------------------------------------------------
+
+# chain-level backend dispatch (DESIGN.md §6.4):
+#   tree         — resident spectral pass, divide-and-conquer grid combine
+#   looped       — per-product pairwise fold, full round trip each step (the
+#                  pre-residency strategy, kept as an autotune candidate)
+#   fused_xla    — n-way collocation (sample*multiply*project) in plain jnp
+#   fused_pallas — the same collocation as ONE MXU-resident pallas_call
+CHAIN_BACKENDS = ("tree", "looped", "fused_xla", "fused_pallas")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -758,6 +775,7 @@ class ChainPlan:
     tree: bool
     donate: bool = False
     shard: tuple = (None, (), "constraint")   # (mesh, dp_axes, mode)
+    backend: str = "tree"    # one of CHAIN_BACKENDS (DESIGN.md §6.4)
     apply: Callable = dataclasses.field(repr=False, compare=False, default=None)
     _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                          compare=False)
@@ -817,9 +835,13 @@ class ChainPlan:
                 "looped": (2 * (n - 1), n - 1)}
 
     def describe(self) -> str:
+        if self.backend.startswith("fused"):
+            return (f"chain(Ls={list(self.Ls)}, Lout={self.Lout}, "
+                    f"dtype={self.dtype}) -> {self.backend} "
+                    f"[collocation: 1 dispatch, 0 conversions]")
         return (f"chain(Ls={list(self.Ls)}, Lout={self.Lout}, "
                 f"conversion={self.conversion}, conv={self.conv}, "
-                f"dtype={self.dtype}, tree={self.tree}) "
+                f"dtype={self.dtype}, tree={self.tree}) -> {self.backend} "
                 f"[-{self.interior_pairs_eliminated} interior pairs]")
 
 
@@ -897,21 +919,27 @@ def _build_chain(Ls: tuple, Lout: int, conversion: str, conv: str,
             return F
 
         grids = [_row_con(g, 2) for g in grids]
-        # per-shard grid combination is valid only when every grid batches
-        # over ONE shared row axis that splits evenly: all batched, same
-        # dim0, divisible by the dp device count (chains do not pad rows —
-        # ROADMAP "Chain shard_map granularity").  Anything else falls back
-        # to the constrained combine, which is sharded but collective-free
-        # only where the partitioner proves it.
+        # per-shard grid combination needs every grid batched over ONE shared
+        # row axis (broadcast/unbatched operands cannot row-shard).  Ragged
+        # row counts are handled by a pad/slice step folded in here: rows
+        # zero-pad to the dp device count (zero grids convolve to zero — the
+        # pad rows are inert) and the combined grid slices back, so chains no
+        # longer require dim0 to divide the device count (the batched buckets
+        # already padded to the lcm; now chains do too).
         use_map = (mesh is not None and dp and mode == "shard_map"
                    and all(jnp.ndim(g) > 2 for g in grids)
                    and len({jnp.shape(g)[0] for g in grids}) == 1)
         if use_map:
             from repro.distributed import sharding as _sh
 
-            use_map = jnp.shape(grids[0])[0] % _sh.dp_size(mesh, dp) == 0
-        if use_map:
+            rows = jnp.shape(grids[0])[0]
+            pad = -rows % _sh.dp_size(mesh, dp)
+            if pad:
+                grids = [jnp.pad(g, [(0, pad)] + [(0, 0)] * (jnp.ndim(g) - 1))
+                         for g in grids]
             F = _shard_rows(combine, mesh, dp, "shard_map")(tuple(grids))
+            if pad:
+                F = F[:rows]
         else:
             F = combine(tuple(grids))
         if out_basis == "fourier":
@@ -928,14 +956,161 @@ def _build_chain(Ls: tuple, Lout: int, conversion: str, conv: str,
     return apply
 
 
+def _build_chain_looped(Ls: tuple, Lout: int, dtype: str,
+                        engine: "GauntEngine") -> Callable:
+    """The pre-residency strategy as a chain backend: a sequential left fold
+    of pairwise spectral plans, paying the full SH round trip per step —
+    kept so the measured chain autotuner prices what residency buys."""
+    rd = _RDTYPE[dtype]
+
+    def apply(xs, weights=None, w_out=None, out_basis: str = "sh"):
+        from .rep import Rep
+
+        if out_basis != "sh":
+            raise ValueError("the looped chain backend has no resident exit; "
+                             "plan with backend='tree' for out_basis='fourier'")
+        xs = list(xs)
+        ws = list(weights) if weights is not None else [None] * len(xs)
+        if len(xs) != len(Ls) or len(ws) != len(xs):
+            raise ValueError(f"chain got {len(xs)} operands / {len(ws)} "
+                             f"weight entries for degrees {Ls}")
+        for i, x in enumerate(xs):
+            if isinstance(x, Rep):
+                # a resident operand must leave the basis here (lossless at
+                # its own bandlimit) — the looped fold works in SH
+                xs[i] = x.to_sh(rdtype=rd).data if x.is_fourier else x.data
+        acc = _wmul(xs[0].astype(rd), ws[0], Ls[0])
+        La = Ls[0]
+        for i, (x, L) in enumerate(zip(xs[1:], Ls[1:]), start=1):
+            Lt = Lout if i == len(Ls) - 1 else La + L
+            p = engine.plan(La, L, Lt, kind="pairwise", dtype=dtype,
+                            backend=spectral_default(La, L))
+            acc = p.apply(acc, x, None, ws[i])
+            La += L
+        return _wmul(acc.astype(rd), w_out, Lout)
+
+    return apply
+
+
+def _build_chain_fused(Ls: tuple, Lout: int, dtype: str,
+                       pallas: bool) -> Callable:
+    """The n-way collocation chain (DESIGN.md §6.4): sample every operand
+    onto the shared alias-free product grid, multiply pointwise n-way,
+    project once — ONE dispatch (`fused_pallas`: one MXU-resident
+    pallas_call; `fused_xla`: the same matrices in plain jnp).  Zero basis
+    conversions: Fourier-resident operands enter as grids through the
+    grid-evaluation sampling matrix, and a 'fourier' exit leaves the half
+    product grid resident."""
+    from repro.core import constants as _c
+
+    rd = _RDTYPE[dtype]
+    Ltot = sum(Ls)
+    # warm the all-SH matrices at build time with the EXACT argument tuple
+    # the runners use (lru_cache keys on raw args, so entries=None would
+    # warm a duplicate); resident-entry variants build lazily on first use
+    _c.chain_matrices(tuple(Ls), Lout, ("sh",) * len(Ls), "sh",
+                      dtype=dtype if dtype == "float64" else "float32")
+
+    def apply(xs, weights=None, w_out=None, out_basis: str = "sh"):
+        from repro.kernels.gaunt_fused import (gaunt_chain_fused_pallas,
+                                               gaunt_chain_fused_xla)
+        from .rep import Rep
+
+        xs = list(xs)
+        if len(xs) != len(Ls):
+            raise ValueError(f"chain got {len(xs)} operands for degrees {Ls}")
+        ws = list(weights) if weights is not None else [None] * len(xs)
+        if len(ws) != len(xs):
+            raise ValueError(f"chain got {len(ws)} weight entries for "
+                             f"{len(xs)} operands")
+        entries, arrs = [], []
+        for i, x in enumerate(xs):
+            if isinstance(x, Rep) and x.is_fourier:
+                if x.L != Ls[i]:
+                    raise ValueError(f"operand {i}: resident bandlimit {x.L} "
+                                     f"!= planned degree {Ls[i]}")
+                if ws[i] is not None:
+                    raise ValueError("resident operands cannot take per-degree "
+                                     "weights (apply in SH)")
+                entries.append("grid")
+                arrs.append(x.with_form("half").data)
+            else:
+                if isinstance(x, Rep):
+                    x = x.data
+                entries.append("sh")
+                arrs.append(_wmul(x, ws[i], Ls[i]))
+        if out_basis == "fourier":
+            if w_out is not None:
+                raise ValueError("w_out applies in SH; project first")
+            if Lout != Ltot:
+                raise ValueError(f"out_basis='fourier' keeps the full grid "
+                                 f"(L={Ltot}); plan with Lout={Ltot} or "
+                                 "project to SH")
+        fn = gaunt_chain_fused_pallas if pallas else gaunt_chain_fused_xla
+        out = fn(arrs, Ls, Lout, entries=tuple(entries),
+                 out_entry="grid" if out_basis == "fourier" else "sh")
+        if out_basis == "fourier":
+            from .rep import Rep as _Rep
+
+            return _Rep(out, Ltot, "fourier", "half")
+        return _wmul(out.astype(rd), w_out, Lout)
+
+    return apply
+
+
+def _constrained_chain_apply(apply: Callable, mesh, dp: tuple) -> Callable:
+    """Row-shard a collocation chain: rank-aware row constraints on batched
+    operands and the output (the kernel wrapper flattens leading dims to
+    rows, so dim0 sharding propagates straight through the matmuls)."""
+    con = _row_constraint(mesh, dp)
+
+    def _c(x, er: int):
+        from .rep import Rep
+
+        if isinstance(x, Rep):
+            return Rep(_c(x.data, 2), x.L, x.basis, x.form)
+        return con(x) if jnp.ndim(x) > er else x
+
+    def wrapped(xs, weights=None, w_out=None, out_basis: str = "sh"):
+        xs = [_c(x, 1) for x in xs]
+        out = apply(xs, weights=weights, w_out=w_out, out_basis=out_basis)
+        return _c(out, 1)
+
+    return wrapped
+
+
 # --------------------------------------------------------------------------
-# cost model (relative real-MAC counts; calibrated coarsely, see DESIGN.md §4)
+# cost model (relative real-MAC counts; calibrated coarsely, see DESIGN.md §4;
+# the fused skinny-matmul factor is *measured* — `GauntEngine.calibrate_fused`)
 # --------------------------------------------------------------------------
 
 _C_CPLX = 4.0        # complex MAC = 4 real MACs
 _C_FFT = 10.0        # per point per log2 level: tiny-grid FFTs vectorize poorly
 _OVERHEAD = 3e4      # per dispatched op: favors fewer, denser ops at small sizes
 _INTERPRET_PENALTY = 1e4   # Pallas interpret mode off-TPU is not a real option
+
+# Measured calibration constants feeding the heuristic cost model.
+# 'fused_skinny' scales the collocation backends' per-element cost: their
+# matmuls are skinny (G >> d, memory-bound) while dense_einsum is one
+# well-blocked contraction, so wall time sits a constant factor off the raw
+# MAC ratio.  The default 4.0 is the historical CPU-era magic number;
+# `GauntEngine.calibrate_fused()` replaces it with a value measured on THIS
+# host/backend (benchmarks run it and record the result in BENCH_gaunt.json),
+# so heuristic-mode plans stop inheriting another machine's constant.
+_CALIB = {"fused_skinny": 4.0, "fused_skinny_measured": False}
+
+
+def get_calibration() -> dict:
+    """The cost model's calibration constants (see `_CALIB`)."""
+    return dict(_CALIB)
+
+
+def set_calibration(**kw) -> None:
+    """Override calibration constants (tests / cross-host replay)."""
+    unknown = set(kw) - set(_CALIB)
+    if unknown:
+        raise ValueError(f"unknown calibration constants {sorted(unknown)}")
+    _CALIB.update(kw)
 
 
 def _dims(key: PlanKey):
@@ -1028,13 +1203,13 @@ def _cost_fused(key: PlanKey, pallas: bool) -> float:
     B, d1, d2, do, n1, n2, N = _dims(key)
     Nf = 2 * (key.L1 + key.L2) + 2
     G = ((Nf * Nf + 127) // 128) * 128
-    # x4: the collocation matmuls are skinny (G >> d, memory-bound) while
-    # dense_einsum is one well-blocked contraction — measured crossovers
-    # (BENCH_gaunt.json engine_pairwise_L6_B64 et al.) sit ~4x off the raw
-    # MAC ratio, so fold that into the per-element constant
-    c = 4.0 * B * G * (d1 + d2 + do) + _OVERHEAD * 4
+    # the skinny-matmul factor is a *measured* calibration constant
+    # (GauntEngine.calibrate_fused, recorded in BENCH_gaunt.json); 4.0 is
+    # only the never-calibrated default
+    f = _CALIB["fused_skinny"]
+    c = f * B * G * (d1 + d2 + do) + _OVERHEAD * 4
     if key.kind == "channel_mix":
-        c = 16.0 * B * G * (d1 + d2 + do) + _OVERHEAD * 4
+        c = 4.0 * f * B * G * (d1 + d2 + do) + _OVERHEAD * 4
     if pallas:
         c *= 0.5 if jax.default_backend() == "tpu" else _INTERPRET_PENALTY
     return c
@@ -1518,10 +1693,53 @@ class GauntEngine:
     def plan_chain(self, Ls, Lout: int | None = None, *,
                    conversion: str | None = None, conv: str | None = None,
                    dtype="float32", tree: bool = True, donate: bool = False,
-                   shard_spec: ShardSpec | None = None) -> ChainPlan:
-        """Plan a chained product  x_1 (x) ... (x) x_n  as ONE resident pass.
+                   shard_spec: ShardSpec | None = None,
+                   backend: str | None = None, tune: str = "heuristic",
+                   batch_hint: int | None = None,
+                   entry_hint: tuple | None = None,
+                   out_hint: str = "sh",
+                   share_hint: tuple | None = None) -> ChainPlan:
+        """Plan a chained product  x_1 (x) ... (x) x_n  as ONE pass.
 
         Ls: per-operand max degrees (n >= 2).  Lout defaults to sum(Ls).
+
+        Backend dispatch (DESIGN.md §6.4): ``backend`` picks a chain
+        realization from :data:`CHAIN_BACKENDS` — 'tree' (the resident
+        spectral pass: convert each operand <= once, divide-and-conquer grid
+        combine, one exit projection), 'looped' (per-product pairwise fold),
+        'fused_xla' / 'fused_pallas' (the n-way collocation kernel: sample
+        every operand onto the shared alias-free product grid, multiply
+        pointwise n-way in VMEM, project once — the Pallas flavor is ONE
+        MXU-resident `pallas_call`).  ``backend=None`` selects:
+
+        * ``tune='measure'`` — chains fold into the engine's measured
+          autotuner, keyed like plans (PlanKey kind='chain' with the Ls,
+          ``batch_hint``, and ``entry_hint``): each candidate is jitted and
+          timed on synthetic inputs, the winner cached in-process.
+          ``entry_hint`` ('sh'|'fourier' per operand) makes the measurement
+          honest for resident call sites: 'fourier' slots are timed as
+          resident Reps, so a backend that must convert them back (looped)
+          or sample them through the larger grid-entry matrix (fused) pays
+          that cost in the timing it is judged by.  ``out_hint='fourier'``
+          declares that applies will request a resident exit: 'looped'
+          (which has none) is excluded, and every candidate is TIMED with
+          that exit (tree skips its projection, fused projects through the
+          wider grid-exit matrix — both must pay their real cost).
+          ``share_hint`` gives the per-operand duplicate-group indices
+          (selfmix ``[A]*nu`` -> (0,)*nu): synthetic operands repeat per
+          group, so tree's single shared conversion engages in the timing
+          exactly as at the real call.  Measurement needs a clean trace: planned inside a jit trace with
+          no previously-seeded cache entry, selection silently stays 'tree'
+          — seed the key eagerly first (serving warmup does).  This *replaces* the old
+          shape-rule policy as the decision mechanism wherever measurement
+          is engaged; `fused_pallas` is timed only on TPU (interpret mode is
+          never a real option), and a live sharded mesh restricts candidates
+          to 'tree' (the only backend with per-shard grid combination).
+        * ``tune='heuristic'`` (default) — 'tree', the conservative resident
+          pick whose <= 1-conversion-per-operand contract the counter tests
+          certify.  An explicit ``conversion``/``conv`` also pins 'tree'
+          (those knobs parameterize the spectral pipeline).
+
         conversion: 'half' (Hermitian real-input grids) or 'dense'; default
         (None) is 'half' — it halves conversion FLOPs for free.
         conv: grid-combination method — 'rfft' (half only), 'fft', 'direct';
@@ -1536,13 +1754,15 @@ class GauntEngine:
         donate=True donates the unique operand buffers through ``apply_jit``
         (callers must not reuse them); ``shard_spec`` runs the chain
         row-sharded over the mesh's data axes (see :class:`ShardSpec`) —
-        both compose with residency, so the former "resident OR
-        donated/sharded" fork is gone.
+        both compose with residency, and sharded chains pad/slice their row
+        axis so ragged row counts no longer need to divide the device count.
 
-        Every operand converts at most once (duplicates share a single
-        degree-resolved conversion even with different per-degree weights),
-        interior products stay in the Fourier basis, and a single projection
-        runs at the exit — see :class:`ChainPlan`.
+        On the spectral route every operand converts at most once
+        (duplicates share a single degree-resolved conversion even with
+        different per-degree weights), interior products stay in the Fourier
+        basis, and a single projection runs at the exit; the collocation
+        route converts *zero* times — resident operands enter as grids
+        through the grid-evaluation sampling matrix — see :class:`ChainPlan`.
         """
         Ls = tuple(int(L) for L in Ls)
         if len(Ls) < 2:
@@ -1550,6 +1770,7 @@ class GauntEngine:
         Lout = sum(Ls) if Lout is None else int(Lout)
         if Lout > sum(Ls):
             raise ValueError("Lout cannot exceed the total degree (Gaunt selection rule)")
+        pinned_spectral = conversion is not None or conv is not None
         if conversion is None:
             conversion = "half"
         if conversion not in ("dense", "half"):
@@ -1564,17 +1785,171 @@ class GauntEngine:
         dts = _dtype_str(dtype)
         mesh, dp = (None, ()) if shard_spec is None else shard_spec.resolve()
         mode = shard_spec.mode if shard_spec is not None else "constraint"
-        key = (Ls, Lout, conversion, conv, dts, tree, donate, mesh, dp, mode)
+        if backend is not None and backend not in CHAIN_BACKENDS:
+            raise ValueError(f"unknown chain backend {backend!r} "
+                             f"(expected one of {CHAIN_BACKENDS})")
+        if entry_hint is not None:
+            entry_hint = tuple(entry_hint)
+            if len(entry_hint) != len(Ls) or \
+                    any(e not in ("sh", "fourier") for e in entry_hint):
+                raise ValueError(f"entry_hint must be {len(Ls)} entries of "
+                                 f"'sh'|'fourier', got {entry_hint!r}")
+        if out_hint not in ("sh", "fourier"):
+            raise ValueError(f"out_hint must be 'sh'|'fourier', got {out_hint!r}")
+        if share_hint is not None:
+            share_hint = tuple(int(g) for g in share_hint)
+            if len(share_hint) != len(Ls):
+                raise ValueError(f"share_hint must have {len(Ls)} group "
+                                 f"indices, got {share_hint!r}")
+        if backend is None:
+            if pinned_spectral or tune != "measure":
+                backend = "tree"
+            else:
+                backend = self._select_chain(Ls, Lout, dts, batch_hint,
+                                             sharded=bool(mesh is not None and dp),
+                                             entry_hint=entry_hint,
+                                             out_hint=out_hint,
+                                             share_hint=share_hint)
+        key = (Ls, Lout, conversion, conv, dts, tree, donate, mesh, dp, mode,
+               backend)
         hit = self._chains.get(key)
         if hit is not None:
             return hit
+        if backend == "tree":
+            apply = _build_chain(Ls, Lout, conversion, conv, dts, tree,
+                                 mesh, dp, mode)
+        elif backend == "looped":
+            apply = _build_chain_looped(Ls, Lout, dts, self)
+        else:
+            apply = _build_chain_fused(Ls, Lout, dts,
+                                       pallas=(backend == "fused_pallas"))
+            if mesh is not None and dp:
+                # collocation is row-parallel: rank-aware row constraints on
+                # the flattened operands/outputs let the partitioner shard it
+                apply = _constrained_chain_apply(apply, mesh, dp)
         cp = ChainPlan(Ls=Ls, Lout=Lout, conversion=conversion, conv=conv,
                        dtype=dts, tree=tree, donate=donate,
-                       shard=(mesh, dp, mode),
-                       apply=_build_chain(Ls, Lout, conversion, conv, dts,
-                                          tree, mesh, dp, mode))
+                       shard=(mesh, dp, mode), backend=backend, apply=apply)
         self._chains[key] = cp
         return cp
+
+    def _select_chain(self, Ls: tuple, Lout: int, dts: str,
+                      batch_hint: int | None, sharded: bool,
+                      entry_hint: tuple | None = None,
+                      out_hint: str = "sh",
+                      share_hint: tuple | None = None) -> str:
+        """Measured chain-backend selection, cached like plan autotune.
+
+        The measurement mirrors the real call as closely as the hints allow:
+        ``entry_hint`` slots marked 'fourier' are synthesized as resident
+        Reps (looped pays its per-call to_sh, fused pays the grid-entry
+        sampling matrix), ``out_hint`` sets the out_basis the candidates are
+        TIMED with (a resident exit skips tree's projection and widens
+        fused's), and ``share_hint`` repeats one synthetic buffer per
+        duplicate group so tree's shared-operand single conversion engages
+        — a mismatched measurement would install a backend whose real-world
+        cost was never measured.  Deliberately NOT mirrored: per-degree
+        weights (their _wmul/bydeg cost is one ordinary conversion's FLOPs
+        regardless of backend — a second-order effect on the ranking), and
+        exact row counts — ``batch_hint`` quantizes to a power-of-two ladder
+        capped at 16384, so ragged eager workloads share a handful of
+        measurements instead of re-benchmarking (and re-allocating
+        synthetic operands for) every distinct size.
+        """
+        if sharded:
+            return "tree"  # the only backend with per-shard grid combination
+        if batch_hint is not None:
+            q = 8
+            while q < min(batch_hint, 16384):
+                q *= 2
+            batch_hint = q
+        entries = entry_hint or ("sh",) * len(Ls)
+        share = share_hint or tuple(range(len(Ls)))
+        key = PlanKey(max(Ls), min(Ls), Lout, kind="chain",
+                      batch_hint=batch_hint, dtype=dts,
+                      extra=(("Ls", Ls), ("entries", entries),
+                             ("out", out_hint), ("share", share)))
+        hit = self._measured.get(key)
+        if hit is not None:
+            return hit
+        if not _trace_clean():
+            return "tree"  # timing inside a trace is meaningless
+        candidates = ["tree", "fused_xla"]
+        if out_hint == "sh":
+            candidates.insert(1, "looped")  # no resident exit on the fold
+        if jax.default_backend() == "tpu":
+            candidates.append("fused_pallas")
+        B = batch_hint or 256
+        rng = np.random.default_rng(0)
+        rd = _RDTYPE[dts]
+        from .rep import Rep
+
+        xs, made = [], {}
+        for L, e, g in zip(Ls, entries, share):
+            x = made.get((g, L, e))
+            if x is None:
+                x = jnp.asarray(rng.normal(size=(B, num_coeffs(L))), dtype=rd)
+                if e == "fourier":
+                    x = Rep.from_sh(x, L).to_fourier("half")
+                made[(g, L, e)] = x
+            xs.append(x)
+        best_name, best_t = "tree", float("inf")
+        for name in candidates:
+            try:
+                cp = self.plan_chain(Ls, Lout, dtype=dts, backend=name)
+                # eager apply, not a fresh jit: apply_jit is the consumer
+                # route and its pre-jit dedup is exactly what makes shared
+                # operands convert once in tree's real cost
+                fn = (lambda _c=cp: jax.block_until_ready(
+                    _c.apply_jit(xs, out_basis=out_hint)))
+                fn()  # compile + warm
+                ts = []
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    fn()
+                    ts.append(time.perf_counter() - t0)
+                t = sorted(ts)[1]
+            except Exception:  # noqa: BLE001 — a broken candidate just loses
+                continue
+            if t < best_t:
+                best_name, best_t = name, t
+        self._measured[key] = best_name
+        return best_name
+
+    def calibrate_fused(self, L: int = 6, B: int = 64) -> dict:
+        """Measure the fused cost model's skinny-matmul factor on THIS host.
+
+        Times the `fused_xla` collocation and the `dense_einsum` baseline on
+        one reference pairwise workload, infers the per-MAC cost ratio the
+        heuristic needs to rank them consistently with measurement, installs
+        it (`set_calibration(fused_skinny=...)`), and returns the record
+        (benchmarks write it to BENCH_gaunt.json).
+        """
+        key = PlanKey(L, L, L, kind="pairwise", batch_hint=B, dtype="float32")
+        args = _synthetic_inputs(key)
+        times = {}
+        for name in ("fused_xla", "dense_einsum"):
+            apply = _REGISTRY[name].build(key)
+            fn = jax.jit(lambda *a: apply(*a))
+            jax.block_until_ready(fn(*args))
+            ts = []
+            for _ in range(5):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                ts.append(time.perf_counter() - t0)
+            times[name] = sorted(ts)[len(ts) // 2]
+        d = num_coeffs(L)
+        G = ((2 * (2 * L) + 2) ** 2 + 127) // 128 * 128
+        macs_fused = B * G * (3 * d)
+        macs_dense = B * d * d * d
+        factor = (times["fused_xla"] / macs_fused) / \
+            (times["dense_einsum"] / macs_dense)
+        factor = float(min(16.0, max(0.25, factor)))
+        set_calibration(fused_skinny=factor, fused_skinny_measured=True)
+        return {"factor": round(factor, 3),
+                "fused_xla_us": round(times["fused_xla"] * 1e6, 1),
+                "dense_einsum_us": round(times["dense_einsum"] * 1e6, 1),
+                "L": L, "B": B}
 
     def select(self, key: PlanKey, tune: str = "heuristic",
                requires_grad: bool = True) -> str:

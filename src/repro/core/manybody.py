@@ -92,12 +92,39 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
     if backend is None and conversion in (None, "dense", "half"):
         # jit-cached chain dispatch (apply_jit) so eager callers keep one
         # compiled invocation per call, as the batched route gave them.
-        # ``tune`` has no effect here: chain conversion/conv follow the
-        # plan's measured auto policy (ROADMAP: fold chains into autotune).
+        # ``tune='measure'`` folds the chain into the engine's measured
+        # autotuner (DESIGN.md §6.4): backend dispatch across the resident
+        # tree, the per-product loop, and the n-way collocation kernel,
+        # keyed by (Ls, Lout, dtype, rows); the default keeps the resident
+        # tree with the conversion/conv shape rule.
+        hint, entry_hint = None, None
+        if tune == "measure":
+            import numpy as _np
+
+            def _lead(x):
+                if getattr(x, "is_fourier", False):
+                    return x.data.shape[:-2]
+                return (x.data if hasattr(x, "data") else x).shape[:-1]
+
+            lead = jnp.broadcast_shapes(*[_lead(x) for x in xs])
+            hint = int(_np.prod(lead)) if lead else 1
+            # measure on the operand kinds actually passed: resident Reps
+            # stay resident in the timing, and duplicate operands (selfmix's
+            # [A]*nu) repeat one synthetic buffer so tree's shared single
+            # conversion engages (see engine._select_chain)
+            entry_hint = tuple("fourier" if getattr(x, "is_fourier", False)
+                               else "sh" for x in xs)
+            seen: dict = {}
+            share_hint = tuple(
+                seen.setdefault(id(x.data if hasattr(x, "data") else x),
+                                len(seen)) for x in xs)
+        else:
+            share_hint = None
         cp = _engine.plan_chain(
             Ls, Lout, conversion=conversion, conv=conv,
             dtype=_engine._dtype_str(cdtype),
-            donate=donate, shard_spec=shard_spec)
+            donate=donate, shard_spec=shard_spec, tune=tune, batch_hint=hint,
+            entry_hint=entry_hint, out_hint=out_basis, share_hint=share_hint)
         out = cp.apply_jit(list(xs), weights=weights, out_basis=out_basis)
         return out if out_basis == "fourier" else out.astype(rdtype)
     if out_basis != "sh":

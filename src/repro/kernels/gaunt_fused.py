@@ -1,33 +1,77 @@
-"""Fused Gaunt tensor product Pallas TPU kernel — sample * multiply * project.
+"""Fused Gaunt tensor product Pallas TPU kernels — sample * multiply * project.
 
 TPU adaptation of the paper's FFT pipeline (see DESIGN.md §3): instead of
 (complex s2f -> FFT conv -> complex f2s) we use the mathematically identical
-*collocation* form on the torus grid:
+*collocation* form on the torus grid,
 
-    out = ((x1 @ T1) .* (x2 @ T2)) @ P
+    out = ((x1 @ T1) .* (x2 @ T2) .* ... .* (xn @ Tn)) @ P
 
 with  T_i[j, g]   = S_j(theta_g, psi_g)        (real SH sampled on the grid)
       P[g, k]     = Re((1/G) sum_{u,v} e^{-i(u t_g + v p_g)} z^{k}_{u,v})
 
-Exactness: the product of two bandlimited spherical functions is bandlimited
-at L1+L2 on the torus double cover; an N x N grid with N >= 2(L1+L2)+1
+for any chain length n >= 2 (`gaunt_chain_fused_pallas`; the historical
+pairwise `gaunt_fused_pallas` is the n = 2 wrapper).
+
+Exactness: the product of n bandlimited spherical functions is bandlimited
+at sum(L_i) on the torus double cover; an N x N grid with N >= 2*sum(L_i)+1
 samples it alias-free, so the discrete projection equals the paper's
 convolution-theorem result to machine precision (tested).
 
-Why this shape for TPU: three dense real matmuls hit the MXU back-to-back
-with one VMEM-resident elementwise multiply between them; the FFT path
-(VPU butterflies on tiny grids) and gather-based sparse conversions are far
-from MXU peak at practical L.  All operands are zero-padded to lane/tile
-boundaries (8 x 128) outside the kernel.
+Why this shape for TPU: n+1 dense real matmuls hit the MXU back-to-back with
+VMEM-resident elementwise multiplies between them — a whole ChainPlan is ONE
+`pallas_call` instead of n+2 XLA ops; the FFT path (VPU butterflies on tiny
+grids) and gather-based sparse conversions are far from MXU peak at
+practical L.  Large product grids (high sum(L_i)) are handled by blocking
+the grid axis and accumulating partial projections in the output block, so
+per-step VMEM stays bounded; batch rows block as before.  All operands are
+zero-padded to lane/tile boundaries (8 x 128) outside the kernel.
+
+Fourier-resident operands enter *as grids*: their real-stacked half grid
+multiplies the grid-evaluation matrix (`constants.chain_sample_grid`)
+instead of the SH sampling matrix — same kernel, no sh_to_fourier, and a
+'grid' exit returns the resident half product grid (`chain_project_grid`).
+
+The chain kernel carries a custom VJP (the collocation matmuls are their own
+adjoints: dV_i = (dout @ P^T) * prod_{j!=i} V_j, dx_i = dV_i @ T_i^T, run as
+plain jnp), so chain plans on the kernel backend support grad — unlike the
+historical pairwise `fused_pallas` backend.
+
+``kernel_stats()`` counts kernel dispatches (ticked once per trace/eager
+call), letting tests *prove* the one-`pallas_call` claim instead of assuming
+it.
 """
 from __future__ import annotations
+
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["gaunt_fused_matrices", "gaunt_fused_pallas"]
+__all__ = [
+    "gaunt_fused_matrices",
+    "gaunt_fused_pallas",
+    "gaunt_chain_fused_pallas",
+    "gaunt_chain_fused_xla",
+    "kernel_stats",
+    "reset_kernel_stats",
+]
+
+
+# ticked once per wrapper call (eager) or trace (jit) — the proof counters
+# behind "a >= 3-operand chain runs as ONE pallas_call"
+_STATS = {"pairwise_pallas_calls": 0, "chain_pallas_calls": 0}
+
+
+def kernel_stats() -> dict:
+    """{'pairwise_pallas_calls': n, 'chain_pallas_calls': m} since reset."""
+    return dict(_STATS)
+
+
+def reset_kernel_stats() -> None:
+    for k in _STATS:
+        _STATS[k] = 0
 
 
 def gaunt_fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True):
@@ -45,6 +89,223 @@ def _kernel(x1_ref, x2_ref, t1_ref, t2_ref, p_ref, o_ref):
     v1 = jnp.dot(x1_ref[...], t1_ref[...], preferred_element_type=jnp.float32)
     v2 = jnp.dot(x2_ref[...], t2_ref[...], preferred_element_type=jnp.float32)
     o_ref[...] = jnp.dot(v1 * v2, p_ref[...], preferred_element_type=jnp.float32)
+
+
+def _make_chain_kernel(n: int, acc_dt):
+    """The n-operand collocation kernel body.
+
+    Grid is (row blocks, grid blocks): for one row block the kernel walks the
+    (lane-padded) sample axis in `block_g` slices — sample every operand onto
+    the slice, multiply n-way in VMEM, project the slice, and accumulate into
+    the output block (revisited across the minor grid axis, the standard
+    k-accumulation pattern).  Padded sample columns are zero in every T AND
+    carry zero projection rows, so they contribute nothing.
+    """
+
+    def kernel(*refs):
+        xs, ts = refs[:n], refs[n: 2 * n]
+        p_ref, o_ref = refs[2 * n], refs[2 * n + 1]
+        v = jnp.dot(xs[0][...], ts[0][...], preferred_element_type=acc_dt)
+        for x_ref, t_ref in zip(xs[1:], ts[1:]):
+            v = v * jnp.dot(x_ref[...], t_ref[...], preferred_element_type=acc_dt)
+        part = jnp.dot(v, p_ref[...], preferred_element_type=acc_dt)
+        g = pl.program_id(1)
+
+        @pl.when(g == 0)
+        def _init():
+            o_ref[...] = part
+
+        @pl.when(g != 0)
+        def _accumulate():
+            o_ref[...] = o_ref[...] + part
+
+    return kernel
+
+
+def _pad_axis(a: np.ndarray, axis: int, to: int) -> np.ndarray:
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, to - a.shape[axis])
+    return np.pad(a, pad)
+
+
+@lru_cache(maxsize=None)
+def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
+                  block_b: int, block_g: int, interpret: bool, f64: bool):
+    """A cached, custom-VJP'd row-level chain runner for one static config.
+
+    Takes the tuple of row-flattened operands ([Bp, d_i], already padded to a
+    multiple of ``block_b``) and returns [Bp, dout] — ONE `pallas_call`.
+    The VJP reuses the same collocation matrices in plain jnp (dV_i =
+    (dout @ P^T) * prod_{j != i} V_j; dx_i = dV_i @ T_i^T), so the kernel
+    backend is grad-capable while the forward stays a single kernel.
+    """
+    from repro.core.constants import chain_matrices
+
+    acc_dt = jnp.float64 if f64 else jnp.float32
+    np_dt = "float64" if f64 else "float32"
+    Ts, P = chain_matrices(Ls, Lout, entries, out_entry, dtype=np_dt)
+    G = Ts[0].shape[1]
+    Gp = -(-G // block_g) * block_g  # zero-pad: inert sample columns/rows
+    Ts = tuple(_pad_axis(T, 1, Gp) for T in Ts)
+    P = _pad_axis(P, 0, Gp)
+    dout = P.shape[1]
+    n = len(Ls)
+    kernel = _make_chain_kernel(n, acc_dt)
+
+    def _call(arrs):
+        Bp = arrs[0].shape[0]
+        d_in = [T.shape[0] for T in Ts]
+        in_specs = (
+            [pl.BlockSpec((block_b, d), lambda i, g: (i, 0)) for d in d_in]
+            + [pl.BlockSpec((d, block_g), lambda i, g: (0, g)) for d in d_in]
+            + [pl.BlockSpec((block_g, dout), lambda i, g: (g, 0))]
+        )
+        return pl.pallas_call(
+            kernel,
+            grid=(Bp // block_b, Gp // block_g),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_b, dout), lambda i, g: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((Bp, dout), acc_dt),
+            interpret=interpret,
+        )(*arrs, *(jnp.asarray(T) for T in Ts), jnp.asarray(P))
+
+    @jax.custom_vjp
+    def run(arrs):
+        return _call(arrs)
+
+    def fwd(arrs):
+        return _call(arrs), arrs
+
+    def bwd(arrs, dout_bar):
+        Tj = [jnp.asarray(T) for T in Ts]
+        Vs = [a.astype(acc_dt) @ T for a, T in zip(arrs, Tj)]
+        U = dout_bar.astype(acc_dt) @ jnp.asarray(P).T
+        grads = []
+        for i in range(n):
+            dV = U
+            for j in range(n):
+                if j != i:
+                    dV = dV * Vs[j]
+            grads.append((dV @ Tj[i].T).astype(arrs[i].dtype))
+        return (tuple(grads),)
+
+    run.defvjp(fwd, bwd)
+    return run, dout
+
+
+def _chain_prepare(xs, Ls, entries):
+    """Broadcast/flatten chain operands to row layout [B, d_i].
+
+    'grid' entries arrive as complex half grids [..., 2L+1, L+1] and stack
+    into real vectors [..., 2*(2L+1)*(L+1)] = [Re F; Im F].
+    """
+    flat = []
+    for x, L, e in zip(xs, Ls, entries):
+        if e == "grid":
+            lead = x.shape[:-2]
+            F = x.reshape(*lead, -1)
+            x = jnp.concatenate([F.real, F.imag], axis=-1)
+        flat.append(x)
+    lead = jnp.broadcast_shapes(*[a.shape[:-1] for a in flat])
+    B = int(np.prod(lead)) if lead else 1
+    flat = [jnp.broadcast_to(a, lead + a.shape[-1:]).reshape(B, a.shape[-1])
+            for a in flat]
+    return flat, lead, B
+
+
+def _chain_finish(out, lead, Lout: int, out_entry: str):
+    if out_entry == "grid":
+        half = out.shape[-1] // 2
+        F = jax.lax.complex(out[..., :half], out[..., half:])
+        return F.reshape(*lead, 2 * Lout + 1, Lout + 1)
+    return out.reshape(*lead, out.shape[-1])
+
+
+def gaunt_chain_fused_pallas(
+    xs,
+    Ls,
+    Lout: int | None = None,
+    *,
+    entries: tuple | None = None,
+    out_entry: str = "sh",
+    block_b: int = 256,
+    block_g: int = 512,
+    interpret: bool | None = None,
+):
+    """n-way fused chain Gaunt product — ONE `pallas_call`.
+
+    xs      : per-operand arrays; entry 'sh' is packed SH [..., (L_i+1)^2],
+              entry 'grid' is the Fourier-resident half grid
+              [..., 2L_i+1, L_i+1] (complex — it enters the kernel as its
+              real-stacked form and skips the SH sampling matmul).
+    Lout    : exit degree (default sum(Ls)); out_entry 'sh' returns packed SH
+              [..., (Lout+1)^2], 'grid' the resident half product grid.
+    block_b : row-block size; block_g: sample-axis block (multiple of 128)
+              — large product grids accumulate across grid blocks in VMEM.
+
+    Runs in float32 (float64 under x64 when any input is f64 — interpret
+    mode only; TPUs have no f64).  Differentiable via the collocation VJP.
+    """
+    Ls = tuple(int(L) for L in Ls)
+    Lout = sum(Ls) if Lout is None else int(Lout)
+    entries = ("sh",) * len(Ls) if entries is None else tuple(entries)
+    if len(xs) != len(Ls) or len(entries) != len(Ls):
+        raise ValueError(f"chain kernel got {len(xs)} operands / "
+                         f"{len(entries)} entries for degrees {Ls}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    f64 = any(jnp.result_type(x) in (jnp.float64, jnp.complex128) for x in xs) \
+        and jax.config.jax_enable_x64
+    if f64:
+        interpret = True  # f64 is interpret-only: no accelerator lowers it
+    flat, lead, B = _chain_prepare(xs, Ls, entries)
+    # clamp the row block to the batch, quantized to powers of two: tiny
+    # batches avoid 50x zero-row padding, while the quantization bounds the
+    # per-config `_chain_runner` cache at ~6 entries (8..block_b) even for
+    # callers with ragged eager batch sizes
+    eff_b = 8
+    while eff_b < min(block_b, B):
+        eff_b *= 2
+    block_b = min(block_b, eff_b)
+    block_g = max(128, (block_g // 128) * 128)
+    run, dout = _chain_runner(Ls, Lout, entries, out_entry, block_b, block_g,
+                              bool(interpret), f64)
+    _STATS["chain_pallas_calls"] += 1
+    Bp = -(-B // block_b) * block_b
+    acc_dt = jnp.float64 if f64 else jnp.float32
+    flat = [jnp.zeros((Bp, a.shape[-1]), acc_dt).at[:B].set(a.astype(acc_dt))
+            for a in flat]
+    out = run(tuple(flat))[:B]
+    return _chain_finish(out, lead, sum(Ls), out_entry)
+
+
+def gaunt_chain_fused_xla(
+    xs,
+    Ls,
+    Lout: int | None = None,
+    *,
+    entries: tuple | None = None,
+    out_entry: str = "sh",
+):
+    """The chain collocation math as plain jnp (XLA) — the same matrices,
+    no Pallas.  Grad/vmap/dtype support come for free; off-TPU this is the
+    fast realization of the chain kernel (interpret mode never is)."""
+    from repro.core.constants import chain_matrices
+
+    Ls = tuple(int(L) for L in Ls)
+    Lout = sum(Ls) if Lout is None else int(Lout)
+    entries = ("sh",) * len(Ls) if entries is None else tuple(entries)
+    f64 = any(jnp.result_type(x) in (jnp.float64, jnp.complex128) for x in xs) \
+        and jax.config.jax_enable_x64
+    acc_dt = jnp.float64 if f64 else jnp.float32
+    Ts, P = chain_matrices(Ls, Lout, entries, out_entry,
+                           dtype="float64" if f64 else "float32")
+    flat, lead, B = _chain_prepare(xs, Ls, entries)
+    v = flat[0].astype(acc_dt) @ jnp.asarray(Ts[0])
+    for a, T in zip(flat[1:], Ts[1:]):
+        v = v * (a.astype(acc_dt) @ jnp.asarray(T))
+    out = v @ jnp.asarray(P)
+    return _chain_finish(out, lead, sum(Ls), out_entry)
 
 
 def gaunt_fused_pallas(
@@ -75,6 +336,7 @@ def gaunt_fused_pallas(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     G = T1.shape[1]
+    _STATS["pairwise_pallas_calls"] += 1
     out = pl.pallas_call(
         _kernel,
         grid=(Bp // block_b,),

@@ -126,16 +126,20 @@ def _tp(cfg: EquivariantConfig, L1, L2, Lout):
 
 
 def _tp_resident(cfg: EquivariantConfig, L1, L2, Lout):
-    """A Fourier-boundary tensor product for a *layer-constant* second
+    """A Fourier-resident tensor product for a *layer-constant* second
     operand (DESIGN.md §6), or None when the config cannot use one.
 
     Returns (to_rep, tp): ``to_rep(filt)`` converts the SH filter to a
     Fourier-resident Rep ONCE; ``tp(x, rep)`` runs the product with the
     filter conversion elided — a stack of n layers over one graph pays 1
-    filter conversion instead of n.  Residency now composes with
-    ``shard_data``: the sharded config routes the same boundary plan through
-    a row-sharded batched bucket (Rep grids shard like SH rows) instead of
-    falling back to per-layer filter conversions.
+    filter conversion instead of n.  The unsharded route is a 2-operand
+    chain plan, so it inherits the engine's chain-backend dispatch
+    (DESIGN.md §6.4): with ``cfg.chain_tune='measure'`` the measured
+    autotuner may collapse the whole product into the collocation kernel
+    (the resident filter then enters as a grid).  Residency composes with
+    ``shard_data``: the sharded config routes the same boundary contract
+    through a row-sharded batched bucket (Rep grids shard like SH rows)
+    instead of falling back to per-layer filter conversions.
     """
     from repro.core import engine as _engine
     from repro.core.rep import Rep
@@ -153,9 +157,24 @@ def _tp_resident(cfg: EquivariantConfig, L1, L2, Lout):
             shard_spec=_engine.ShardSpec(),
         )
         return to_rep, (lambda a, rep: bp.apply([(a, rep)])[0])
-    p = _engine.plan(L1, L2, Lout, kind="pairwise", backend=backend,
-                     options={"boundary": ("sh", "fourier", "sh")})
-    return to_rep, (lambda a, rep: p.apply(a, rep))
+    tune = getattr(cfg, "chain_tune", "heuristic")
+
+    def tp(a, rep):
+        # plan per call so chain_tune='measure' measures on the REAL row
+        # count (n*n*channels, known from the operand here) — plans and
+        # measured selections are engine-cached, so this is lookup-cost
+        # after the first call.  Measurement needs a clean trace: under a
+        # whole-model jit the first trace stays on 'tree' unless the key
+        # was seeded eagerly beforehand (see plan_chain's docstring).
+        hint = int(np.prod(a.shape[:-1])) if tune == "measure" else None
+        cp = _engine.plan_chain((L1, L2), Lout, tune=tune, batch_hint=hint,
+                                entry_hint=("sh", "fourier"))
+        # eager apply (one dispatch per layer, like the historical boundary
+        # plan): the layer loop re-binds a fresh activation every call, and
+        # the trace-time conversion counters stay per-layer-visible
+        return cp.apply([a, rep])
+
+    return to_rep, tp
 
 
 # --------------------------------------------------------------------------
@@ -244,6 +263,7 @@ class MaceGaunt:
                 weights=[jnp.broadcast_to(w, (n, c.channels, c.L + 1))
                          for w in lp["mb_w"]],
                 shard_spec=shard,  # the chain route honors sharding directly
+                tune=getattr(c, "chain_tune", "heuristic"),
             )
             x = x + gate_apply(lp["gate"], equi_linear(lp["mb_mix"], B, c.L), c.L)
         return x[..., 0]  # invariant channels [n, C]
@@ -388,6 +408,10 @@ class SelfmixLayer:
     tp_impl: str = "gaunt"
     resident: bool = True
     shard_spec: object = None
+    # chain-backend policy (DESIGN.md §6.4): 'measure' lets the engine's
+    # measured autotuner collapse the shared-operand chain into the
+    # collocation kernel when that wins on this host
+    tune: str = "heuristic"
 
     def init(self, key):
         k1, k2, k3 = jax.random.split(key, 3)
@@ -403,7 +427,13 @@ class SelfmixLayer:
         if self.tp_impl == "gaunt" and self.resident:
             from repro.core import engine as _engine
 
-            cp = _engine.plan_chain([L, L], Lout=L, shard_spec=self.shard_spec)
+            # under 'measure', mirror the real call in the measurement: the
+            # layer's actual row count and the shared-operand [x, x] pattern
+            hint = (int(np.prod(x.shape[:-1]))
+                    if self.tune == "measure" else None)
+            cp = _engine.plan_chain([L, L], Lout=L, shard_spec=self.shard_spec,
+                                    tune=self.tune, batch_hint=hint,
+                                    share_hint=(0, 0) if hint else None)
             y = cp.apply_jit([x, x], weights=[params["w1"], params["w2"]],
                              w_out=params["w3"][: L + 1])
         elif self.tp_impl in _TP_BACKEND:

@@ -217,7 +217,31 @@ class EquivariantServeEngine:
         + conversion constant behind it) on ghost-only slots, so admission
         latency for the first real request is serving cost only.  The
         compiled step — with its Fourier-resident plans — is what every
-        subsequent relaxation step of every request reuses."""
+        subsequent relaxation step of every request reuses.
+
+        With ``cfg.chain_tune='measure'`` the model's chained products
+        dispatch through the engine's measured chain autotuner (DESIGN.md
+        §6.4) — measurement cannot run inside the step's jit trace, so it is
+        seeded here, outside jit: the many-body selfmix chain key (the only
+        chain a served MaceGaunt plans — its layer-constant edge geometry
+        rides boundary buckets, not chains) is measured once and the traced
+        step then hits the cached selection (possibly the single-dispatch
+        collocation kernel).  Skipped for ``shard_data`` configs: sharded
+        chains pin the 'tree' backend and never consult the measured cache,
+        so seeding would be pure wasted warmup latency."""
+        cfg = getattr(self.model, "cfg", None)
+        if (cfg is not None
+                and getattr(cfg, "chain_tune", "heuristic") == "measure"
+                and not getattr(cfg, "shard_data", False)):
+            from repro.core import engine as _engine
+
+            # mirror the traced call's key exactly: per-slot row count (the
+            # step vmaps over slots, so the chain sees [max_atoms, channels]
+            # leading dims per element) and the selfmix [A]*nu share pattern
+            rows = self.max_atoms * cfg.channels
+            _engine.plan_chain((cfg.L,) * cfg.nu, cfg.L, tune="measure",
+                               batch_hint=rows,
+                               share_hint=(0,) * cfg.nu)
         jax.block_until_ready(self._step_fn(
             self.params, jnp.asarray(self.species), jnp.asarray(self.pos),
             jnp.asarray(self.mask)))

@@ -300,8 +300,9 @@ for mode in ("constraint", "shard_map"):
     np.testing.assert_allclose(np.asarray(g), np.asarray(g0),
                                rtol=1e-3, atol=1e-3)
 
-# ragged rows (7 % 2 != 0): the shard_map chain falls back to the
-# constrained combine instead of crashing inside shard_map
+# ragged rows (7 % 2 != 0): the shard_map chain pads rows to the device
+# count, combines per-shard, and slices back (see also the jaxpr-proven
+# ragged test in test_chain_kernel.py)
 sp = engine.ShardSpec(mesh=mesh, axes=("data",), mode="shard_map")
 cp7 = engine.plan_chain((L, L), 2 * L, shard_spec=sp)
 x7 = jnp.asarray(random_irreps(L, (7,), seed=40))
