@@ -22,6 +22,23 @@ def _rand(shape, seed):
     return jnp.asarray(np.random.default_rng(seed).normal(size=shape), jnp.float32)
 
 
+def _bytes_moved(Ls, Lout, B, dtype: str = "float32") -> int:
+    """Estimated bytes moved by one collocation-style product at ``dtype``
+    storage (DESIGN.md §3.6): operand/output SH rows + sampling/projection
+    constants at storage width, the per-operand sample grids and the product
+    grid at accumulation width (always >= f32).  An analytic traffic model —
+    not a hardware counter — so mixed-precision records report bandwidth
+    *utilization* (bytes/us) on a common scale, not just relative speedup."""
+    sb = {"bfloat16": 2, "float64": 8}.get(dtype, 4)
+    ab = 8 if dtype == "float64" else 4
+    nin = sum(num_coeffs(L) for L in Ls)
+    G = (2 * sum(Ls) + 2) ** 2  # alias-free collocation grid (pre lane-pad)
+    io = B * (nin + num_coeffs(Lout)) * sb          # operand + output rows
+    consts = (nin + num_coeffs(Lout)) * G * sb      # T_i and P matrices
+    grids = B * G * (len(Ls) + 1) * ab              # sampled + product grids
+    return io + consts + grids
+
+
 def _time_many(fns_args, iters: int = 10, warmup: int = 3) -> float:
     """Median microseconds for one sweep over [(fn, args), ...] — the looped
     dispatch pattern plan_batch replaces."""
@@ -85,6 +102,11 @@ def run_batched(backend: str = "auto", csv=True):
 def run(L_list=(1, 2, 3, 4, 6), B_list=(64, 1024), backend: str = "auto", csv=True):
     records = []
     eng = engine.get_engine()
+    # install the host-measured fused cost factor BEFORE recording heuristic
+    # picks: the regret guard bounds the *calibrated* cost model (the one
+    # heuristic-mode plans actually use after calibrate_fused), not the
+    # shipped default factor
+    eng.calibrate_fused()
     for L in L_list:
         for B in B_list:
             x1 = _rand((B, num_coeffs(L)), 0)
@@ -104,8 +126,10 @@ def run(L_list=(1, 2, 3, 4, 6), B_list=(64, 1024), backend: str = "auto", csv=Tr
                 th = time_fn(jax.jit(lambda a, b: ph.apply(a, b)), x1, x2)
                 extra = {"heuristic_us": round(th, 1),
                          "heuristic_ratio": round(th / t, 2)}
+            nb = _bytes_moved((L, L), L, B)
             record(records, f"engine_pairwise_L{L}_B{B}", t, echo=csv,
-                   backend=p.backend, heuristic=heuristic, **extra)
+                   backend=p.backend, heuristic=heuristic,
+                   bytes_moved=nb, gbps=round(nb / t / 1e3, 2), **extra)
         # conv_filter: the message-passing hot path
         B = B_list[-1]
         x = _rand((B, num_coeffs(L)), 2)
@@ -356,7 +380,85 @@ def run_chain_kernel(csv=True):
     return records
 
 
+def run_mixed_precision(csv=True):
+    """bf16 storage vs its f32 sibling, per workload (DESIGN.md §3.6).
+
+    For pairwise and chained workloads this times the SAME op planned at
+    float32 and bfloat16 storage, measures the numerical gap on identical
+    (bf16-quantized) inputs, and reports what ``dtype='auto'`` under the
+    measured autotuner picked for that key family.  The CI guard holds every
+    record to the documented bf16 error budget AND forbids the autotuner
+    from keeping a bf16 plan that *loses* to its f32 sibling — it does NOT
+    require bf16 to win (on hosts emulating bf16, declining is correct).
+    Bytes-moved estimates accompany wall time so the record shows bandwidth
+    utilization, not just speedup.
+    """
+    records = []
+    eng = engine.get_engine()
+
+    def _err(got, ref):
+        got = np.asarray(got, np.float64)
+        ref = np.asarray(ref, np.float64)
+        return float(np.abs(got - ref).max() / max(1.0, np.abs(ref).max()))
+
+    def _time_pair(ff, fb, rounds=3):
+        # the guard consumes the f32/bf16 RATIO, so the two sides must be
+        # timed interleaved: back-to-back rounds with a per-side min discard
+        # slow host drift (throttling late in a CI run) that would skew a
+        # one-shot sequential measurement by 30%+
+        tfs, tbs = [], []
+        for _ in range(rounds):
+            tfs.append(time_fn(ff))
+            tbs.append(time_fn(fb))
+        return min(tfs), min(tbs)
+
+    # ---- pairwise ---------------------------------------------------------
+    for L, B in [(2, 1024), (4, 256), (6, 64)]:
+        x1 = _rand((B, num_coeffs(L)), 0).astype(jnp.bfloat16)
+        x2 = _rand((B, num_coeffs(L)), 1).astype(jnp.bfloat16)
+        x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+        kw = dict(batch_hint=B, requires_grad=False, tune="measure")
+        pf = eng.plan(L, L, L, dtype="float32", **kw)
+        pb = eng.plan(L, L, L, dtype="bfloat16", **kw)
+        pa = eng.plan(L, L, L, dtype="auto", **kw)
+        jf = jax.jit(lambda a, b: pf.apply(a, b))
+        jb = jax.jit(lambda a, b: pb.apply(a, b))
+        tf, tb = _time_pair(lambda: jf(x1f, x2f), lambda: jb(x1, x2))
+        err = _err(pb.apply(x1, x2), pf.apply(x1f, x2f))
+        nb = _bytes_moved((L, L), L, B, "bfloat16")
+        record(records, f"engine_mixed_precision_pairwise_L{L}_B{B}", tb,
+               echo=csv, f32_us=round(tf, 1),
+               speedup_vs_f32=round(tf / tb, 2), err=round(err, 4),
+               auto_dtype=pa.key.dtype, backend=pb.backend,
+               f32_backend=pf.backend,
+               bytes_moved=nb, bytes_moved_f32=_bytes_moved((L, L), L, B),
+               gbps=round(nb / tb / 1e3, 2))
+
+    # ---- chains (fused_xla + fused_pallas interpret are exercised by the
+    # measured pool; the record keeps whatever each precision's winner was) -
+    for Ls, Lout, B in [((2, 2, 2), 2, 256), ((3, 3), 3, 128)]:
+        xs = [_rand((B, num_coeffs(L)), 10 + i).astype(jnp.bfloat16)
+              for i, L in enumerate(Ls)]
+        xsf = [x.astype(jnp.float32) for x in xs]
+        kw = dict(tune="measure", batch_hint=B)
+        cf = eng.plan_chain(Ls, Lout, dtype="float32", **kw)
+        cb = eng.plan_chain(Ls, Lout, dtype="bfloat16", **kw)
+        ca = eng.plan_chain(Ls, Lout, dtype="auto", **kw)
+        tf, tb = _time_pair(lambda: cf.apply_jit(xsf), lambda: cb.apply_jit(xs))
+        err = _err(cb.apply_jit(xs), cf.apply_jit(xsf))
+        nb = _bytes_moved(Ls, Lout, B, "bfloat16")
+        name = f"engine_mixed_precision_chain_L{Ls[0]}x{len(Ls)}_B{B}"
+        record(records, name, tb, echo=csv, f32_us=round(tf, 1),
+               speedup_vs_f32=round(tf / tb, 2), err=round(err, 4),
+               auto_dtype=ca.dtype, backend=cb.backend,
+               f32_backend=cf.backend,
+               bytes_moved=nb, bytes_moved_f32=_bytes_moved(Ls, Lout, B),
+               gbps=round(nb / tb / 1e3, 2))
+    return records
+
+
 if __name__ == "__main__":
     run()
     run_chain()
     run_chain_kernel()
+    run_mixed_precision()

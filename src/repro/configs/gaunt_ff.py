@@ -38,6 +38,14 @@ class EquivariantConfig:
     # 'tree' for its chain keys — run one eager forward (or serve warmup(),
     # which seeds the keys) before jitting to engage the measured picks.
     chain_tune: str = "heuristic"
+    # storage precision for the Gaunt products (DESIGN.md §3.6): the SH
+    # operands/constants of every engine plan the model builds are stored at
+    # this dtype; accumulation and the resident complex grids stay >= f32.
+    # 'float32' (default) | 'bfloat16' | 'auto' ('auto' + chain_tune=
+    # 'measure' lets the engine time both precisions per workload and keep
+    # bf16 only where it wins).  Activations between plans (mixes, gates)
+    # follow the plan output dtype via jnp promotion.
+    compute_dtype: str = "float32"
 
 
 gaunt_mace_ff = EquivariantConfig(

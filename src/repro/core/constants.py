@@ -251,6 +251,12 @@ def chain_matrices(Ls: tuple, Lout: int, entries: tuple = None,
     real-stacked half product grid (requires Lout == sum(Ls)).  When
     ``pad_lanes``, G rounds up to a multiple of 128 (zero sample columns /
     zero projection rows — inert, keeps the TPU MXU lane-aligned).
+
+    ``dtype`` is the *storage* dtype of the returned matrices; 'bfloat16'
+    works through numpy via the ml_dtypes registration that jax ships (the
+    float64 intermediates round once, at the very end).  Mixed-precision
+    callers request T at the storage dtype and P at the accumulation dtype
+    (two cache entries — see kernels/gaunt_fused.py).
     """
     Ls = tuple(int(L) for L in Ls)
     Ltot = sum(Ls)
@@ -277,13 +283,14 @@ def chain_matrices(Ls: tuple, Lout: int, entries: tuple = None,
 
 
 @lru_cache(maxsize=None)
-def fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True):
+def fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True,
+                   dtype: str = "float32"):
     """Pairwise collocation matrices (T1 [d1,G], T2 [d2,G], P [G,dout]) —
-    the n=2 special case of `chain_matrices` (see DESIGN.md §3.4).  The
-    explicit entries/out args match the chain runners' call tuple exactly,
-    so both share ONE cache entry (lru_cache keys on raw arguments)."""
+    the n=2 special case of `chain_matrices` (see DESIGN.md §3.4), at the
+    requested storage dtype (both T and P; mixed-precision callers that
+    want f32 P call `chain_matrices` twice instead)."""
     (T1, T2), P = chain_matrices((L1, L2), Lout, ("sh", "sh"), "sh",
-                                 pad_lanes=pad_lanes)
+                                 pad_lanes=pad_lanes, dtype=dtype)
     return T1, T2, P
 
 

@@ -121,6 +121,14 @@ def _dtype_str(dtype) -> str:
     return s
 
 
+def _acc_dtype_str(storage: str) -> str:
+    """Accumulation dtype for a storage dtype: always >= f32, never below
+    the storage precision — f32 for f32/bf16 storage, f64 for f64 storage.
+    The one place the storage/accumulation split is defined (DESIGN.md §3.6).
+    """
+    return "float64" if storage == "float64" else "float32"
+
+
 def spectral_default(*Ls: int) -> str:
     """The dense-spectral conv crossover (DESIGN.md §3.2): shift-and-add
     'direct' wins on small grids, 'fft' above.  The ONE home of the
@@ -141,6 +149,15 @@ def _wmul(x, w, L: int):
     return x if w is None else x * expand_degree_weights(w, L).astype(x.dtype)
 
 
+def _chain_entry_cast(x, rd):
+    """THE chain-entry dtype rule — one rule for every chain backend, not
+    backend-dependent drift: a non-resident SH operand arriving in a storage
+    dtype other than the plan's is cast ONCE here, at entry.  Fourier-
+    resident operands are untouched (residency is complex and complex has no
+    bf16; the plan's storage dtype re-applies at the SH exit)."""
+    return x if jnp.result_type(x) == jnp.dtype(rd) else x.astype(rd)
+
+
 # --------------------------------------------------------------------------
 # plan keys and backend registry
 # --------------------------------------------------------------------------
@@ -148,7 +165,13 @@ def _wmul(x, w, L: int):
 
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
-    """Identity of a planned Gaunt op (hashable; the plan-cache key)."""
+    """Identity of a planned Gaunt op (hashable; the plan-cache key).
+
+    ``dtype`` is the *storage* dtype — what operands, SH-side constants and
+    outputs are held in ('float32' | 'bfloat16' | 'float64').  The
+    accumulation dtype is derived, never stored: always >= f32
+    (``acc_dtype``), so a bf16 key means bf16 bytes moved with f32 math.
+    """
 
     L1: int
     L2: int
@@ -160,8 +183,17 @@ class PlanKey:
     # manybody carries ("Ls", (...)); packed carries ("conv", "fft"|"direct").
     extra: tuple = ()
 
+    @property
+    def acc_dtype(self) -> str:
+        return _acc_dtype_str(self.dtype)
+
     def opt(self, name: str, default=None):
         return dict(self.extra).get(name, default)
+
+    def with_dtype(self, dtype: str) -> "PlanKey":
+        """The same op at a different storage dtype — the 'key family' the
+        precision-aware autotuner walks (f32 <-> bf16 siblings)."""
+        return dataclasses.replace(self, dtype=dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -889,7 +921,9 @@ def _build_chain(Ls: tuple, Lout: int, conversion: str, conv: str,
                 xs[i] = x.data
             groups.setdefault(id(xs[i]), []).append(i)
         for idxs in groups.values():
-            x, L = xs[idxs[0]], Ls[idxs[0]]
+            # entry cast AFTER id-grouping so shared-operand dedup still sees
+            # the caller's buffers (see _chain_entry_cast)
+            x, L = _chain_entry_cast(xs[idxs[0]], rd), Ls[idxs[0]]
             w_ids = {id(ws[i]) for i in idxs}
             if len(idxs) == 1 or len(w_ids) == 1:
                 # one conversion; duplicates (same weights too) share the grid
@@ -979,7 +1013,8 @@ def _build_chain_looped(Ls: tuple, Lout: int, dtype: str,
                 # a resident operand must leave the basis here (lossless at
                 # its own bandlimit) — the looped fold works in SH
                 xs[i] = x.to_sh(rdtype=rd).data if x.is_fourier else x.data
-        acc = _wmul(xs[0].astype(rd), ws[0], Ls[0])
+            xs[i] = _chain_entry_cast(xs[i], rd)
+        acc = _wmul(xs[0], ws[0], Ls[0])
         La = Ls[0]
         for i, (x, L) in enumerate(zip(xs[1:], Ls[1:]), start=1):
             Lt = Lout if i == len(Ls) - 1 else La + L
@@ -1005,11 +1040,14 @@ def _build_chain_fused(Ls: tuple, Lout: int, dtype: str,
 
     rd = _RDTYPE[dtype]
     Ltot = sum(Ls)
-    # warm the all-SH matrices at build time with the EXACT argument tuple
+    # warm the all-SH matrices at build time with the EXACT argument tuples
     # the runners use (lru_cache keys on raw args, so entries=None would
-    # warm a duplicate); resident-entry variants build lazily on first use
-    _c.chain_matrices(tuple(Ls), Lout, ("sh",) * len(Ls), "sh",
-                      dtype=dtype if dtype == "float64" else "float32")
+    # warm a duplicate); resident-entry variants build lazily on first use.
+    # Mixed precision requests TWO sets: T at storage dtype, P at acc dtype.
+    _c.chain_matrices(tuple(Ls), Lout, ("sh",) * len(Ls), "sh", dtype=dtype)
+    if dtype != _acc_dtype_str(dtype):
+        _c.chain_matrices(tuple(Ls), Lout, ("sh",) * len(Ls), "sh",
+                          dtype=_acc_dtype_str(dtype))
 
     def apply(xs, weights=None, w_out=None, out_basis: str = "sh"):
         from repro.kernels.gaunt_fused import (gaunt_chain_fused_pallas,
@@ -1038,7 +1076,7 @@ def _build_chain_fused(Ls: tuple, Lout: int, dtype: str,
                 if isinstance(x, Rep):
                     x = x.data
                 entries.append("sh")
-                arrs.append(_wmul(x, ws[i], Ls[i]))
+                arrs.append(_wmul(_chain_entry_cast(x, rd), ws[i], Ls[i]))
         if out_basis == "fourier":
             if w_out is not None:
                 raise ValueError("w_out applies in SH; project first")
@@ -1048,7 +1086,8 @@ def _build_chain_fused(Ls: tuple, Lout: int, dtype: str,
                                  "project to SH")
         fn = gaunt_chain_fused_pallas if pallas else gaunt_chain_fused_xla
         out = fn(arrs, Ls, Lout, entries=tuple(entries),
-                 out_entry="grid" if out_basis == "fourier" else "sh")
+                 out_entry="grid" if out_basis == "fourier" else "sh",
+                 dtype=dtype)
         if out_basis == "fourier":
             from .rep import Rep as _Rep
 
@@ -1097,7 +1136,27 @@ _INTERPRET_PENALTY = 1e4   # Pallas interpret mode off-TPU is not a real option
 # `GauntEngine.calibrate_fused()` replaces it with a value measured on THIS
 # host/backend (benchmarks run it and record the result in BENCH_gaunt.json),
 # so heuristic-mode plans stop inheriting another machine's constant.
-_CALIB = {"fused_skinny": 4.0, "fused_skinny_measured": False}
+#
+# Calibration is keyed BY STORAGE DTYPE: bf16 skinny matmuls have a different
+# matmul/bandwidth ratio than f32 (half the bytes, same MXU issue), so one
+# dtype-agnostic factor would skew the other precisions' rankings.  The bare
+# 'fused_skinny' key is the float32 entry (back-compat); other dtypes live at
+# 'fused_skinny:<dtype>' and inherit the float32 value until measured
+# (``None`` = inherit).
+_CALIB = {
+    "fused_skinny": 4.0, "fused_skinny_measured": False,
+    "fused_skinny:bfloat16": None, "fused_skinny:bfloat16_measured": False,
+    "fused_skinny:float64": None, "fused_skinny:float64_measured": False,
+}
+
+
+def _calib_key(dtype: str) -> str:
+    return "fused_skinny" if dtype == "float32" else f"fused_skinny:{dtype}"
+
+
+def _calib_factor(dtype: str) -> float:
+    v = _CALIB.get(_calib_key(dtype))
+    return _CALIB["fused_skinny"] if v is None else v
 
 
 def get_calibration() -> dict:
@@ -1106,7 +1165,11 @@ def get_calibration() -> dict:
 
 
 def set_calibration(**kw) -> None:
-    """Override calibration constants (tests / cross-host replay)."""
+    """Override calibration constants (tests / cross-host replay).
+
+    Per-dtype entries use the key 'fused_skinny:<dtype>' — pass them via
+    dict-splat (the ':' is not a valid identifier character).
+    """
     unknown = set(kw) - set(_CALIB)
     if unknown:
         raise ValueError(f"unknown calibration constants {sorted(unknown)}")
@@ -1203,10 +1266,10 @@ def _cost_fused(key: PlanKey, pallas: bool) -> float:
     B, d1, d2, do, n1, n2, N = _dims(key)
     Nf = 2 * (key.L1 + key.L2) + 2
     G = ((Nf * Nf + 127) // 128) * 128
-    # the skinny-matmul factor is a *measured* calibration constant
-    # (GauntEngine.calibrate_fused, recorded in BENCH_gaunt.json); 4.0 is
-    # only the never-calibrated default
-    f = _CALIB["fused_skinny"]
+    # the skinny-matmul factor is a *measured*, per-dtype calibration
+    # constant (GauntEngine.calibrate_fused, recorded in BENCH_gaunt.json);
+    # 4.0 is only the never-calibrated default
+    f = _calib_factor(key.dtype)
     c = f * B * G * (d1 + d2 + do) + _OVERHEAD * 4
     if key.kind == "channel_mix":
         c = 4.0 * f * B * G * (d1 + d2 + do) + _OVERHEAD * 4
@@ -1232,7 +1295,11 @@ def _cost_escn(key: PlanKey) -> float:
 
 
 def _build_dense_einsum(key: PlanKey) -> Callable:
-    gd = "float64" if key.dtype == "float64" else "float32"
+    # the Gaunt tensor G and operand copies live at the STORAGE dtype (bf16
+    # keys move half the bytes); the einsum contractions accumulate at the
+    # derived >= f32 accumulation dtype via ``preferred_element_type``
+    gd = key.dtype if key.dtype == "bfloat16" else key.acc_dtype
+    acc = jnp.dtype(key.acc_dtype)
     rd = _RDTYPE[key.dtype]
     if key.kind == "channel_mix":
         G = constants.gaunt_dense(key.L1, key.L2, key.Lout, gd)
@@ -1241,7 +1308,8 @@ def _build_dense_einsum(key: PlanKey) -> Callable:
             Gj = jnp.asarray(G)
             out = jnp.einsum("...ci,...dj,ijk,cde->...ek",
                              x1.astype(Gj.dtype), x2.astype(Gj.dtype), Gj,
-                             w_mix.astype(Gj.dtype))
+                             w_mix.astype(Gj.dtype),
+                             preferred_element_type=acc)
             return out.astype(rd)
 
         return apply_mix
@@ -1252,15 +1320,16 @@ def _build_dense_einsum(key: PlanKey) -> Callable:
             xs = list(xs)
             if weights is not None:
                 xs = [_wmul(x, w, L) for x, w, L in zip(xs, weights, Ls)]
-            acc, La = xs[0], Ls[0]
+            acc_x, La = xs[0], Ls[0]
             for i, (x, L) in enumerate(zip(xs[1:], Ls[1:])):
                 last = i == len(Ls) - 2
                 Lt = key.Lout if last else La + L
                 G = jnp.asarray(constants.gaunt_dense(La, L, Lt, gd))
-                acc = jnp.einsum("...i,...j,ijk->...k",
-                                 acc.astype(G.dtype), x.astype(G.dtype), G)
+                acc_x = jnp.einsum("...i,...j,ijk->...k",
+                                   acc_x.astype(G.dtype), x.astype(G.dtype), G,
+                                   preferred_element_type=acc)
                 La += L
-            return acc.astype(rd)
+            return acc_x.astype(rd)
 
         return apply_mb
     G = constants.gaunt_dense(key.L1, key.L2, key.Lout, gd)
@@ -1269,7 +1338,8 @@ def _build_dense_einsum(key: PlanKey) -> Callable:
         Gj = jnp.asarray(G)
         x1 = _wmul(x1, w1, key.L1).astype(Gj.dtype)
         x2 = _wmul(x2, w2, key.L2).astype(Gj.dtype)
-        out = jnp.einsum("...i,...j,ijk->...k", x1, x2, Gj)
+        out = jnp.einsum("...i,...j,ijk->...k", x1, x2, Gj,
+                         preferred_element_type=acc)
         return _wmul(out.astype(rd), w3, key.Lout)
 
     return apply_pair
@@ -1357,29 +1427,37 @@ def _build_spectral(key: PlanKey, conversion: str, conv: str) -> Callable:
 
 
 def _build_fused(key: PlanKey, pallas: bool) -> Callable:
+    # storage discipline (DESIGN.md §3.6): operands and the sampling matrices
+    # T1/T2 at key.dtype, f32 MXU accumulation, f32 projection matrix P
     rd = _RDTYPE[key.dtype]
-    T1, T2, P = constants.fused_matrices(key.L1, key.L2, key.Lout)
+    sd = jnp.dtype(key.dtype)
+    acc = jnp.float32  # fused backends are f32/bf16-storage only
+    (T1, T2), _ = constants.chain_matrices(
+        (key.L1, key.L2), key.Lout, ("sh", "sh"), "sh", dtype=key.dtype)
+    _, P = constants.chain_matrices(
+        (key.L1, key.L2), key.Lout, ("sh", "sh"), "sh", dtype="float32")
 
     if key.kind == "channel_mix":
 
         def apply_mix(x1, x2, w_mix):
             T1j, T2j, Pj = jnp.asarray(T1), jnp.asarray(T2), jnp.asarray(P)
-            V1 = x1.astype(jnp.float32) @ T1j  # [..., C1, G]
-            V2 = x2.astype(jnp.float32) @ T2j  # [..., C2, G]
+            V1 = jnp.dot(x1.astype(sd), T1j, preferred_element_type=acc)  # [..., C1, G]
+            V2 = jnp.dot(x2.astype(sd), T2j, preferred_element_type=acc)  # [..., C2, G]
             V = jnp.einsum("...cg,...dg,cde->...eg", V1, V2, w_mix.astype(V1.dtype))
             return (V @ Pj).astype(rd)
 
         return apply_mix
 
     if pallas:
-        block_b = key.opt("block_b", 256)
+        block_b = key.opt("block_b")  # None -> the kernel's per-dtype default
 
         def apply_pair(x1, x2, w1=None, w2=None, w3=None):
             from repro.kernels.gaunt_fused import gaunt_fused_pallas  # lazy: kernels import core
 
             x1 = _wmul(x1, w1, key.L1)
             x2 = _wmul(x2, w2, key.L2)
-            out = gaunt_fused_pallas(x1, x2, key.L1, key.L2, key.Lout, block_b=block_b)
+            out = gaunt_fused_pallas(x1, x2, key.L1, key.L2, key.Lout,
+                                     block_b=block_b, dtype=key.dtype)
             return _wmul(out.astype(rd), w3, key.Lout)
 
         return apply_pair
@@ -1388,8 +1466,8 @@ def _build_fused(key: PlanKey, pallas: bool) -> Callable:
         T1j, T2j, Pj = jnp.asarray(T1), jnp.asarray(T2), jnp.asarray(P)
         x1 = _wmul(x1, w1, key.L1)
         x2 = _wmul(x2, w2, key.L2)
-        v1 = x1.astype(jnp.float32) @ T1j
-        v2 = x2.astype(jnp.float32) @ T2j
+        v1 = jnp.dot(x1.astype(sd), T1j, preferred_element_type=acc)
+        v2 = jnp.dot(x2.astype(sd), T2j, preferred_element_type=acc)
         out = ((v1 * v2) @ Pj).astype(rd)
         return _wmul(out, w3, key.Lout)
 
@@ -1537,6 +1615,9 @@ class GauntEngine:
         self._batched: dict[tuple, BatchedGauntPlan] = {}
         self._chains: dict[tuple, ChainPlan] = {}
         self._measured: dict[PlanKey, str] = {}
+        # best measured wall time per key — lets dtype='auto' compare a key's
+        # f32/bf16 siblings (one key family) without re-timing either
+        self._measured_t: dict[PlanKey, float] = {}
 
     # -- public API --------------------------------------------------------
 
@@ -1550,6 +1631,8 @@ class GauntEngine:
 
         kind='manybody' takes ``Ls`` (per-operand degrees) instead of L1/L2.
         ``tune`` is 'heuristic' (cost model) or 'measure' (timed autotune).
+        ``dtype`` is the storage dtype; 'auto' (with tune='measure') times
+        the f32 and bf16 siblings and keeps bf16 only where it wins.
         """
         if kind not in KINDS:
             raise ValueError(f"unknown kind {kind!r} (expected one of {KINDS})")
@@ -1592,7 +1675,13 @@ class GauntEngine:
             raise ValueError("a Fourier-boundary output keeps the full product "
                              f"grid (L={L1 + L2}); plan with Lout={L1 + L2} and "
                              "project at the chain exit")
-        key = PlanKey(L1, L2, Lout, kind, batch_hint, _dtype_str(dtype), extra)
+        if isinstance(dtype, str) and dtype == "auto":
+            dts = self._select_dtype(
+                lambda d: PlanKey(L1, L2, Lout, kind, batch_hint, d, extra),
+                tune=tune, requires_grad=requires_grad)
+        else:
+            dts = _dtype_str(dtype)
+        key = PlanKey(L1, L2, Lout, kind, batch_hint, dts, extra)
         cache_key = (key, backend, tune, requires_grad)
         hit = self._plans.get(cache_key)
         if hit is not None:
@@ -1653,7 +1742,10 @@ class GauntEngine:
         norm = tuple(norm)
         if not norm:
             raise ValueError("plan_batch needs at least one item")
-        dts = _dtype_str(dtype)
+        # buckets key on the STORAGE dtype; 'auto' flows through to each
+        # bucket's inner plan(), which resolves it per degree-signature
+        dts = "auto" if (isinstance(dtype, str) and dtype == "auto") \
+            else _dtype_str(dtype)
         mesh, dp = (None, ()) if shard_spec is None else shard_spec.resolve()
         g = max(1, int(pad_to or 1))
         if mesh is not None and dp:
@@ -1751,6 +1843,12 @@ class GauntEngine:
         tree=True combines grids divide-and-conquer (the paper's many-body
         parallelization); False is the sequential left fold.
 
+        dtype: the STORAGE dtype ('float32' | 'bfloat16' | 'float64';
+        accumulation is always >= f32).  'auto' (with tune='measure') times
+        the f32 and bf16 siblings of the measured key family and keeps bf16
+        only where it actually wins; anywhere measurement cannot run it
+        resolves to float32.
+
         donate=True donates the unique operand buffers through ``apply_jit``
         (callers must not reuse them); ``shard_spec`` runs the chain
         row-sharded over the mesh's data axes (see :class:`ShardSpec`) —
@@ -1782,7 +1880,6 @@ class GauntEngine:
                 conv = spectral_default(*Ls)
         if conv == "rfft" and conversion != "half":
             raise ValueError("conv='rfft' operates on half grids (conversion='half')")
-        dts = _dtype_str(dtype)
         mesh, dp = (None, ()) if shard_spec is None else shard_spec.resolve()
         mode = shard_spec.mode if shard_spec is not None else "constraint"
         if backend is not None and backend not in CHAIN_BACKENDS:
@@ -1801,6 +1898,13 @@ class GauntEngine:
             if len(share_hint) != len(Ls):
                 raise ValueError(f"share_hint must have {len(Ls)} group "
                                  f"indices, got {share_hint!r}")
+        if isinstance(dtype, str) and dtype == "auto":
+            dts = self._select_chain_dtype(
+                Ls, Lout, batch_hint, sharded=bool(mesh is not None and dp),
+                entry_hint=entry_hint, out_hint=out_hint,
+                share_hint=share_hint, tune=tune)
+        else:
+            dts = _dtype_str(dtype)
         if backend is None:
             if pinned_spectral or tune != "measure":
                 backend = "tree"
@@ -1858,17 +1962,10 @@ class GauntEngine:
         """
         if sharded:
             return "tree"  # the only backend with per-shard grid combination
-        if batch_hint is not None:
-            q = 8
-            while q < min(batch_hint, 16384):
-                q *= 2
-            batch_hint = q
-        entries = entry_hint or ("sh",) * len(Ls)
-        share = share_hint or tuple(range(len(Ls)))
-        key = PlanKey(max(Ls), min(Ls), Lout, kind="chain",
-                      batch_hint=batch_hint, dtype=dts,
-                      extra=(("Ls", Ls), ("entries", entries),
-                             ("out", out_hint), ("share", share)))
+        key = self._chain_measure_key(Ls, Lout, dts, batch_hint, entry_hint,
+                                      out_hint, share_hint)
+        batch_hint = key.batch_hint
+        entries, share = key.opt("entries"), key.opt("share")
         hit = self._measured.get(key)
         if hit is not None:
             return hit
@@ -1914,18 +2011,103 @@ class GauntEngine:
             if t < best_t:
                 best_name, best_t = name, t
         self._measured[key] = best_name
+        if best_t < float("inf"):
+            self._measured_t[key] = best_t
         return best_name
 
-    def calibrate_fused(self, L: int = 6, B: int = 64) -> dict:
+    @staticmethod
+    def _chain_measure_key(Ls: tuple, Lout: int, dts: str,
+                           batch_hint: int | None, entry_hint: tuple | None,
+                           out_hint: str, share_hint: tuple | None) -> PlanKey:
+        """The measured-autotune cache key for one chain shape.  Keys that
+        differ only in ``dtype`` form one family (``PlanKey.with_dtype``);
+        'auto' is a valid member naming the family's resolved winner."""
+        if batch_hint is not None:
+            q = 8
+            while q < min(batch_hint, 16384):
+                q *= 2
+            batch_hint = q
+        entries = entry_hint or ("sh",) * len(Ls)
+        share = share_hint or tuple(range(len(Ls)))
+        return PlanKey(max(Ls), min(Ls), Lout, kind="chain",
+                       batch_hint=batch_hint, dtype=dts,
+                       extra=(("Ls", Ls), ("entries", entries),
+                              ("out", out_hint), ("share", share)))
+
+    def _select_chain_dtype(self, Ls: tuple, Lout: int,
+                            batch_hint: int | None, sharded: bool,
+                            entry_hint: tuple | None, out_hint: str,
+                            share_hint: tuple | None, tune: str) -> str:
+        """Resolve a chain ``dtype='auto'`` request: measure the f32 and bf16
+        siblings of the key family and keep bf16 only where it actually wins.
+        Falls back to float32 whenever measurement cannot run (heuristic
+        mode, dirty trace, sharded mesh)."""
+        auto_key = self._chain_measure_key(Ls, Lout, "auto", batch_hint,
+                                           entry_hint, out_hint, share_hint)
+        hit = self._measured.get(auto_key)
+        if hit is not None:
+            return hit
+        if sharded or tune != "measure" or not _trace_clean():
+            return "float32"
+        times = {}
+        for dts in ("float32", "bfloat16"):
+            self._select_chain(Ls, Lout, dts, batch_hint, sharded=False,
+                               entry_hint=entry_hint, out_hint=out_hint,
+                               share_hint=share_hint)
+            t = self._measured_t.get(self._chain_measure_key(
+                Ls, Lout, dts, batch_hint, entry_hint, out_hint, share_hint))
+            if t is not None:
+                times[dts] = t
+        winner = "bfloat16" if times.get("bfloat16", float("inf")) < \
+            times.get("float32", float("inf")) else "float32"
+        self._measured[auto_key] = winner
+        return winner
+
+    def _select_dtype(self, make_key: Callable, tune: str,
+                      requires_grad: bool) -> str:
+        """Resolve a plan ``dtype='auto'`` request (pairwise/conv/manybody/
+        channel_mix): time the best backend of each precision sibling under
+        one key family and pick bf16 only where it beats f32.  Heuristic
+        mode or a dirty trace resolves to float32 without measuring."""
+        auto_key = make_key("auto")
+        hit = self._measured.get(auto_key)
+        if hit is not None:
+            return hit
+        if tune != "measure" or not _trace_clean():
+            return "float32"
+        times = {}
+        for dts in ("float32", "bfloat16"):
+            key = make_key(dts)
+            eligible = [b for b in _REGISTRY.values()
+                        if b.eligible(key, requires_grad)]
+            if not eligible:
+                continue
+            name = self._measured.get(key)
+            if name is None:
+                name = self._measure(key, eligible)
+                self._measured[key] = name
+            t = self._measured_t.get(key)
+            if t is not None:
+                times[dts] = t
+        winner = "bfloat16" if times.get("bfloat16", float("inf")) < \
+            times.get("float32", float("inf")) else "float32"
+        self._measured[auto_key] = winner
+        return winner
+
+    def calibrate_fused(self, L: int = 6, B: int = 64,
+                        dtype: str = "float32") -> dict:
         """Measure the fused cost model's skinny-matmul factor on THIS host.
 
         Times the `fused_xla` collocation and the `dense_einsum` baseline on
         one reference pairwise workload, infers the per-MAC cost ratio the
         heuristic needs to rank them consistently with measurement, installs
-        it (`set_calibration(fused_skinny=...)`), and returns the record
-        (benchmarks write it to BENCH_gaunt.json).
+        it under the *per-dtype* calibration key ('fused_skinny' for f32,
+        'fused_skinny:<dtype>' otherwise — bf16's matmul/bandwidth ratio
+        must not skew the f32 ranking and vice versa), and returns the
+        record (benchmarks write it to BENCH_gaunt.json).
         """
-        key = PlanKey(L, L, L, kind="pairwise", batch_hint=B, dtype="float32")
+        dts = _dtype_str(dtype)
+        key = PlanKey(L, L, L, kind="pairwise", batch_hint=B, dtype=dts)
         args = _synthetic_inputs(key)
         times = {}
         for name in ("fused_xla", "dense_einsum"):
@@ -1945,11 +2127,12 @@ class GauntEngine:
         factor = (times["fused_xla"] / macs_fused) / \
             (times["dense_einsum"] / macs_dense)
         factor = float(min(16.0, max(0.25, factor)))
-        set_calibration(fused_skinny=factor, fused_skinny_measured=True)
+        ck = _calib_key(dts)
+        set_calibration(**{ck: factor, ck + "_measured": True})
         return {"factor": round(factor, 3),
                 "fused_xla_us": round(times["fused_xla"] * 1e6, 1),
                 "dense_einsum_us": round(times["dense_einsum"] * 1e6, 1),
-                "L": L, "B": B}
+                "L": L, "B": B, "dtype": dts}
 
     def select(self, key: PlanKey, tune: str = "heuristic",
                requires_grad: bool = True) -> str:
@@ -1974,6 +2157,7 @@ class GauntEngine:
         self._batched.clear()
         self._chains.clear()
         self._measured.clear()
+        self._measured_t.clear()
 
     # -- measured autotune -------------------------------------------------
 
@@ -2001,6 +2185,7 @@ class GauntEngine:
                 best_name, best_t = spec.name, t
         if best_name is None:  # everything failed: fall back to the cost model
             return min(eligible, key=lambda b: b.cost(key)).name
+        self._measured_t[key] = best_t
         return best_name
 
 

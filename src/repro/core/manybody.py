@@ -65,16 +65,23 @@ def _tree_convolve(grids: list, method: str, herm: bool = False):
 
 def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
                            conv: str | None = None, conversion: str | None = None,
-                           cdtype=jnp.complex64, rdtype=jnp.float32,
+                           cdtype=jnp.complex64, rdtype=None,
                            backend: str | None = None, tune: str = "heuristic",
                            donate: bool = False, shard_spec=None,
-                           out_basis: str = "sh"):
+                           out_basis: str = "sh", dtype=None):
     """xs: list of [..., (L_i+1)^2] features (or Fourier-resident ``Rep``s);
     Ls: their max degrees.
 
     weights: optional list of per-degree weights w_i [..., L_i+1] (the paper's
     reparameterized (lm)->l couplings).  Returns [..., (Lout+1)^2], or a
     resident ``Rep`` when ``out_basis='fourier'``.
+
+    dtype: SH *storage* dtype for the plan ('float32' | 'bfloat16' |
+    'float64', or 'auto' to let tune='measure' time both precisions —
+    DESIGN.md §3.6).  Defaults to the dtype implied by ``cdtype`` (float32
+    for complex64).  Accumulation and the resident grids stay >= f32 either
+    way; rdtype=None returns the plan's storage dtype, an explicit rdtype
+    casts the SH output.
 
     Default route: one Fourier-resident chain plan (`engine.plan_chain`) —
     conversion/conv default to the plan's measured auto policy ('half' grids,
@@ -89,6 +96,10 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
     from . import engine as _engine
 
     assert len(xs) == len(Ls) and len(xs) >= 2
+    if dtype is None:
+        dts = _engine._dtype_str(cdtype)
+    else:
+        dts = "auto" if dtype == "auto" else _engine._dtype_str(dtype)
     if backend is None and conversion in (None, "dense", "half"):
         # jit-cached chain dispatch (apply_jit) so eager callers keep one
         # compiled invocation per call, as the batched route gave them.
@@ -121,12 +132,13 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
         else:
             share_hint = None
         cp = _engine.plan_chain(
-            Ls, Lout, conversion=conversion, conv=conv,
-            dtype=_engine._dtype_str(cdtype),
+            Ls, Lout, conversion=conversion, conv=conv, dtype=dts,
             donate=donate, shard_spec=shard_spec, tune=tune, batch_hint=hint,
             entry_hint=entry_hint, out_hint=out_basis, share_hint=share_hint)
         out = cp.apply_jit(list(xs), weights=weights, out_basis=out_basis)
-        return out if out_basis == "fourier" else out.astype(rdtype)
+        if out_basis == "fourier":
+            return out
+        return out if rdtype is None else out.astype(rdtype)
     if out_basis != "sh":
         raise ValueError("out_basis='fourier' requires the chain route "
                          "(no explicit backend/conversion override)")
@@ -145,9 +157,10 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
     item = _engine.BatchItem(Ls=tuple(int(L) for L in Ls), Lout=Lout,
                              options=tuple(sorted((options or {}).items())))
     bp = _engine.plan_batch([item], kind="manybody",
-                            dtype=_engine._dtype_str(cdtype), backend=backend,
+                            dtype=dts, backend=backend,
                             tune=tune, donate=donate, shard_spec=shard_spec)
-    return bp.apply([list(xs)], weights=[weights])[0].astype(rdtype)
+    out = bp.apply([list(xs)], weights=[weights])[0]
+    return out if rdtype is None else out.astype(rdtype)
 
 
 def manybody_selfmix(x, L: int, nu: int, Lout: int | None = None, weights=None, **kw):

@@ -131,12 +131,20 @@ def reset_conversion_stats() -> None:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Rep:
-    """A degree-L equivariant activation tagged with its current basis."""
+    """A degree-L equivariant activation tagged with its current basis.
+
+    ``sdtype`` is the SH-side *storage* dtype tag ('float32' | 'bfloat16' |
+    'float64', or None = untagged -> float32).  Resident grids are complex
+    (complex has no bf16), so the tag is how a bf16 activation remembers its
+    storage precision across a Fourier round trip: ``to_sh()`` with no
+    explicit ``rdtype`` exits at the tagged dtype (DESIGN.md §3.6).
+    """
 
     data: object
     L: int
     basis: str = "sh"
     form: str = "dense"
+    sdtype: str | None = None
 
     def __post_init__(self):
         if self.basis not in ("sh", "fourier"):
@@ -147,7 +155,7 @@ class Rep:
     # -- pytree protocol ---------------------------------------------------
 
     def tree_flatten(self):
-        return (self.data,), (self.L, self.basis, self.form)
+        return (self.data,), (self.L, self.basis, self.form, self.sdtype)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -155,12 +163,17 @@ class Rep:
 
     # -- constructors ------------------------------------------------------
 
+    @staticmethod
+    def _tag(x) -> str | None:
+        name = jnp.result_type(x).name
+        return name if name in ("float32", "bfloat16", "float64") else None
+
     @classmethod
     def from_sh(cls, x, L: int) -> "Rep":
         if jnp.shape(x)[-1] != num_coeffs(L):
             raise ValueError(
                 f"sh data last dim {jnp.shape(x)[-1]} != (L+1)^2 = {num_coeffs(L)}")
-        return cls(x, L, "sh")
+        return cls(x, L, "sh", sdtype=cls._tag(x))
 
     @classmethod
     def from_fourier(cls, F, L: int, form: str = "dense") -> "Rep":
@@ -174,13 +187,16 @@ class Rep:
 
     # -- basis / form changes ---------------------------------------------
 
-    def to_fourier(self, conversion: str = "dense", cdtype=jnp.complex64,
+    def to_fourier(self, conversion: str = "dense", cdtype=None,
                    form: str | None = None) -> "Rep":
         """-> Fourier-resident Rep (a no-op modulo form when already there).
 
         ``conversion`` is the SH->Fourier realization ('dense' | 'packed' |
         'half'); ``form`` fixes the resident storage (defaults to 'half'
-        when conversion='half', else 'dense').
+        when conversion='half', else 'dense').  ``cdtype=None`` derives the
+        grid dtype from the storage tag: float64 -> complex128 (under x64),
+        float32/bfloat16 -> complex64 (complex has no bf16; the tag rides
+        along so a later ``to_sh()`` exits back at bf16).
         """
         from . import gaunt as _g  # lazy: gaunt imports this module
 
@@ -188,23 +204,34 @@ class Rep:
             form = "half" if conversion == "half" else "dense"
         if self.basis == "fourier":
             return self.with_form(form)
+        tag = self.sdtype or self._tag(self.data)
+        if cdtype is None:
+            cdtype = (jnp.complex128
+                      if tag == "float64" and jax.config.jax_enable_x64
+                      else jnp.complex64)
         F = _g.sh_to_fourier(self.data, self.L, conversion, jnp.dtype(cdtype))
         got = "half" if conversion == "half" else "dense"
-        return Rep(F, self.L, "fourier", got).with_form(form)
+        return Rep(F, self.L, "fourier", got, sdtype=tag).with_form(form)
 
-    def to_sh(self, Lout: int | None = None, rdtype=jnp.float32) -> "Rep":
-        """Project to SH degrees <= Lout (default: this Rep's bandlimit)."""
+    def to_sh(self, Lout: int | None = None, rdtype=None) -> "Rep":
+        """Project to SH degrees <= Lout (default: this Rep's bandlimit).
+
+        ``rdtype=None`` exits at the carried storage tag (float32 when
+        untagged), so bf16 activations round-trip residency at bf16 without
+        every call site spelling the dtype.
+        """
         from . import gaunt as _g
 
+        rdt = jnp.dtype((self.sdtype or "float32") if rdtype is None else rdtype)
         Lout = self.L if Lout is None else Lout
         if self.basis == "sh":
             if Lout > self.L:
                 raise ValueError(f"cannot raise SH degree {self.L} -> {Lout}")
             x = self.data if Lout == self.L else self.data[..., : num_coeffs(Lout)]
-            return Rep(x, Lout, "sh")
+            return Rep(x, Lout, "sh", sdtype=self.sdtype)
         conv = "half" if self.form == "half" else "dense"
-        x = _g.fourier_to_sh(self.data, self.L, Lout, conv, rdtype)
-        return Rep(x, Lout, "sh")
+        x = _g.fourier_to_sh(self.data, self.L, Lout, conv, rdt)
+        return Rep(x, Lout, "sh", sdtype=self._tag(x))
 
     def with_form(self, form: str) -> "Rep":
         """Change fourier storage form (Hermitian pack/unpack — no FLOPs)."""
@@ -212,10 +239,10 @@ class Rep:
             return self
         if form == "half":
             return Rep(_fx.pack_hermitian(self.data, self.L), self.L,
-                       "fourier", "half")
+                       "fourier", "half", sdtype=self.sdtype)
         if form == "dense":
             return Rep(_fx.unpack_hermitian(self.data, self.L), self.L,
-                       "fourier", "dense")
+                       "fourier", "dense", sdtype=self.sdtype)
         raise ValueError(f"unknown fourier form {form!r}")
 
     def resize(self, L_new: int) -> "Rep":
@@ -225,7 +252,8 @@ class Rep:
             raise ValueError("resize is a Fourier-grid op; project SH Reps "
                              "with to_sh(Lout) instead")
         fn = _fx.grid_resize_half if self.form == "half" else _fx.grid_resize
-        return Rep(fn(self.data, self.L, L_new), L_new, "fourier", self.form)
+        return Rep(fn(self.data, self.L, L_new), L_new, "fourier", self.form,
+                   sdtype=self.sdtype)
 
     def grid(self, form: str = "dense"):
         """The raw coefficient grid in the requested form (fourier Reps)."""
@@ -240,7 +268,9 @@ class Rep:
         return self.basis == "fourier"
 
     def astype(self, dtype) -> "Rep":
-        return dataclasses.replace(self, data=self.data.astype(dtype))
+        data = self.data.astype(dtype)
+        tag = self._tag(data) if self.basis == "sh" else self.sdtype
+        return dataclasses.replace(self, data=data, sdtype=tag)
 
     def __add__(self, other: "Rep") -> "Rep":
         """Linear combination inside one basis (residuals on residents)."""

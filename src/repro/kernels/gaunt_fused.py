@@ -36,6 +36,14 @@ adjoints: dV_i = (dout @ P^T) * prod_{j!=i} V_j, dx_i = dV_i @ T_i^T, run as
 plain jnp), so chain plans on the kernel backend support grad — unlike the
 historical pairwise `fused_pallas` backend.
 
+Mixed precision (DESIGN.md §3.6): every runner takes a *storage* dtype
+('float32' | 'bfloat16' | 'float64') governing operand and sampling-matrix
+(T_i) storage; the MXU accumulates at >= f32 via ``preferred_element_type``
+and the projection matrix P plus the output stay at the accumulation dtype.
+bf16 halves operand/constant bytes, so the default VMEM blocks
+(`block_b`/`block_g`) double and the row-block floor rises to the bf16
+sublane tile (16 x 128).
+
 ``kernel_stats()`` counts kernel dispatches (ticked once per trace/eager
 call), letting tests *prove* the one-`pallas_call` claim instead of assuming
 it.
@@ -74,7 +82,8 @@ def reset_kernel_stats() -> None:
         _STATS[k] = 0
 
 
-def gaunt_fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True):
+def gaunt_fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True,
+                         dtype: str = "float32"):
     """Numpy (T1 [d1,G], T2 [d2,G], P [G,dout]) — exact.
 
     Back-compat alias: the builder (and its cache) lives in the engine's
@@ -82,7 +91,26 @@ def gaunt_fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True):
     """
     from repro.core.constants import fused_matrices
 
-    return fused_matrices(L1, L2, Lout, pad_lanes)
+    return fused_matrices(L1, L2, Lout, pad_lanes, dtype=dtype)
+
+
+# storage-dtype resolution for every kernel entry point: an explicit request
+# wins; otherwise the operands' jnp promotion decides (bfloat16 only when
+# EVERY operand is bf16 — a mixed bf16/f32 chain promotes to f32 storage),
+# complex residents map to their real width, and float64 storage only exists
+# under x64 (it is interpret-only: no accelerator lowers it).
+def _storage_dtype(xs, dtype) -> str:
+    if dtype is None:
+        rt = jnp.result_type(*xs)
+        name = {"complex64": "float32", "complex128": "float64"}.get(
+            rt.name, rt.name)
+    else:
+        name = dtype if isinstance(dtype, str) else jnp.dtype(dtype).name
+    if name not in ("float32", "bfloat16", "float64"):
+        name = "float32"
+    if name == "float64" and not jax.config.jax_enable_x64:
+        name = "float32"
+    return name
 
 
 def _kernel(x1_ref, x2_ref, t1_ref, t2_ref, p_ref, o_ref):
@@ -130,7 +158,7 @@ def _pad_axis(a: np.ndarray, axis: int, to: int) -> np.ndarray:
 
 @lru_cache(maxsize=None)
 def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
-                  block_b: int, block_g: int, interpret: bool, f64: bool):
+                  block_b: int, block_g: int, interpret: bool, sdt: str):
     """A cached, custom-VJP'd row-level chain runner for one static config.
 
     Takes the tuple of row-flattened operands ([Bp, d_i], already padded to a
@@ -138,12 +166,17 @@ def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
     The VJP reuses the same collocation matrices in plain jnp (dV_i =
     (dout @ P^T) * prod_{j != i} V_j; dx_i = dV_i @ T_i^T), so the kernel
     backend is grad-capable while the forward stays a single kernel.
+
+    ``sdt`` is the storage dtype: operands and sampling matrices T_i live at
+    ``sdt``, every dot accumulates at the >= f32 accumulation dtype, and the
+    projection matrix P plus the output stay at the accumulation dtype.
     """
     from repro.core.constants import chain_matrices
 
-    acc_dt = jnp.float64 if f64 else jnp.float32
-    np_dt = "float64" if f64 else "float32"
-    Ts, P = chain_matrices(Ls, Lout, entries, out_entry, dtype=np_dt)
+    acc_dt = jnp.float64 if sdt == "float64" else jnp.float32
+    acc_np = "float64" if sdt == "float64" else "float32"
+    Ts, _ = chain_matrices(Ls, Lout, entries, out_entry, dtype=sdt)
+    _, P = chain_matrices(Ls, Lout, entries, out_entry, dtype=acc_np)
     G = Ts[0].shape[1]
     Gp = -(-G // block_g) * block_g  # zero-pad: inert sample columns/rows
     Ts = tuple(_pad_axis(T, 1, Gp) for T in Ts)
@@ -177,8 +210,11 @@ def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
         return _call(arrs), arrs
 
     def bwd(arrs, dout_bar):
+        # same storage discipline as the forward: operands and T stay at
+        # ``sdt`` into the MXU, accumulation at acc_dt via preferred dtype
         Tj = [jnp.asarray(T) for T in Ts]
-        Vs = [a.astype(acc_dt) @ T for a, T in zip(arrs, Tj)]
+        Vs = [jnp.dot(a, T, preferred_element_type=acc_dt)
+              for a, T in zip(arrs, Tj)]
         U = dout_bar.astype(acc_dt) @ jnp.asarray(P).T
         grads = []
         for i in range(n):
@@ -186,7 +222,7 @@ def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
             for j in range(n):
                 if j != i:
                     dV = dV * Vs[j]
-            grads.append((dV @ Tj[i].T).astype(arrs[i].dtype))
+            grads.append((dV @ Tj[i].T.astype(acc_dt)).astype(arrs[i].dtype))
         return (tuple(grads),)
 
     run.defvjp(fwd, bwd)
@@ -228,9 +264,10 @@ def gaunt_chain_fused_pallas(
     *,
     entries: tuple | None = None,
     out_entry: str = "sh",
-    block_b: int = 256,
-    block_g: int = 512,
+    block_b: int | None = None,
+    block_g: int | None = None,
     interpret: bool | None = None,
+    dtype: str | None = None,
 ):
     """n-way fused chain Gaunt product — ONE `pallas_call`.
 
@@ -242,9 +279,14 @@ def gaunt_chain_fused_pallas(
               [..., (Lout+1)^2], 'grid' the resident half product grid.
     block_b : row-block size; block_g: sample-axis block (multiple of 128)
               — large product grids accumulate across grid blocks in VMEM.
+              Defaults double under bf16 storage (half the bytes per block).
+    dtype   : storage dtype ('float32'|'bfloat16'|'float64'); None infers
+              from the operands (bf16 only when ALL operands are bf16).
+              Operands are cast to it once at entry; accumulation is always
+              >= f32 and the output comes back at the accumulation dtype.
 
-    Runs in float32 (float64 under x64 when any input is f64 — interpret
-    mode only; TPUs have no f64).  Differentiable via the collocation VJP.
+    float64 storage exists only under x64 and is interpret-only (TPUs have
+    no f64).  Differentiable via the collocation VJP.
     """
     Ls = tuple(int(L) for L in Ls)
     Lout = sum(Ls) if Lout is None else int(Lout)
@@ -254,26 +296,31 @@ def gaunt_chain_fused_pallas(
                          f"{len(entries)} entries for degrees {Ls}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    f64 = any(jnp.result_type(x) in (jnp.float64, jnp.complex128) for x in xs) \
-        and jax.config.jax_enable_x64
-    if f64:
+    sdt = _storage_dtype(xs, dtype)
+    if sdt == "float64":
         interpret = True  # f64 is interpret-only: no accelerator lowers it
+    bf16 = sdt == "bfloat16"
+    if block_b is None:
+        block_b = 512 if bf16 else 256
+    if block_g is None:
+        block_g = 1024 if bf16 else 512
     flat, lead, B = _chain_prepare(xs, Ls, entries)
     # clamp the row block to the batch, quantized to powers of two: tiny
     # batches avoid 50x zero-row padding, while the quantization bounds the
     # per-config `_chain_runner` cache at ~6 entries (8..block_b) even for
-    # callers with ragged eager batch sizes
-    eff_b = 8
+    # callers with ragged eager batch sizes.  bf16 sublane tiles are 16 rows
+    # (f32: 8), so the bf16 floor is one full tile.
+    eff_b = 16 if bf16 else 8
     while eff_b < min(block_b, B):
         eff_b *= 2
     block_b = min(block_b, eff_b)
     block_g = max(128, (block_g // 128) * 128)
     run, dout = _chain_runner(Ls, Lout, entries, out_entry, block_b, block_g,
-                              bool(interpret), f64)
+                              bool(interpret), sdt)
     _STATS["chain_pallas_calls"] += 1
     Bp = -(-B // block_b) * block_b
-    acc_dt = jnp.float64 if f64 else jnp.float32
-    flat = [jnp.zeros((Bp, a.shape[-1]), acc_dt).at[:B].set(a.astype(acc_dt))
+    st_dt = jnp.dtype(sdt)
+    flat = [jnp.zeros((Bp, a.shape[-1]), st_dt).at[:B].set(a.astype(st_dt))
             for a in flat]
     out = run(tuple(flat))[:B]
     return _chain_finish(out, lead, sum(Ls), out_entry)
@@ -286,24 +333,33 @@ def gaunt_chain_fused_xla(
     *,
     entries: tuple | None = None,
     out_entry: str = "sh",
+    dtype: str | None = None,
 ):
     """The chain collocation math as plain jnp (XLA) — the same matrices,
     no Pallas.  Grad/vmap/dtype support come for free; off-TPU this is the
-    fast realization of the chain kernel (interpret mode never is)."""
+    fast realization of the chain kernel (interpret mode never is).
+
+    Same storage rule as the Pallas runner: operands and T_i at the storage
+    dtype, >= f32 accumulation via ``preferred_element_type``, P and the
+    output at the accumulation dtype.
+    """
     from repro.core.constants import chain_matrices
 
     Ls = tuple(int(L) for L in Ls)
     Lout = sum(Ls) if Lout is None else int(Lout)
     entries = ("sh",) * len(Ls) if entries is None else tuple(entries)
-    f64 = any(jnp.result_type(x) in (jnp.float64, jnp.complex128) for x in xs) \
-        and jax.config.jax_enable_x64
-    acc_dt = jnp.float64 if f64 else jnp.float32
-    Ts, P = chain_matrices(Ls, Lout, entries, out_entry,
-                           dtype="float64" if f64 else "float32")
+    sdt = _storage_dtype(xs, dtype)
+    st_dt = jnp.dtype(sdt)
+    acc_dt = jnp.float64 if sdt == "float64" else jnp.float32
+    acc_np = "float64" if sdt == "float64" else "float32"
+    Ts, _ = chain_matrices(Ls, Lout, entries, out_entry, dtype=sdt)
+    _, P = chain_matrices(Ls, Lout, entries, out_entry, dtype=acc_np)
     flat, lead, B = _chain_prepare(xs, Ls, entries)
-    v = flat[0].astype(acc_dt) @ jnp.asarray(Ts[0])
+    v = jnp.dot(flat[0].astype(st_dt), jnp.asarray(Ts[0]),
+                preferred_element_type=acc_dt)
     for a, T in zip(flat[1:], Ts[1:]):
-        v = v * (a.astype(acc_dt) @ jnp.asarray(T))
+        v = v * jnp.dot(a.astype(st_dt), jnp.asarray(T),
+                        preferred_element_type=acc_dt)
     out = v @ jnp.asarray(P)
     return _chain_finish(out, lead, sum(Ls), out_entry)
 
@@ -314,25 +370,38 @@ def gaunt_fused_pallas(
     L1: int,
     L2: int,
     Lout: int | None = None,
-    block_b: int = 256,
+    block_b: int | None = None,
     interpret: bool | None = None,
+    dtype: str | None = None,
 ):
     """Fused Gaunt TP.  x1 [..., d1], x2 [..., d2] -> [..., dout].
 
     Leading dims are flattened into a row-block grid; T1/T2/P stay fully
     VMEM-resident per block (they are tiny: L=8 -> T 81x1156 f32 = 375 KiB).
+
+    ``dtype`` is the storage dtype (operands + T1/T2; None infers from the
+    inputs); the MXU accumulates at f32 and P/the output stay f32.  The
+    default row block doubles under bf16 storage.
     """
-    from repro.core.constants import fused_matrices
+    from repro.core.constants import chain_matrices
     from repro.core.irreps import num_coeffs
 
     Lout = L1 + L2 if Lout is None else Lout
-    T1, T2, P = (jnp.asarray(a) for a in fused_matrices(L1, L2, Lout))
+    sdt = _storage_dtype((x1, x2), dtype)
+    if sdt == "float64":
+        sdt = "float32"  # the pairwise kernel is f32/bf16-storage only
+    st_dt = jnp.dtype(sdt)
+    if block_b is None:
+        block_b = 512 if sdt == "bfloat16" else 256
+    (T1, T2), _ = chain_matrices((L1, L2), Lout, ("sh", "sh"), "sh", dtype=sdt)
+    _, P = chain_matrices((L1, L2), Lout, ("sh", "sh"), "sh", dtype="float32")
+    T1, T2, P = (jnp.asarray(a) for a in (T1, T2, P))
     batch = x1.shape[:-1]
     B = int(np.prod(batch)) if batch else 1
     d1, d2, dout = num_coeffs(L1), num_coeffs(L2), num_coeffs(Lout)
     Bp = ((B + block_b - 1) // block_b) * block_b
-    a1 = jnp.zeros((Bp, d1), x1.dtype).at[:B].set(x1.reshape(B, d1))
-    a2 = jnp.zeros((Bp, d2), x2.dtype).at[:B].set(x2.reshape(B, d2))
+    a1 = jnp.zeros((Bp, d1), st_dt).at[:B].set(x1.reshape(B, d1).astype(st_dt))
+    a2 = jnp.zeros((Bp, d2), st_dt).at[:B].set(x2.reshape(B, d2).astype(st_dt))
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     G = T1.shape[1]

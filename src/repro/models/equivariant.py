@@ -100,6 +100,20 @@ def _resolve_tp_backend(impl: str, L1: int, L2: int):
     return backend
 
 
+def _model_dtype(cfg) -> str:
+    """The config's Gaunt storage dtype ('float32' when absent)."""
+    return getattr(cfg, "compute_dtype", "float32")
+
+
+def _cast_sd(x, dts: str):
+    """Cast an SH operand to the configured storage dtype at the product
+    boundary (the model-side mirror of the engine's chain-entry cast rule).
+    'auto' leaves operands alone — the plan resolves its own dtype."""
+    if dts in ("float32", "bfloat16", "float64") and x.dtype != jnp.dtype(dts):
+        return x.astype(dts)
+    return x
+
+
 def _tp(cfg: EquivariantConfig, L1, L2, Lout):
     """Resolve the configured tensor-product impl to a batched engine plan.
 
@@ -113,15 +127,16 @@ def _tp(cfg: EquivariantConfig, L1, L2, Lout):
     from repro.core import engine as _engine
 
     if cfg.tp_impl in _TP_BACKEND:
+        dts = _model_dtype(cfg)
         # no donation here: model loops reuse operand buffers (edge_sh is
         # shared across layers) — donation is for callers that own the
         # buffer lifetime (e.g. the serving engine)
         bp = _engine.plan_batch(
             [(L1, L2, Lout)], kind="pairwise",
-            backend=_resolve_tp_backend(cfg.tp_impl, L1, L2),
+            backend=_resolve_tp_backend(cfg.tp_impl, L1, L2), dtype=dts,
             shard_spec=_engine.ShardSpec() if getattr(cfg, "shard_data", False) else None,
         )
-        return lambda a, b: bp.apply([(a, b)])[0]
+        return lambda a, b: bp.apply([(_cast_sd(a, dts), _cast_sd(b, dts))])[0]
     return lambda a, b: cg_full_tensor_product(a, b, L1, L2, Lout)
 
 
@@ -148,15 +163,16 @@ def _tp_resident(cfg: EquivariantConfig, L1, L2, Lout):
             or not getattr(cfg, "fourier_resident", True)):
         return None
     backend = _resolve_tp_backend("gaunt", L1, L2)  # spectral: fft | direct
+    dts = _model_dtype(cfg)
     to_rep = lambda filt: Rep.from_sh(filt, L2).to_fourier("dense")  # noqa: E731
     if getattr(cfg, "shard_data", False):
         bp = _engine.plan_batch(
             [_engine.BatchItem(L1=L1, L2=L2, Lout=Lout,
                                options=(("boundary", ("sh", "fourier", "sh")),))],
-            kind="pairwise", backend=backend,
+            kind="pairwise", backend=backend, dtype=dts,
             shard_spec=_engine.ShardSpec(),
         )
-        return to_rep, (lambda a, rep: bp.apply([(a, rep)])[0])
+        return to_rep, (lambda a, rep: bp.apply([(_cast_sd(a, dts), rep)])[0])
     tune = getattr(cfg, "chain_tune", "heuristic")
 
     def tp(a, rep):
@@ -168,7 +184,7 @@ def _tp_resident(cfg: EquivariantConfig, L1, L2, Lout):
         # was seeded eagerly beforehand (see plan_chain's docstring).
         hint = int(np.prod(a.shape[:-1])) if tune == "measure" else None
         cp = _engine.plan_chain((L1, L2), Lout, tune=tune, batch_hint=hint,
-                                entry_hint=("sh", "fourier"))
+                                entry_hint=("sh", "fourier"), dtype=dts)
         # eager apply (one dispatch per layer, like the historical boundary
         # plan): the layer loop re-binds a fresh activation every call, and
         # the trace-time conversion counters stay per-layer-visible
@@ -264,6 +280,7 @@ class MaceGaunt:
                          for w in lp["mb_w"]],
                 shard_spec=shard,  # the chain route honors sharding directly
                 tune=getattr(c, "chain_tune", "heuristic"),
+                dtype=_model_dtype(c),  # storage precision (chain-entry cast)
             )
             x = x + gate_apply(lp["gate"], equi_linear(lp["mb_mix"], B, c.L), c.L)
         return x[..., 0]  # invariant channels [n, C]
@@ -412,6 +429,8 @@ class SelfmixLayer:
     # measured autotuner collapse the shared-operand chain into the
     # collocation kernel when that wins on this host
     tune: str = "heuristic"
+    # Gaunt storage precision ('float32' | 'bfloat16' | 'auto', §3.6)
+    compute_dtype: str = "float32"
 
     def init(self, key):
         k1, k2, k3 = jax.random.split(key, 3)
@@ -433,16 +452,19 @@ class SelfmixLayer:
                     if self.tune == "measure" else None)
             cp = _engine.plan_chain([L, L], Lout=L, shard_spec=self.shard_spec,
                                     tune=self.tune, batch_hint=hint,
-                                    share_hint=(0, 0) if hint else None)
+                                    share_hint=(0, 0) if hint else None,
+                                    dtype=self.compute_dtype)
             y = cp.apply_jit([x, x], weights=[params["w1"], params["w2"]],
                              w_out=params["w3"][: L + 1])
         elif self.tp_impl in _TP_BACKEND:
             from repro.core import engine as _engine
 
+            xd = _cast_sd(x, self.compute_dtype)
             bp = _engine.plan_batch([(L, L, L)], kind="pairwise",
                                     backend=_resolve_tp_backend(self.tp_impl, L, L),
-                                    shard_spec=self.shard_spec)
-            y = bp.apply([(x, x)],
+                                    shard_spec=self.shard_spec,
+                                    dtype=self.compute_dtype)
+            y = bp.apply([(xd, xd)],
                          weights=[(params["w1"], params["w2"],
                                    params["w3"][: L + 1])])[0]
         else:  # cg baseline

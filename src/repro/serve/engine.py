@@ -226,9 +226,14 @@ class EquivariantServeEngine:
         chain a served MaceGaunt plans — its layer-constant edge geometry
         rides boundary buckets, not chains) is measured once and the traced
         step then hits the cached selection (possibly the single-dispatch
-        collocation kernel).  Skipped for ``shard_data`` configs: sharded
-        chains pin the 'tree' backend and never consult the measured cache,
-        so seeding would be pure wasted warmup latency."""
+        collocation kernel).  Both storage precisions are pre-measured
+        (DESIGN.md §3.6): the config's ``compute_dtype`` AND its float32
+        sibling — for ``compute_dtype='auto'`` the auto key itself times
+        both and caches the winner — so the traced step hits a warm
+        precision selection, never a mid-serve timing pass.  Skipped for
+        ``shard_data`` configs: sharded chains pin the 'tree' backend and
+        never consult the measured cache, so seeding would be pure wasted
+        warmup latency."""
         cfg = getattr(self.model, "cfg", None)
         if (cfg is not None
                 and getattr(cfg, "chain_tune", "heuristic") == "measure"
@@ -239,9 +244,12 @@ class EquivariantServeEngine:
             # step vmaps over slots, so the chain sees [max_atoms, channels]
             # leading dims per element) and the selfmix [A]*nu share pattern
             rows = self.max_atoms * cfg.channels
-            _engine.plan_chain((cfg.L,) * cfg.nu, cfg.L, tune="measure",
-                               batch_hint=rows,
-                               share_hint=(0,) * cfg.nu)
+            dts = getattr(cfg, "compute_dtype", "float32")
+            for d in dict.fromkeys(["float32", dts] if dts != "auto"
+                                   else ["auto"]):
+                _engine.plan_chain((cfg.L,) * cfg.nu, cfg.L, tune="measure",
+                                   batch_hint=rows,
+                                   share_hint=(0,) * cfg.nu, dtype=d)
         jax.block_until_ready(self._step_fn(
             self.params, jnp.asarray(self.species), jnp.asarray(self.pos),
             jnp.asarray(self.mask)))

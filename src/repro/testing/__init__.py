@@ -1,5 +1,6 @@
-"""Test-support package: shared random generators, rotation helpers, and
-numpy reference products (see :mod:`repro.testing.oracles`)."""
+"""Test-support package: shared random generators, rotation helpers, numpy
+reference products (:mod:`repro.testing.oracles`), and the per-precision
+tolerance tiers (:mod:`repro.testing.precision`)."""
 from .oracles import (  # noqa: F401
     cg_product_oracle,
     gaunt_product_oracle,
@@ -11,6 +12,7 @@ from .oracles import (  # noqa: F401
     rotation_matrix,
     wigner_D,
 )
+from .precision import assert_close, tol_for  # noqa: F401
 
 __all__ = [
     "random_array",
@@ -22,4 +24,6 @@ __all__ = [
     "rotate_irreps",
     "gaunt_product_oracle",
     "cg_product_oracle",
+    "tol_for",
+    "assert_close",
 ]

@@ -1,0 +1,58 @@
+"""Shared per-precision tolerance tiers (DESIGN.md §3.6).
+
+One place owns the error budget the test-suite holds the mixed-precision
+paths to, so bf16 cases across test_equivariance / test_engine /
+test_kernels / test_chain_kernel agree on what "close enough" means
+instead of each file inventing an ad-hoc atol.
+
+The tiers come from the storage quantization, not the accumulation:
+accumulation is always >= f32 (``preferred_element_type``), so the error a
+stage can add is bounded by rounding its *inputs and outputs* to storage —
+bf16 has an 8-bit mantissa (eps = 2^-8 ~ 3.9e-3), and the Gaunt pipeline
+rounds at ~3 storage boundaries (operand entry, per-stage store, SH exit),
+amplified by the conversion/projection conditioning (small for the
+lane-padded collocation matrices).  f32 tiers match the historical
+suite-wide bounds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["tol_for", "assert_close"]
+
+# relative tolerance per storage dtype x strictness tier:
+#   'identity'  — same math, two execution routes (backend-vs-oracle checks)
+#   'transform' — a full equivariance transport (rotate -> product -> compare)
+#   'loose'     — long chains / grad checks (more storage round trips)
+_TOLS = {
+    "float32": {"identity": 3e-4, "transform": 5e-4, "loose": 2e-3},
+    "bfloat16": {"identity": 5e-2, "transform": 7e-2, "loose": 1.2e-1},
+    "float64": {"identity": 1e-10, "transform": 1e-9, "loose": 1e-8},
+}
+
+
+def tol_for(dtype, tier: str = "identity") -> float:
+    """The suite-wide relative tolerance for ``dtype`` ('float32' |
+    'bfloat16' | 'float64' or a dtype-like) at the given strictness tier."""
+    name = dtype if isinstance(dtype, str) else np.dtype(dtype).name
+    try:
+        return _TOLS[name][tier]
+    except KeyError:
+        raise ValueError(f"no tolerance tier {tier!r} for dtype {name!r}") from None
+
+
+def assert_close(got, ref, dtype=None, tier: str = "identity", tol=None):
+    """Scale-relative closeness: max|got-ref| <= tol * max(1, max|ref|).
+
+    ``dtype=None`` infers the tier's dtype from ``got``'s own dtype, so
+    parameterized tests pass their arrays straight through.
+    """
+    got = np.asarray(got)
+    if tol is None:
+        tol = tol_for(got.dtype if dtype is None else dtype, tier)
+    got = got.astype(np.float64)
+    ref = np.asarray(ref).astype(np.float64)
+    scale = max(1.0, float(np.max(np.abs(ref))) if ref.size else 1.0)
+    err = float(np.max(np.abs(got - ref))) if ref.size else 0.0
+    assert err <= tol * scale, (
+        f"max abs err {err:.3e} > {tol:.1e} * scale {scale:.3e}")

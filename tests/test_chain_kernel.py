@@ -31,11 +31,15 @@ from repro.core.rep import Rep
 from repro.kernels.gaunt_fused import (gaunt_chain_fused_pallas,
                                        gaunt_chain_fused_xla, kernel_stats,
                                        reset_kernel_stats)
-from repro.testing import random_angles, random_irreps, rotate_irreps
+from repro.testing import (assert_close, random_angles, random_irreps,
+                           rotate_irreps)
 
 
 def _rand(shape, seed, dtype=jnp.float32):
     return jnp.asarray(np.random.default_rng(seed).normal(size=shape), dtype)
+
+
+DTYPES = ["float32", "bfloat16"]
 
 
 CHAINS = [
@@ -55,20 +59,26 @@ CHAINS = [
 @pytest.mark.parametrize("Ls,Lout", CHAINS)
 @pytest.mark.parametrize("backend", ["fused_xla", "fused_pallas"])
 @pytest.mark.parametrize("weighted", [False, True])
-def test_chain_kernel_matches_tree(Ls, Lout, backend, weighted):
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chain_kernel_matches_tree(Ls, Lout, backend, weighted, dtype):
+    """Kernel-vs-tree identity at both storage precisions: inputs quantized
+    to ``dtype``, reference = f32 tree on the same values, tolerance from
+    the shared per-precision tiers (repro.testing.tol_for)."""
     B = 9
-    xs = [_rand((B, num_coeffs(L)), 3 * i) for i, L in enumerate(Ls)]
+    xs = [_rand((B, num_coeffs(L)), 3 * i, dtype) for i, L in enumerate(Ls)]
     ws = wo = None
     if weighted:
         ws = [_rand((B, L + 1), 50 + i) for i, L in enumerate(Ls)]
         wo = _rand((B, Lout + 1), 99)
-    tree = engine.plan_chain(Ls, Lout, backend="tree")
-    cp = engine.plan_chain(Ls, Lout, backend=backend)
+    tree = engine.plan_chain(Ls, Lout, backend="tree")  # f32 reference
+    cp = engine.plan_chain(Ls, Lout, backend=backend, dtype=dtype)
     assert cp.backend == backend
-    want = np.asarray(tree.apply(xs, weights=ws, w_out=wo))
-    got = np.asarray(cp.apply(xs, weights=ws, w_out=wo))
-    scale = np.abs(want).max() + 1.0
-    np.testing.assert_allclose(got, want, atol=3e-5 * scale)
+    want = np.asarray(tree.apply([x.astype(jnp.float32) for x in xs],
+                                 weights=ws, w_out=wo))
+    got = cp.apply(xs, weights=ws, w_out=wo)
+    assert got.dtype == jnp.dtype(dtype)
+    assert_close(np.asarray(got).astype(np.float64), want, dtype=dtype,
+                 tier="identity", tol=3e-5 if dtype == "float32" else None)
 
 
 def test_chain_kernel_f64_exact_vs_tree():
@@ -239,18 +249,52 @@ def test_chain_kernel_single_pallas_call():
     assert kernel_stats()["chain_pallas_calls"] == 1
 
 
-def test_chain_kernel_grid_blocking_accumulates():
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_chain_kernel_grid_blocking_accumulates(dtype):
     """Large product grids run blocked over the sample axis (accumulating in
-    the output block) and still match the unblocked kernel exactly."""
+    the output block) and still match the unblocked kernel exactly — at
+    both storage precisions (blocking must not change where bf16 rounds:
+    accumulation stays f32 within and across grid blocks)."""
     Ls, Lout, B = (3, 3, 2), 4, 5
-    xs = [_rand((B, num_coeffs(L)), 100 + i) for i, L in enumerate(Ls)]
+    xs = [_rand((B, num_coeffs(L)), 100 + i, dtype) for i, L in enumerate(Ls)]
     full = gaunt_chain_fused_pallas(xs, Ls, Lout, block_g=4096, interpret=True)
     blocked = gaunt_chain_fused_pallas(xs, Ls, Lout, block_g=128, interpret=True)
-    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+    np.testing.assert_allclose(np.asarray(blocked).astype(np.float64),
+                               np.asarray(full).astype(np.float64),
                                rtol=1e-5, atol=1e-5)
     xla = gaunt_chain_fused_xla(xs, Ls, Lout)
-    np.testing.assert_allclose(np.asarray(blocked), np.asarray(xla),
+    np.testing.assert_allclose(np.asarray(blocked).astype(np.float64),
+                               np.asarray(xla).astype(np.float64),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# mixed-precision: the chain-entry dtype rule (DESIGN.md §3.6)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", engine.CHAIN_BACKENDS)
+def test_chain_mixed_dtype_operands_cast_at_entry(backend):
+    """THE chain-entry rule: SH operands arriving in a different storage
+    dtype are cast ONCE at entry to the plan's storage dtype — uniformly
+    across every chain backend, never backend-dependent.  An f32 plan fed
+    mixed bf16/f32 operands returns f32 within bf16 input-quantization
+    error; a bf16 plan fed f32 operands returns bf16."""
+    Ls, Lout, B = (2, 1, 2), 2, 8
+    xs32 = [_rand((B, num_coeffs(L)), 200 + i) for i, L in enumerate(Ls)]
+    mixed = [xs32[0].astype(jnp.bfloat16), xs32[1],
+             xs32[2].astype(jnp.bfloat16)]
+    cp = engine.plan_chain(Ls, Lout, backend=backend)
+    ref = np.asarray(cp.apply(xs32))
+    got = cp.apply(mixed)
+    assert got.dtype == jnp.float32, backend
+    assert_close(np.asarray(got).astype(np.float64), ref,
+                 dtype="bfloat16", tier="identity")
+    cpb = engine.plan_chain(Ls, Lout, backend=backend, dtype="bfloat16")
+    gotb = cpb.apply(xs32)
+    assert gotb.dtype == jnp.bfloat16, backend
+    assert_close(np.asarray(gotb).astype(np.float64), ref,
+                 dtype="bfloat16", tier="identity")
 
 
 # --------------------------------------------------------------------------

@@ -62,6 +62,10 @@ def test_pairwise_backends_batch_shapes(backend, batch):
                          engine.available_backends("pairwise", dtype="bfloat16",
                                                    requires_grad=False))
 def test_pairwise_backends_bfloat16(backend):
+    """bf16 storage vs the f32 oracle on quantized inputs — bounds from the
+    shared per-precision tiers (repro.testing.tol_for)."""
+    from repro.testing import assert_close
+
     L1, L2, Lout = 2, 2, 4
     x1 = _rand((8, num_coeffs(L1)), 5, jnp.bfloat16)
     x2 = _rand((8, num_coeffs(L2)), 6, jnp.bfloat16)
@@ -70,7 +74,7 @@ def test_pairwise_backends_bfloat16(backend):
     p = engine.plan(L1, L2, Lout, dtype="bfloat16", backend=backend,
                     requires_grad=False)
     got = np.asarray(p.apply(x1, x2), dtype=np.float32)
-    np.testing.assert_allclose(got, ref, atol=7e-2)
+    assert_close(got, ref, dtype="bfloat16", tier="identity")
 
 
 @pytest.mark.parametrize("backend", PAIRWISE)
@@ -226,3 +230,99 @@ def test_jit_containing_plan_and_apply():
     x2 = _rand((4, num_coeffs(2)), 61)
     ref = gaunt_einsum_reference(x1, x2, 2, 2)
     np.testing.assert_allclose(np.asarray(f(x1, x2)), np.asarray(ref), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# mixed precision: storage/accumulation split, dtype='auto', per-dtype calib
+# ---------------------------------------------------------------------------
+
+
+def test_plankey_storage_accumulation_split():
+    """PlanKey.dtype is the STORAGE dtype; accumulation derives from it and
+    never drops below f32 (DESIGN.md §3.6)."""
+    k = engine.PlanKey(2, 2, 4, dtype="bfloat16")
+    assert k.acc_dtype == "float32"
+    assert engine.PlanKey(2, 2, 4, dtype="float32").acc_dtype == "float32"
+    assert engine.PlanKey(2, 2, 4, dtype="float64").acc_dtype == "float64"
+    assert k.with_dtype("float32") == engine.PlanKey(2, 2, 4, dtype="float32")
+
+
+def test_dtype_auto_measures_both_precisions_and_caches():
+    """dtype='auto' + tune='measure' times the f32 and bf16 siblings under
+    one key family, picks bf16 only when it measured faster, and caches the
+    family winner (second request returns the same plan object)."""
+    eng = engine.GauntEngine()
+    p = eng.plan(2, 2, 4, dtype="auto", tune="measure", batch_hint=64,
+                 requires_grad=False)
+    assert p.key.dtype in ("float32", "bfloat16")
+    # winner cached under the 'auto' family key
+    fam = engine.PlanKey(2, 2, 4, kind="pairwise", batch_hint=64, dtype="auto")
+    assert eng._measured[fam] == p.key.dtype
+    assert eng.plan(2, 2, 4, dtype="auto", tune="measure", batch_hint=64,
+                    requires_grad=False) is p
+    # the pick is justified: if bf16 won, its measured time beat f32's
+    kb = fam.with_dtype("bfloat16")
+    kf = fam.with_dtype("float32")
+    if p.key.dtype == "bfloat16":
+        assert eng._measured_t[kb] < eng._measured_t[kf]
+    # heuristic mode never gambles: 'auto' resolves to float32
+    assert eng.plan(2, 2, 4, dtype="auto", requires_grad=False).key.dtype == "float32"
+
+
+def test_chain_dtype_auto_measures_and_caches():
+    eng = engine.GauntEngine()
+    cp = eng.plan_chain((2, 2), 2, dtype="auto", tune="measure", batch_hint=32)
+    assert cp.dtype in ("float32", "bfloat16")
+    assert eng.plan_chain((2, 2), 2, dtype="auto", tune="measure",
+                          batch_hint=32) is cp
+    # heuristic 'auto' resolves to float32
+    assert eng.plan_chain((2, 2), 2, dtype="auto").dtype == "float32"
+    x = _rand((32, num_coeffs(2)), 300)
+    ref = eng.plan_chain((2, 2), 2, backend="tree").apply([x, x])
+    from repro.testing import assert_close
+
+    assert_close(np.asarray(cp.apply([x, x])).astype(np.float64),
+                 np.asarray(ref), dtype=cp.dtype, tier="identity")
+
+
+def test_calibration_is_keyed_by_dtype():
+    """Satellite: calibrate_fused(dtype=...) installs a per-dtype factor and
+    leaves the other precisions' entries untouched."""
+    from repro.core.engine import get_calibration, set_calibration
+
+    base = get_calibration()
+    eng = engine.GauntEngine()
+    try:
+        rec = eng.calibrate_fused(L=2, B=32, dtype="bfloat16")
+        assert rec["dtype"] == "bfloat16"
+        cal = get_calibration()
+        assert cal["fused_skinny:bfloat16_measured"]
+        assert cal["fused_skinny:bfloat16"] == pytest.approx(rec["factor"],
+                                                             rel=1e-2)
+        # the f32 entry did not move
+        assert cal["fused_skinny"] == base["fused_skinny"]
+        assert cal["fused_skinny_measured"] == base["fused_skinny_measured"]
+        # cost model reads the per-dtype factor
+        kf = engine.PlanKey(4, 4, 4, kind="pairwise", batch_hint=256)
+        kb = kf.with_dtype("bfloat16")
+        set_calibration(**{"fused_skinny": 2.0, "fused_skinny:bfloat16": 8.0})
+        assert engine._cost_fused(kb, pallas=False) > engine._cost_fused(kf, pallas=False)
+    finally:
+        set_calibration(**{k: v for k, v in base.items()})
+
+
+def test_plan_batch_buckets_key_on_storage_dtype():
+    """plan_batch keys its buckets on storage dtype: the same workload at
+    f32 and bf16 builds distinct bucket plans with the right output dtypes."""
+    items = [(2, 2, 4, 4)]
+    bp32 = engine.plan_batch([(2, 2, 4)], kind="pairwise", dtype="float32")
+    bpb = engine.plan_batch([(2, 2, 4)], kind="pairwise", dtype="bfloat16")
+    a = _rand((4, num_coeffs(2)), 310)
+    b = _rand((4, num_coeffs(2)), 311)
+    out32 = bp32.apply([(a, b)])[0]
+    outb = bpb.apply([(a.astype(jnp.bfloat16), b.astype(jnp.bfloat16))])[0]
+    assert out32.dtype == jnp.float32 and outb.dtype == jnp.bfloat16
+    from repro.testing import assert_close
+
+    assert_close(np.asarray(outb).astype(np.float64), np.asarray(out32),
+                 dtype="bfloat16", tier="identity")

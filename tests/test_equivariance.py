@@ -5,6 +5,12 @@ defining property  apply(D(R) x1, D(R) x2) == D(R) apply(x1, x2)  under
 deterministic random rotations (exact Wigner-D from repro.testing), plus
 hypothesis-driven random-angle sweeps when hypothesis is installed
 (tests/_hyp.py shim -> clean skips otherwise).
+
+The suite is parameterized over storage precision {float32, bfloat16}
+(DESIGN.md §3.6): equivariance is a property of the *operator*, so it must
+hold at every storage dtype — only the tolerance tier changes
+(repro.testing.tol_for).  Backends that don't register a dtype are skipped
+for it, mirroring the engine's own eligibility filter.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -14,10 +20,12 @@ from _hyp import HAVE_HYPOTHESIS, given, settings, st
 from repro.core import engine
 from repro.core.irreps import num_coeffs
 from repro.testing import (
+    assert_close,
     random_angles,
     random_irreps,
     random_unit_vectors,
     rotation_matrix,
+    tol_for,
     wigner_D,
 )
 
@@ -25,6 +33,7 @@ PAIRWISE = engine.available_backends("pairwise", requires_grad=False)
 CONV = engine.available_backends("conv_filter", requires_grad=False)
 MANYBODY = engine.available_backends("manybody", requires_grad=False)
 CHANNEL_MIX = engine.available_backends("channel_mix", requires_grad=False)
+DTYPES = ["float32", "bfloat16"]
 
 LS = [1, 2, 3, 4]  # the acceptance grid: every backend up to L=4
 B = 3              # rows per check — equivariance is per-row, keep it cheap
@@ -36,63 +45,89 @@ def _close(got, ref, tol=2e-4):
     np.testing.assert_allclose(got, ref, atol=tol * scale)
 
 
-def _check_pairwise(backend, L1, L2, Lout, angles, seed=0):
+def _skip_unless_eligible(backend, kind, dtype):
+    if backend is not None and backend not in engine.available_backends(
+            kind, dtype=dtype, requires_grad=False):
+        pytest.skip(f"{backend} does not register {dtype}")
+
+
+def _f64(a):
+    return np.asarray(a).astype(np.float64)
+
+
+def _check_pairwise(backend, L1, L2, Lout, angles, seed=0, dtype="float32"):
     x1 = random_irreps(L1, (B,), seed=seed)
     x2 = random_irreps(L2, (B,), seed=seed + 100)
     D1, D2, D3 = wigner_D(L1, angles), wigner_D(L2, angles), wigner_D(Lout, angles)
-    p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False)
-    lhs = np.asarray(p.apply(jnp.asarray(x1 @ D1.T), jnp.asarray(x2 @ D2.T)))
-    rhs = np.asarray(p.apply(jnp.asarray(x1), jnp.asarray(x2))) @ D3.T
-    _close(lhs, rhs)
+    p = engine.plan(L1, L2, Lout, backend=backend, requires_grad=False,
+                    dtype=dtype)
+    cast = lambda a: jnp.asarray(a).astype(dtype)  # noqa: E731
+    lhs = _f64(p.apply(cast(x1 @ D1.T), cast(x2 @ D2.T)))
+    rhs = _f64(p.apply(cast(x1), cast(x2))) @ D3.T
+    assert_close(lhs, rhs, dtype=dtype, tier="transform")
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("L", LS)
 @pytest.mark.parametrize("backend", PAIRWISE)
-def test_pairwise_rotation_equivariance(backend, L):
-    _check_pairwise(backend, L, L, L, random_angles(seed=L), seed=L)
+def test_pairwise_rotation_equivariance(backend, L, dtype):
+    _skip_unless_eligible(backend, "pairwise", dtype)
+    _check_pairwise(backend, L, L, L, random_angles(seed=L), seed=L, dtype=dtype)
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("backend", PAIRWISE)
-def test_pairwise_equivariance_mixed_degrees(backend):
+def test_pairwise_equivariance_mixed_degrees(backend, dtype):
     # unequal degrees + full (untruncated) output
-    _check_pairwise(backend, 2, 3, 5, random_angles(seed=7), seed=7)
+    _skip_unless_eligible(backend, "pairwise", dtype)
+    _check_pairwise(backend, 2, 3, 5, random_angles(seed=7), seed=7, dtype=dtype)
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("L", LS)
 @pytest.mark.parametrize("backend", CONV)
-def test_conv_filter_rotation_equivariance(backend, L):
+def test_conv_filter_rotation_equivariance(backend, L, dtype):
     """Rotating the features AND the edge direction rotates the output."""
+    _skip_unless_eligible(backend, "conv_filter", dtype)
     angles = random_angles(seed=10 + L)
     R = rotation_matrix(angles)
     x = random_irreps(L, (B,), seed=20 + L)
     r = random_unit_vectors((B,), seed=30 + L)
     D1, D3 = wigner_D(L, angles), wigner_D(L, angles)
     p = engine.plan(L, L, L, kind="conv_filter", backend=backend,
-                    requires_grad=False)
-    lhs = np.asarray(p.apply(jnp.asarray(x @ D1.T),
-                             jnp.asarray((r @ R.T).astype(np.float32))))
-    rhs = np.asarray(p.apply(jnp.asarray(x), jnp.asarray(r))) @ D3.T
-    _close(lhs, rhs, tol=5e-4)
+                    requires_grad=False, dtype=dtype)
+    cast = lambda a: jnp.asarray(a).astype(dtype)  # noqa: E731
+    # edge directions stay f32: the filter is *built* from them (Wigner
+    # recursion / SH evaluation), it is not a stored operand
+    lhs = _f64(p.apply(cast(x @ D1.T), jnp.asarray((r @ R.T).astype(np.float32))))
+    rhs = _f64(p.apply(cast(x), jnp.asarray(r))) @ D3.T
+    assert_close(lhs, rhs, dtype=dtype, tier="transform")
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("L", LS)
 @pytest.mark.parametrize("backend", MANYBODY)
-def test_manybody_rotation_equivariance(backend, L):
+def test_manybody_rotation_equivariance(backend, L, dtype):
+    _skip_unless_eligible(backend, "manybody", dtype)
     nu = 3 if L <= 2 else 2
     angles = random_angles(seed=40 + L)
     xs = [random_irreps(L, (B,), seed=50 + L + i) for i in range(nu)]
     D, Do = wigner_D(L, angles), wigner_D(L, angles)
     p = engine.plan(kind="manybody", Ls=(L,) * nu, Lout=L, backend=backend,
-                    requires_grad=False)
-    lhs = np.asarray(p.apply([jnp.asarray(x @ D.T) for x in xs]))
-    rhs = np.asarray(p.apply([jnp.asarray(x) for x in xs])) @ Do.T
-    _close(lhs, rhs, tol=5e-4)
+                    requires_grad=False, dtype=dtype)
+    cast = lambda a: jnp.asarray(a).astype(dtype)  # noqa: E731
+    lhs = _f64(p.apply([cast(x @ D.T) for x in xs]))
+    rhs = _f64(p.apply([cast(x) for x in xs])) @ Do.T
+    # nu-fold chains accumulate more storage round trips than a pairwise op
+    assert_close(lhs, rhs, dtype=dtype, tier="loose")
 
 
+@pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("L", LS)
 @pytest.mark.parametrize("backend", CHANNEL_MIX)
-def test_channel_mix_rotation_equivariance(backend, L):
+def test_channel_mix_rotation_equivariance(backend, L, dtype):
     """Channel mixing commutes with rotation (w_mix acts on channels only)."""
+    _skip_unless_eligible(backend, "channel_mix", dtype)
     C1, C2, E = 3, 2, 4
     angles = random_angles(seed=60 + L)
     x1 = random_irreps(L, (B, C1), seed=70 + L)
@@ -102,19 +137,19 @@ def test_channel_mix_rotation_equivariance(backend, L):
     w = random_array((C1, C2, E), seed=90 + L)
     D, Do = wigner_D(L, angles), wigner_D(L, angles)
     p = engine.plan(L, L, L, kind="channel_mix", backend=backend,
-                    requires_grad=False)
-    lhs = np.asarray(p.apply(jnp.asarray(x1 @ D.T), jnp.asarray(x2 @ D.T),
-                             jnp.asarray(w)))
-    rhs = np.asarray(p.apply(jnp.asarray(x1), jnp.asarray(x2),
-                             jnp.asarray(w))) @ Do.T
-    _close(lhs, rhs)
+                    requires_grad=False, dtype=dtype)
+    cast = lambda a: jnp.asarray(a).astype(dtype)  # noqa: E731
+    lhs = _f64(p.apply(cast(x1 @ D.T), cast(x2 @ D.T), jnp.asarray(w)))
+    rhs = _f64(p.apply(cast(x1), cast(x2), jnp.asarray(w))) @ Do.T
+    assert_close(lhs, rhs, dtype=dtype, tier="transform")
 
 
-def test_batched_plan_rotation_equivariance():
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_batched_plan_rotation_equivariance(dtype):
     """The batched execution layer preserves equivariance across a ragged
     multi-degree workload (the tentpole path end-to-end)."""
     items = [(2, 2, 2, 4), (1, 1, 2, 6), (2, 2, 2, 3)]
-    bp = engine.plan_batch(items, requires_grad=False)
+    bp = engine.plan_batch(items, requires_grad=False, dtype=dtype)
     angles = random_angles(seed=3)
     ins, refs = [], []
     for t, (L1, L2, Lout, n) in enumerate(items):
@@ -122,13 +157,14 @@ def test_batched_plan_rotation_equivariance():
         x2 = random_irreps(L2, (n,), seed=t + 10)
         ins.append((x1, x2))
         refs.append((L1, L2, Lout))
-    outs = bp.apply([(jnp.asarray(a), jnp.asarray(b)) for a, b in ins])
+    cast = lambda a: jnp.asarray(a).astype(dtype)  # noqa: E731
+    outs = bp.apply([(cast(a), cast(b)) for a, b in ins])
     rot_outs = bp.apply([
-        (jnp.asarray(a @ wigner_D(L1, angles).T),
-         jnp.asarray(b @ wigner_D(L2, angles).T))
+        (cast(a @ wigner_D(L1, angles).T), cast(b @ wigner_D(L2, angles).T))
         for (a, b), (L1, L2, _) in zip(ins, refs)])
     for o, ro, (_, _, Lout) in zip(outs, rot_outs, refs):
-        _close(np.asarray(ro), np.asarray(o) @ wigner_D(Lout, angles).T)
+        assert_close(_f64(ro), _f64(o) @ wigner_D(Lout, angles).T,
+                     dtype=dtype, tier="transform")
 
 
 # ---------------------------------------------------------------------------

@@ -32,13 +32,17 @@ def test_gaunt_fused_vs_oracle(L1, L2, Lout, B):
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_gaunt_fused_dtypes(dtype):
+    """Pairwise kernel at f32/bf16 storage — bounds from the shared
+    per-precision tiers (repro.testing.tol_for)."""
+    from repro.testing import assert_close
+
     L1 = L2 = 2
     x1 = _rand((64, num_coeffs(L1)), 3, dtype)
     x2 = _rand((64, num_coeffs(L2)), 4, dtype)
     got = gaunt_fused_pallas(x1, x2, L1, L2, 4, block_b=64, interpret=True)
     want = gaunt_einsum_reference(x1.astype(jnp.float32), x2.astype(jnp.float32), L1, L2, 4)
-    tol = 3e-4 if dtype == jnp.float32 else 5e-2
-    np.testing.assert_allclose(np.asarray(got, dtype=np.float32), np.asarray(want), atol=tol)
+    assert_close(np.asarray(got, dtype=np.float32), np.asarray(want),
+                 dtype=dtype, tier="identity")
 
 
 def test_gaunt_fused_matches_unfused_ref():
