@@ -457,8 +457,79 @@ def run_mixed_precision(csv=True):
     return records
 
 
+_COLD_WARM_CHILD = r"""
+import json, os, sys, time
+from repro.core import engine
+
+t0 = time.perf_counter()
+eng = engine.get_engine()
+eng.set_autotune_cache(os.environ["REPRO_BENCH_CACHE"])
+eng.load_autotune_cache()
+picks = {}
+p = eng.plan(2, 2, 2, batch_hint=256, tune="measure", requires_grad=False)
+picks["pairwise"] = p.backend
+c = eng.plan_chain((2, 2, 2), 2, tune="measure", batch_hint=512)
+picks["chain"] = c.backend
+a = eng.plan(2, 2, 2, batch_hint=256, dtype="auto", tune="measure",
+             requires_grad=False)
+picks["auto_dtype"] = a.key.dtype
+eng.flush_autotune_cache()
+us = (time.perf_counter() - t0) * 1e6
+print("BENCH_JSON " + json.dumps(
+    {"us": us, "timing_runs": eng.timing_runs, "picks": picks}))
+"""
+
+
+def run_autotune_cache(csv=True):
+    """Cold-vs-warm autotune startup (DESIGN.md §4.5).
+
+    Two SUBPROCESSES (honest cold start — a fresh in-process engine would
+    still share jit/XLA compilation caches) run the same measure-mode
+    workload against one shared cache file: the first boots cold, measures,
+    and flushes; the second must answer every selection from the file.  The
+    record carries both latencies, both timing-run counters, and whether the
+    warm process picked identically — the CI guard holds warm timing runs to
+    ZERO and picks to equality, the persisted-cache correctness contract.
+    """
+    import json as _json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    records = []
+    with tempfile.TemporaryDirectory() as td:
+        env = dict(os.environ)
+        env["REPRO_BENCH_CACHE"] = os.path.join(td, "autotune.json")
+        env.setdefault("PYTHONPATH", "")
+        env["PYTHONPATH"] = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "src") + os.pathsep + env["PYTHONPATH"]
+        out = []
+        for _ in range(2):
+            r = subprocess.run([sys.executable, "-c", _COLD_WARM_CHILD],
+                               capture_output=True, text=True, env=env,
+                               timeout=900)
+            line = [ln for ln in r.stdout.splitlines()
+                    if ln.startswith("BENCH_JSON ")]
+            if r.returncode != 0 or not line:
+                raise RuntimeError(f"cold/warm child failed: "
+                                   f"{r.stdout[-1000:]} {r.stderr[-1000:]}")
+            out.append(_json.loads(line[0][len("BENCH_JSON "):]))
+    cold, warm = out
+    record(records, "engine_autotune_cache_warm_start", warm["us"], echo=csv,
+           cold_us=round(cold["us"], 1),
+           speedup_vs_cold=round(cold["us"] / warm["us"], 2),
+           cold_timing_runs=cold["timing_runs"],
+           warm_timing_runs=warm["timing_runs"],
+           picks_match=cold["picks"] == warm["picks"],
+           backend=warm["picks"]["chain"])
+    return records
+
+
 if __name__ == "__main__":
     run()
     run_chain()
     run_chain_kernel()
     run_mixed_precision()
+    run_autotune_cache()

@@ -46,6 +46,7 @@ def main() -> None:
         "engine_chain": bench_engine.run_chain,
         "engine_chain_kernel": bench_engine.run_chain_kernel,
         "engine_mixed": bench_engine.run_mixed_precision,
+        "engine_autotune_cache": bench_engine.run_autotune_cache,
         "fig1a": lambda: bench_feature_interaction.run(
             L_list=(1, 2, 3, 4) if args.fast else (1, 2, 3, 4, 5, 6, 8),
             backend=args.backend),

@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""Offline autotune calibration — thin wrapper over the real CLI.
+
+    scripts/calibrate.py --cache /var/cache/repro/gaunt_autotune.json
+    scripts/calibrate.py --cache ... --verify-warm   # prove zero timing runs
+
+Sweeps the known workload grid (plan keys, chain keys at both storage
+precisions, fused-cost calibration per dtype) and persists the measured
+selection table so production serve processes boot warm.  See
+`python -m repro.core.autotune_cache --help` and DESIGN.md §4.5.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.core.autotune_cache import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -64,6 +64,10 @@ for r in recs:
         print(f"  {r['name']:36s} {r['us']:>10.1f} us  bf16 "
               f"x{r.get('speedup_vs_f32')} vs f32, err={r.get('err')}, "
               f"auto->{r.get('auto_dtype')}")
+    elif r["name"].startswith("engine_autotune_cache"):
+        print(f"  {r['name']:36s} {r['us']:>10.1f} us  warm "
+              f"(cold {r.get('cold_us')} us, x{r.get('speedup_vs_cold')}, "
+              f"warm timing runs {r.get('warm_timing_runs')})")
     elif r["name"].startswith(("engine_batched", "engine_chain")):
         print(f"  {r['name']:36s} {r['us']:>10.1f} us  "
               f"(looped {r.get('looped_us')} us, x{r.get('speedup_vs_looped')})")
@@ -71,9 +75,24 @@ for r in recs:
         print(f"  {r['name']:36s} {r['us']:>10.1f} us  -> {r.get('backend')}")
 EOF
 
-echo "=== bench guards: heuristic regret + chain-speedup + mixed-precision ==="
-git show HEAD:BENCH_gaunt.json > /tmp/bench_baseline.json 2>/dev/null || true
-python - <<'EOF'
+echo "=== warm-cache guard: calibrate CLI populates, second sweep runs 0 timings ==="
+# two passes over a throwaway cache file: the first measures the (fast)
+# workload grid and persists it, the second must answer every selection from
+# the file — --verify-warm exits non-zero if even one timing run happened,
+# which is exactly the cold-start cliff the persistent cache exists to close
+AUTOTUNE_CACHE="$(mktemp -t autotune_cache.XXXXXX.json)"
+trap 'rm -f "$AUTOTUNE_CACHE"' EXIT
+rm -f "$AUTOTUNE_CACHE"  # the CLI wants to create it atomically itself
+python -m repro.core.autotune_cache --fast --cache "$AUTOTUNE_CACHE"
+python -m repro.core.autotune_cache --fast --cache "$AUTOTUNE_CACHE" --verify-warm
+
+echo "=== bench guards: heuristic regret + chain-speedup + mixed-precision + warm-start ==="
+# per-run baseline path (mktemp, not a fixed /tmp name): concurrent CI runs
+# on a shared runner must not clobber each other's baselines
+BENCH_BASELINE="$(mktemp -t bench_baseline.XXXXXX.json)"
+trap 'rm -f "$AUTOTUNE_CACHE" "$BENCH_BASELINE"' EXIT
+git show HEAD:BENCH_gaunt.json > "$BENCH_BASELINE" 2>/dev/null || true
+BENCH_BASELINE="$BENCH_BASELINE" python - <<'EOF'
 import json, os, sys
 
 # guard 1 — autotune cost model: where the heuristic pick disagrees with the
@@ -95,8 +114,9 @@ for r in recs:
 # noisier runners (BENCH_GUARD_FLOOR / BENCH_GUARD_FRAC).
 FLOOR = float(os.environ.get("BENCH_GUARD_FLOOR", "0.9"))
 FRAC = float(os.environ.get("BENCH_GUARD_FRAC", "0.8"))
-if os.path.exists("/tmp/bench_baseline.json") and os.path.getsize("/tmp/bench_baseline.json"):
-    base = {r["name"]: r for r in json.load(open("/tmp/bench_baseline.json"))["records"]}
+baseline = os.environ.get("BENCH_BASELINE", "")
+if baseline and os.path.exists(baseline) and os.path.getsize(baseline):
+    base = {r["name"]: r for r in json.load(open(baseline))["records"]}
 else:
     base = {}
 for r in recs:
@@ -166,6 +186,22 @@ for r in recs:
         if s < BF16_FLOOR:
             fail.append(f"{r['name']}: autotuner kept bfloat16 but it LOST "
                         f"to its f32 sibling (x{s} < {BF16_FLOOR})")
+
+# guard 5 — persistent autotune: the warm subprocess in the cold-vs-warm
+# record must have performed ZERO timing runs and selected identically to
+# the cold one — a single warm timing run means the persisted table failed
+# to cover the workload (broken serialization, fingerprint drift, or a
+# selection path that stopped consulting the cache)
+for r in recs:
+    if not r["name"].startswith("engine_autotune_cache"):
+        continue
+    if r.get("warm_timing_runs", 0) != 0:
+        fail.append(f"{r['name']}: warm process ran "
+                    f"{r['warm_timing_runs']} timing runs (must be 0 — the "
+                    f"persisted cache did not cover the workload)")
+    if not r.get("picks_match", False):
+        fail.append(f"{r['name']}: warm process selected differently from "
+                    f"the cold one (persisted table is not faithful)")
 
 if fail:
     print("BENCH GUARD FAILURES:")

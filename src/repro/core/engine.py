@@ -88,6 +88,7 @@ __all__ = [
     "available_backends",
     "get_calibration",
     "set_calibration",
+    "reset_calibration",
     "spectral_default",
     "expand_degree_weights",
     "get_engine",
@@ -1148,6 +1149,10 @@ _CALIB = {
     "fused_skinny:bfloat16": None, "fused_skinny:bfloat16_measured": False,
     "fused_skinny:float64": None, "fused_skinny:float64_measured": False,
 }
+# pristine copy for reset_calibration(): _CALIB is module-global mutable
+# state, so without a reset a calibrate_fused() run in one engine/test
+# silently skews heuristic rankings in every other
+_CALIB_DEFAULTS = dict(_CALIB)
 
 
 def _calib_key(dtype: str) -> str:
@@ -1174,6 +1179,14 @@ def set_calibration(**kw) -> None:
     if unknown:
         raise ValueError(f"unknown calibration constants {sorted(unknown)}")
     _CALIB.update(kw)
+
+
+def reset_calibration() -> None:
+    """Restore the default calibration constants and drop all ``*_measured``
+    flags — wired into ``GauntEngine.clear()`` so two fresh engines always
+    rank backends identically regardless of what a previous engine measured."""
+    _CALIB.clear()
+    _CALIB.update(_CALIB_DEFAULTS)
 
 
 def _dims(key: PlanKey):
@@ -1610,7 +1623,7 @@ register_backend(Backend(
 class GauntEngine:
     """Plans, caches, and autotunes Gaunt ops over the backend registry."""
 
-    def __init__(self):
+    def __init__(self, cache_path: str | None = None):
         self._plans: dict[tuple, GauntPlan] = {}
         self._batched: dict[tuple, BatchedGauntPlan] = {}
         self._chains: dict[tuple, ChainPlan] = {}
@@ -1618,6 +1631,78 @@ class GauntEngine:
         # best measured wall time per key — lets dtype='auto' compare a key's
         # f32/bf16 siblings (one key family) without re-timing either
         self._measured_t: dict[PlanKey, float] = {}
+        # persistent autotune cache (core/autotune_cache.py).  Disabled
+        # unless a path is configured here, via set_autotune_cache(), or via
+        # $REPRO_AUTOTUNE_CACHE — tests and one-shot scripts keep the
+        # historical purely-in-process behavior.
+        self._cache_path = cache_path
+        self._cache_loaded = False
+        # counts timed measurement passes (plan backends, chain candidates,
+        # fused calibration).  A process booted against a warm cache must
+        # keep this at 0 — the warm-start acceptance proof and the CLI's
+        # --verify-warm both read it.
+        self.timing_runs = 0
+
+    # -- persistent autotune cache -----------------------------------------
+
+    def set_autotune_cache(self, path: str | None) -> None:
+        """Point this engine at a persistent cache file (None -> fall back
+        to $REPRO_AUTOTUNE_CACHE, or disabled).  The next measure-mode miss
+        loads it lazily; every new measurement flushes to it."""
+        self._cache_path = path
+        self._cache_loaded = False
+
+    def _resolved_cache_path(self) -> str | None:
+        from . import autotune_cache as _ac
+
+        return _ac.resolve_path(self._cache_path)
+
+    def load_autotune_cache(self) -> int:
+        """Load persisted selections/timings/calibration now (idempotent;
+        in-process entries win over the file's).  -> #selections adopted."""
+        self._cache_loaded = True
+        path = self._resolved_cache_path()
+        if path is None:
+            return 0
+        from . import autotune_cache as _ac
+
+        data = _ac.load(path)
+        if data is None:
+            return 0
+        selections, timings, calib = data
+        n = 0
+        for k, b in selections.items():
+            if k not in self._measured:
+                self._measured[k] = b
+                n += 1
+        for k, t in timings.items():
+            self._measured_t.setdefault(k, t)
+        _ac.merge_calibration(calib)
+        return n
+
+    def _maybe_load_cache(self) -> None:
+        if not self._cache_loaded:
+            self.load_autotune_cache()
+
+    def flush_autotune_cache(self) -> str | None:
+        """Persist the measurement stores (atomic, merging).  No-op without
+        a configured cache path.  -> the path written, or None."""
+        path = self._resolved_cache_path()
+        if path is None:
+            return None
+        from . import autotune_cache as _ac
+
+        _ac.save(path, self._measured, self._measured_t,
+                 calibration=get_calibration())
+        return path
+
+    def _autoflush(self) -> None:
+        """Flush after a new measurement — an unwritable cache file must
+        degrade to in-process-only autotune, never break planning."""
+        try:
+            self.flush_autotune_cache()
+        except OSError:
+            pass
 
     # -- public API --------------------------------------------------------
 
@@ -1966,11 +2051,16 @@ class GauntEngine:
                                       out_hint, share_hint)
         batch_hint = key.batch_hint
         entries, share = key.opt("entries"), key.opt("share")
+        # consult the persisted table before the trace-clean bail: loading
+        # JSON is host-side Python, safe inside a trace, and a traced miss
+        # should still reuse a measurement another process already ran
+        self._maybe_load_cache()
         hit = self._measured.get(key)
         if hit is not None:
             return hit
         if not _trace_clean():
             return "tree"  # timing inside a trace is meaningless
+        self.timing_runs += 1
         candidates = ["tree", "fused_xla"]
         if out_hint == "sh":
             candidates.insert(1, "looped")  # no resident exit on the fold
@@ -2010,9 +2100,15 @@ class GauntEngine:
                 continue
             if t < best_t:
                 best_name, best_t = name, t
+        if best_t == float("inf"):
+            # every candidate (including tree) raised: nothing was ever
+            # successfully run, so there is no measurement to cache — return
+            # the safe default WITHOUT pinning it, mirroring _measure's
+            # cost-model fallback, and let a later (healthier) call re-time
+            return "tree"
         self._measured[key] = best_name
-        if best_t < float("inf"):
-            self._measured_t[key] = best_t
+        self._measured_t[key] = best_t
+        self._autoflush()
         return best_name
 
     @staticmethod
@@ -2044,6 +2140,7 @@ class GauntEngine:
         mode, dirty trace, sharded mesh)."""
         auto_key = self._chain_measure_key(Ls, Lout, "auto", batch_hint,
                                            entry_hint, out_hint, share_hint)
+        self._maybe_load_cache()
         hit = self._measured.get(auto_key)
         if hit is not None:
             return hit
@@ -2060,7 +2157,12 @@ class GauntEngine:
                 times[dts] = t
         winner = "bfloat16" if times.get("bfloat16", float("inf")) < \
             times.get("float32", float("inf")) else "float32"
-        self._measured[auto_key] = winner
+        if times:
+            # cache the winner only when at least one sibling actually
+            # produced a timing — an all-candidate failure must not become
+            # a process-lifetime (or persisted) precision decision
+            self._measured[auto_key] = winner
+            self._autoflush()
         return winner
 
     def _select_dtype(self, make_key: Callable, tune: str,
@@ -2070,6 +2172,7 @@ class GauntEngine:
         one key family and pick bf16 only where it beats f32.  Heuristic
         mode or a dirty trace resolves to float32 without measuring."""
         auto_key = make_key("auto")
+        self._maybe_load_cache()
         hit = self._measured.get(auto_key)
         if hit is not None:
             return hit
@@ -2084,14 +2187,20 @@ class GauntEngine:
                 continue
             name = self._measured.get(key)
             if name is None:
-                name = self._measure(key, eligible)
+                name, t = self._measure(key, eligible)
+                if t is None:
+                    continue  # cost-model fallback: nothing was timed
                 self._measured[key] = name
+                self._measured_t[key] = t
             t = self._measured_t.get(key)
             if t is not None:
                 times[dts] = t
         winner = "bfloat16" if times.get("bfloat16", float("inf")) < \
             times.get("float32", float("inf")) else "float32"
-        self._measured[auto_key] = winner
+        if times:
+            # same rule as the chain variant: no timings, no cached winner
+            self._measured[auto_key] = winner
+            self._autoflush()
         return winner
 
     def calibrate_fused(self, L: int = 6, B: int = 64,
@@ -2109,6 +2218,7 @@ class GauntEngine:
         dts = _dtype_str(dtype)
         key = PlanKey(L, L, L, kind="pairwise", batch_hint=B, dtype=dts)
         args = _synthetic_inputs(key)
+        self.timing_runs += 1
         times = {}
         for name in ("fused_xla", "dense_einsum"):
             apply = _REGISTRY[name].build(key)
@@ -2129,6 +2239,7 @@ class GauntEngine:
         factor = float(min(16.0, max(0.25, factor)))
         ck = _calib_key(dts)
         set_calibration(**{ck: factor, ck + "_measured": True})
+        self._autoflush()
         return {"factor": round(factor, 3),
                 "fused_xla_us": round(times["fused_xla"] * 1e6, 1),
                 "dense_einsum_us": round(times["dense_einsum"] * 1e6, 1),
@@ -2140,13 +2251,24 @@ class GauntEngine:
         eligible = [b for b in _REGISTRY.values() if b.eligible(key, requires_grad)]
         if not eligible:
             raise ValueError(f"no eligible backend for {key}")
-        if tune == "measure" and _trace_clean():
+        if tune == "measure":
+            # load (and consult) the persisted table even inside a trace —
+            # the JSON load is host-side Python; only *timing* needs a
+            # clean trace
+            self._maybe_load_cache()
             hit = self._measured.get(key)
-            if hit is not None:
+            if hit is not None and any(b.name == hit for b in eligible):
+                # the eligibility re-check guards persisted hits: a file
+                # written under requires_grad=False may name a gradless
+                # backend this call can't use — fall through and re-measure
                 return hit
-            name = self._measure(key, eligible)
-            self._measured[key] = name
-            return name
+            if _trace_clean():
+                name, t = self._measure(key, eligible)
+                if t is not None:
+                    self._measured[key] = name
+                    self._measured_t[key] = t
+                    self._autoflush()
+                return name
         return min(eligible, key=lambda b: b.cost(key)).name
 
     def plans(self) -> list[GauntPlan]:
@@ -2158,11 +2280,22 @@ class GauntEngine:
         self._chains.clear()
         self._measured.clear()
         self._measured_t.clear()
+        # a cleared engine must behave like a fresh one: calibration is
+        # module-global (shared by every engine's cost model), so restore
+        # the defaults too, and re-arm the lazy persistent-cache load
+        reset_calibration()
+        self._cache_loaded = False
+        self.timing_runs = 0
 
     # -- measured autotune -------------------------------------------------
 
-    def _measure(self, key: PlanKey, eligible: list[Backend]) -> str:
+    def _measure(self, key: PlanKey,
+                 eligible: list[Backend]) -> tuple[str, float | None]:
+        """Time the eligible backends on synthetic inputs.  -> (name, t);
+        ``t`` is None when every backend failed and ``name`` is only the
+        cost-model fallback — callers must NOT cache that as a measurement."""
         args = _synthetic_inputs(key)
+        self.timing_runs += 1
         best_name, best_t = None, float("inf")
         for spec in eligible:
             if spec.needs_interpret and jax.default_backend() != "tpu":
@@ -2184,9 +2317,8 @@ class GauntEngine:
             if t < best_t:
                 best_name, best_t = spec.name, t
         if best_name is None:  # everything failed: fall back to the cost model
-            return min(eligible, key=lambda b: b.cost(key)).name
-        self._measured_t[key] = best_t
-        return best_name
+            return min(eligible, key=lambda b: b.cost(key)).name, None
+        return best_name, best_t
 
 
 def _trace_clean() -> bool:

@@ -233,13 +233,24 @@ class EquivariantServeEngine:
         precision selection, never a mid-serve timing pass.  Skipped for
         ``shard_data`` configs: sharded chains pin the 'tree' backend and
         never consult the measured cache, so seeding would be pure wasted
-        warmup latency."""
+        warmup latency.
+
+        If a persistent autotune cache is configured (``cfg.autotune_cache``
+        or $REPRO_AUTOTUNE_CACHE, see DESIGN.md §4.5), it is loaded FIRST:
+        on a warm host every seeded key hits the persisted table and warmup
+        performs zero timing runs — the chain measurements below become
+        lookups and the whole cold-start cliff collapses to one jit compile."""
         cfg = getattr(self.model, "cfg", None)
+        from repro.core import engine as _engine
+
+        eng = _engine.get_engine()
+        cache = getattr(cfg, "autotune_cache", None) if cfg is not None else None
+        if cache is not None:
+            eng.set_autotune_cache(cache)
+        eng._maybe_load_cache()
         if (cfg is not None
                 and getattr(cfg, "chain_tune", "heuristic") == "measure"
                 and not getattr(cfg, "shard_data", False)):
-            from repro.core import engine as _engine
-
             # mirror the traced call's key exactly: per-slot row count (the
             # step vmaps over slots, so the chain sees [max_atoms, channels]
             # leading dims per element) and the selfmix [A]*nu share pattern

@@ -326,3 +326,77 @@ def test_plan_batch_buckets_key_on_storage_dtype():
 
     assert_close(np.asarray(outb).astype(np.float64), np.asarray(out32),
                  dtype="bfloat16", tier="identity")
+
+
+# ---------------------------------------------------------------------------
+# measured-autotune key corners the persistent cache keys on (DESIGN.md §4.5)
+# ---------------------------------------------------------------------------
+
+
+def test_chain_measure_key_batch_hint_quantization_edges():
+    """batch_hint quantizes to the power-of-two ladder [8, 16384]: hints <= 8
+    share the bottom rung, hints above the cap collapse to ONE key — the
+    invariant that keeps the measured (and persisted) table bounded."""
+    def q(b):
+        return engine.GauntEngine._chain_measure_key(
+            (2, 2), 2, "float32", b, None, "sh", None).batch_hint
+
+    assert q(None) is None  # no hint: one unquantized key
+    for b in (1, 2, 7, 8):
+        assert q(b) == 8  # the ladder starts at 8
+    assert q(9) == 16 and q(12) == 16
+    assert q(16384) == 16384
+    for b in (16385, 100_000, 10**9):
+        assert q(b) == 16384  # everything above the cap is one key
+    # quantized hints literally share a measurement key
+    mk = engine.GauntEngine._chain_measure_key
+    assert mk((2, 2), 2, "float32", 3, None, "sh", None) == \
+        mk((2, 2), 2, "float32", 8, None, "sh", None)
+    assert mk((2, 2), 2, "float32", 20_000, None, "sh", None) == \
+        mk((2, 2), 2, "float32", 10**8, None, "sh", None)
+    # ...but a distinct out/share hint still splits the family
+    assert mk((2, 2), 2, "float32", 3, None, "fourier", None) != \
+        mk((2, 2), 2, "float32", 3, None, "sh", None)
+
+
+def test_auto_key_family_across_clear():
+    """The dtype='auto' family key and its siblings live and die together:
+    clear() empties every measurement store (and the timing counter), and a
+    fresh measurement afterwards repopulates the family from scratch."""
+    eng = engine.GauntEngine()
+    p = eng.plan(1, 1, 2, dtype="auto", tune="measure", batch_hint=16,
+                 requires_grad=False)
+    fam = engine.PlanKey(1, 1, 2, kind="pairwise", batch_hint=16, dtype="auto")
+    winner = eng._measured[fam]
+    assert winner == p.key.dtype and winner in ("float32", "bfloat16")
+    assert fam.with_dtype(winner) in eng._measured_t
+    assert eng.timing_runs > 0
+    eng.clear()
+    assert eng._measured == {} and eng._measured_t == {}
+    assert eng.timing_runs == 0
+    p2 = eng.plan(1, 1, 2, dtype="auto", tune="measure", batch_hint=16,
+                  requires_grad=False)
+    assert eng._measured[fam] == p2.key.dtype
+
+
+def test_clear_resets_calibration_so_fresh_engines_rank_identically():
+    """Satellite: _CALIB is module-global — clear() must restore defaults so
+    a calibrate_fused() run in one engine cannot skew another's rankings."""
+    from repro.core.engine import (get_calibration, reset_calibration,
+                                   set_calibration)
+
+    base = get_calibration()
+    try:
+        reset_calibration()
+        defaults = get_calibration()
+        k = engine.PlanKey(6, 6, 6, kind="pairwise", batch_hint=64)
+        pick_fresh = engine.GauntEngine().select(k)
+        # a "measured" calibration from some other engine skews the model...
+        set_calibration(fused_skinny=16.0, fused_skinny_measured=True)
+        assert get_calibration() != defaults
+        # ...until any engine's clear() restores the defaults
+        engine.GauntEngine().clear()
+        assert get_calibration() == defaults
+        assert engine.GauntEngine().select(k) == pick_fresh
+    finally:
+        set_calibration(**base)
