@@ -380,6 +380,100 @@ def run_chain_kernel(csv=True):
     return records
 
 
+def run_grid_gate(csv=True):
+    """Grid-resident equivariant gates (DESIGN.md §6.5): the fused pointwise
+    gate stage vs the SH-gate baseline, per chained workload.
+
+    Two workload families, both computing the IDENTICAL function on both
+    paths (the gate is affine on the sphere once its scalars are known, so
+    the grid evaluation is exact — the recorded ``err`` is storage roundoff,
+    not aliasing, and the CI guard holds it to ``BENCH_GUARD_GATE_TOL``):
+
+    * ``region_*`` — a TP -> gate -> selfmix layer region.  Resident path:
+      the gate fuses into chain 1 (pointwise stage on the product grid) and
+      the gated product enters chain 2 still Fourier-resident — one exit
+      conversion for the whole region.  SH path: chain 1 exits to SH, the
+      gate runs on coefficients, chain 2 re-enters — the exit/re-entry pair
+      the fusion elides.
+    * ``selfmix_*`` — MACE's gated many-body chain (grid_gate='on' layer
+      shape): gate fused into the selfmix kernel vs the ungated chain plus
+      the SH affine epilogue.
+
+    Each record carries the measured ``auto`` gate policy for the workload
+    (engine.select_gate) so the guard can fail a policy that picks the grid
+    gate where the bench shows it losing.
+    """
+    from repro.core.engine import _gate_sh
+
+    records = []
+    eng = engine.get_engine()
+
+    def _gp(B, seed):
+        rng = np.random.default_rng(seed)
+        return {"w1": jnp.asarray(rng.normal(size=(B, 16)), jnp.float32) * .3,
+                "w2": jnp.asarray(rng.normal(size=(16, B)), jnp.float32) * .3}
+
+    def _err(got, ref):
+        got = np.asarray(got, np.float64)
+        ref = np.asarray(ref, np.float64)
+        return float(np.abs(got - ref).max() / max(1.0, np.abs(ref).max()))
+
+    # ---- TP -> gate -> selfmix regions -----------------------------------
+    for name, L1, L2, Lout, B in [("region_L2xL2_B256", 2, 2, 2, 256),
+                                  ("region_L1xL1_B1024", 1, 1, 1, 1024)]:
+        Lt = L1 + L2
+        xs = [_rand((B, num_coeffs(L)), 30 + i) for i, L in enumerate((L1, L2))]
+        gp = _gp(B, 40)
+        kw = dict(tune="measure", batch_hint=B)
+        cp1g = eng.plan_chain((L1, L2), Lt, gate=True, out_hint="fourier",
+                              **kw)
+        cp1 = eng.plan_chain((L1, L2), Lt, **kw)
+        cp2f = eng.plan_chain((Lt, Lt), Lout, share_hint=(0, 0),
+                              entry_hint=("fourier", "fourier"), **kw)
+        cp2s = eng.plan_chain((Lt, Lt), Lout, share_hint=(0, 0), **kw)
+
+        def grid_path(_cp1g=cp1g, _cp2=cp2f, _xs=xs, _gp=gp):
+            mid = _cp1g.apply_jit(_xs, out_basis="fourier", gate_params=_gp)
+            return _cp2.apply_jit([mid, mid])
+
+        def sh_path(_cp1=cp1, _cp2=cp2s, _xs=xs, _gp=gp):
+            mid = _gate_sh(_gp, _cp1.apply_jit(_xs))
+            return _cp2.apply_jit([mid, mid])
+
+        err = _err(grid_path(), sh_path())
+        t_grid = time_fn(lambda: jax.block_until_ready(grid_path()))
+        t_sh = time_fn(lambda: jax.block_until_ready(sh_path()))
+        pol = eng.select_gate((L1, L2), Lt, batch_hint=B, out_hint="fourier")
+        record(records, f"engine_grid_gate_{name}", t_grid, echo=csv,
+               sh_gate_us=round(t_sh, 1),
+               speedup_vs_sh_gate=round(t_sh / t_grid, 2),
+               err=round(err, 6), auto_policy=pol,
+               backends=f"{cp1g.backend}+{cp2f.backend}")
+
+    # ---- MACE-shaped gated selfmix chains --------------------------------
+    for name, L, nu, B in [("selfmix_L2_nu3_B256", 2, 3, 256),
+                           ("selfmix_L3_nu3_B64", 3, 3, 64)]:
+        x = _rand((B, num_coeffs(L)), 50)
+        xs = [x] * nu
+        gp = _gp(B, 51)
+        kw = dict(tune="measure", batch_hint=B, share_hint=(0,) * nu)
+        cpg = eng.plan_chain((L,) * nu, L, gate=True, **kw)
+        cps = eng.plan_chain((L,) * nu, L, **kw)
+        err = _err(cpg.apply_jit(xs, gate_params=gp),
+                   _gate_sh(gp, cps.apply_jit(xs)))
+        t_grid = time_fn(
+            lambda: jax.block_until_ready(cpg.apply_jit(xs, gate_params=gp)))
+        t_sh = time_fn(
+            lambda: jax.block_until_ready(_gate_sh(gp, cps.apply_jit(xs))))
+        pol = eng.select_gate((L,) * nu, L, batch_hint=B,
+                              share_hint=(0,) * nu)
+        record(records, f"engine_grid_gate_{name}", t_grid, echo=csv,
+               sh_gate_us=round(t_sh, 1),
+               speedup_vs_sh_gate=round(t_sh / t_grid, 2),
+               err=round(err, 6), auto_policy=pol, backend=cpg.backend)
+    return records
+
+
 def run_mixed_precision(csv=True):
     """bf16 storage vs its f32 sibling, per workload (DESIGN.md §3.6).
 
@@ -531,5 +625,6 @@ if __name__ == "__main__":
     run()
     run_chain()
     run_chain_kernel()
+    run_grid_gate()
     run_mixed_precision()
     run_autotune_cache()

@@ -45,6 +45,7 @@ def main() -> None:
         "engine_batched": lambda: bench_engine.run_batched(backend=args.backend),
         "engine_chain": bench_engine.run_chain,
         "engine_chain_kernel": bench_engine.run_chain_kernel,
+        "engine_grid_gate": bench_engine.run_grid_gate,
         "engine_mixed": bench_engine.run_mixed_precision,
         "engine_autotune_cache": bench_engine.run_autotune_cache,
         "fig1a": lambda: bench_feature_interaction.run(

@@ -60,6 +60,10 @@ for r in recs:
     elif r["name"].startswith("engine_calibration"):
         print(f"  {r['name']:36s} factor={r.get('factor')} "
               f"(default {r.get('default_factor')})")
+    elif r["name"].startswith("engine_grid_gate"):
+        print(f"  {r['name']:36s} {r['us']:>10.1f} us  grid gate "
+              f"x{r.get('speedup_vs_sh_gate')} vs SH gate, err={r.get('err')}, "
+              f"auto->{r.get('auto_policy')}")
     elif r["name"].startswith("engine_mixed_precision"):
         print(f"  {r['name']:36s} {r['us']:>10.1f} us  bf16 "
               f"x{r.get('speedup_vs_f32')} vs f32, err={r.get('err')}, "
@@ -202,6 +206,37 @@ for r in recs:
     if not r.get("picks_match", False):
         fail.append(f"{r['name']}: warm process selected differently from "
                     f"the cold one (persisted table is not faithful)")
+
+# guard 6 — grid-resident gates (DESIGN.md §6.5): exactness first — the
+# gate is affine on the sphere once its scalars are known, so grid-vs-SH
+# disagreement is storage roundoff, NOT aliasing; err above tolerance means
+# the fused pointwise stage or the quadrature projection broke.  Then
+# policy honesty: where the measured gate policy (engine.select_gate)
+# picked the grid gate, the bench re-measure must not show it losing to
+# the SH epilogue; and the fused gate must win somewhere, else the gate
+# fusion (and its autotune fold) is dead weight.  All knobs env-tunable,
+# modeled on guards 3/4; BENCH_GUARD_REQUIRE_GATE_WIN=0 for hosts where
+# the SH epilogue honestly wins everywhere.
+GATE_TOL = float(os.environ.get("BENCH_GUARD_GATE_TOL", "1e-3"))
+GATE_FLOOR = float(os.environ.get("BENCH_GUARD_GATE_FLOOR", "0.9"))
+REQUIRE_GATE_WIN = os.environ.get("BENCH_GUARD_REQUIRE_GATE_WIN", "1") != "0"
+gate_recs = [r for r in recs if r["name"].startswith("engine_grid_gate_")]
+for r in gate_recs:
+    e = r.get("err")
+    if e is not None and e > GATE_TOL:
+        fail.append(f"{r['name']}: grid-gate error {e} exceeds "
+                    f"{GATE_TOL} (the affine gate is exact on the grid — "
+                    f"an err this large means the fused stage broke)")
+    if r.get("auto_policy") == "grid" and \
+            r.get("speedup_vs_sh_gate", 0.0) < GATE_FLOOR:
+        fail.append(f"{r['name']}: gate policy picked 'grid' but it LOST "
+                    f"to the SH gate (x{r.get('speedup_vs_sh_gate')} < "
+                    f"{GATE_FLOOR})")
+if gate_recs and REQUIRE_GATE_WIN and not any(
+        r.get("speedup_vs_sh_gate", 0.0) >= 1.0 for r in gate_recs):
+    fail.append("engine_grid_gate: the fused grid gate beat the SH gate on "
+                "NO benchmarked workload (set BENCH_GUARD_REQUIRE_GATE_WIN=0 "
+                "if the SH epilogue honestly wins everywhere on this host)")
 
 if fail:
     print("BENCH GUARD FAILURES:")

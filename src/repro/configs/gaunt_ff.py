@@ -53,6 +53,16 @@ class EquivariantConfig:
     # falls back to $REPRO_AUTOTUNE_CACHE, else persistence stays off.
     # Pre-populate with `python -m repro.core.autotune_cache --cache <path>`.
     autotune_cache: str | None = None
+    # grid-resident equivariant gates (DESIGN.md §6.5): where the layer gate
+    # runs.  'off' (default) applies gate_apply on SH coefficients between
+    # chain exits; 'on' keeps the gate on the resident grid — MACE fuses the
+    # affine gate g*f + beta*Y00 into the selfmix chain (pointwise stage in
+    # the collocation kernel; the layer reorders to gate-before-mb_mix, an
+    # equally expressive reparameterization), SEGNN evaluates the gate on the
+    # S^2 quadrature grid.  'auto' asks the engine's measured gate policy
+    # (engine.select_gate, keyed like chain plans) per workload; requires
+    # chain_tune='measure', else it resolves to 'off'.
+    grid_gate: str = "off"
 
 
 gaunt_mace_ff = EquivariantConfig(

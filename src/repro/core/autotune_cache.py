@@ -57,7 +57,8 @@ Offline pre-population::
 
 sweeps the known workload grid (the benchmark pairwise/conv/chain keys at
 both storage precisions plus the 'auto' families, the serve selfmix chain
-keys, and ``calibrate_fused`` per dtype) so production processes boot with a
+keys — ungated, gate-fused, and the ``grid_gate='auto'`` policy family —
+and ``calibrate_fused`` per dtype) so production processes boot with a
 fully warm selection table.  ``scripts/calibrate.py`` is a thin wrapper.
 """
 from __future__ import annotations
@@ -158,6 +159,10 @@ def _entry_valid(key, backend: str) -> bool:
     if key.dtype not in _RDTYPE:
         return False
     if key.kind == "chain":
+        if ("gate", "policy") in key.extra:
+            # grid_gate='auto' policy keys (engine.select_gate) store the
+            # gate placement winner, not a chain backend
+            return backend in ("grid", "sh")
         return backend in CHAIN_BACKENDS
     return backend in _REGISTRY
 
@@ -315,6 +320,15 @@ def _sweep(eng, fast: bool, serve_rows: tuple = (1024,)) -> int:
             eng.plan_chain((_cfg.L,) * _cfg.nu, _cfg.L, tune="measure",
                            batch_hint=int(rows), share_hint=(0,) * _cfg.nu,
                            dtype=d)
+            # gate-fused siblings + the grid_gate='auto' policy family
+            # (DESIGN.md §6.5): a serve config with grid_gate != 'off'
+            # seeds exactly these keys in warmup()
+            eng.plan_chain((_cfg.L,) * _cfg.nu, _cfg.L, tune="measure",
+                           batch_hint=int(rows), share_hint=(0,) * _cfg.nu,
+                           dtype=d, gate=True)
+            eng.select_gate((_cfg.L,) * _cfg.nu, _cfg.L, dtype=d,
+                            batch_hint=int(rows),
+                            share_hint=(0,) * _cfg.nu)
     return len(eng._measured) - n0
 
 

@@ -42,6 +42,11 @@ __all__ = [
     "chain_sample_grid",
     "chain_project_sh",
     "chain_project_grid",
+    "chain_l0",
+    "quad_sample_sh",
+    "quad_project_sh",
+    "quad_sample_fourier",
+    "quad_project_fourier",
     "gaunt_dense",
     "cache_stats",
     "clear_all",
@@ -295,6 +300,61 @@ def fused_matrices(L1: int, L2: int, Lout: int, pad_lanes: bool = True,
 
 
 @lru_cache(maxsize=None)
+def chain_l0(Ls: tuple, entries: tuple = None) -> np.ndarray:
+    """C [d_1, ..., d_n] float64: the l = 0 coefficient of an n-way product
+    as a multilinear form over the operands,
+
+        s = einsum('...a,...b,...,ab...->...', x_1, ..., x_n, C),
+
+    built by contracting the chain sampling matrices against the l = 0
+    projection column of the alias-free product grid — exact.  This is how
+    a gate-fused chain obtains its per-row gate scalars *before* dispatch:
+    the fused kernels cannot compute the (channel-mixing) gate MLP on the
+    blocked product grid, but the scalars only need the product's l = 0
+    component, which is this cheap d^n-sized contraction away.  'grid'
+    entries index the real-stacked half-grid layout of `chain_sample_grid`.
+    """
+    Ls = tuple(int(L) for L in Ls)
+    Ltot = sum(Ls)
+    entries = ("sh",) * len(Ls) if entries is None else tuple(entries)
+    Ts = [chain_sample_sh(L, Ltot) if e == "sh" else chain_sample_grid(L, Ltot)
+          for L, e in zip(Ls, entries)]
+    p0 = chain_project_sh(Ltot, 0)[:, 0]
+    letters = "abcdefghij"[: len(Ls)]
+    expr = ",".join(c + "z" for c in letters) + ",z->" + letters
+    return np.einsum(expr, *Ts, p0, optimize=True)
+
+
+# --------------------------------------------------------------------------
+# S^2 quadrature matrices (Gauss-Legendre x equispaced phi, DESIGN.md §6.5)
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=None)
+def quad_sample_sh(L: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """A [(L+1)^2, G]: SH coefficients -> quadrature-grid samples (float64)."""
+    return _fx.s2quad_sample_sh(L, n_theta, n_phi)
+
+
+@lru_cache(maxsize=None)
+def quad_project_sh(Lout: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """P [G, (Lout+1)^2]: weighted quadrature projection back onto SH."""
+    return _fx.s2quad_project_sh(Lout, n_theta, n_phi)
+
+
+@lru_cache(maxsize=None)
+def quad_sample_fourier(L: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """M [2*(2L+1)*(L+1), G]: real-stacked half grid -> quadrature samples."""
+    return _fx.s2quad_sample_fourier(L, n_theta, n_phi)
+
+
+@lru_cache(maxsize=None)
+def quad_project_fourier(L: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """Z [G, 2L+1, L+1] complex128: quadrature samples -> half product grid."""
+    return _fx.s2quad_project_fourier(L, n_theta, n_phi)
+
+
+@lru_cache(maxsize=None)
 def gaunt_dense(L1: int, L2: int, Lout: int, dtype: str = "float32") -> np.ndarray:
     """The exact dense real-Gaunt tensor [(L1+1)^2, (L2+1)^2, (Lout+1)^2]."""
     return real_gaunt_tensor(L1, L2, Lout).astype(dtype)
@@ -308,7 +368,8 @@ _CACHED = (
     _y_raw, _z_raw, y_dense, z_dense, y_packed, z_packed, y_half, z_half,
     pack_index, filter_fourier_col, conv_u_index, cg_11_blocks, fused_matrices,
     chain_matrices, chain_sample_sh, chain_sample_grid, chain_project_sh,
-    chain_project_grid, gaunt_dense,
+    chain_project_grid, chain_l0, quad_sample_sh, quad_project_sh,
+    quad_sample_fourier, quad_project_fourier, gaunt_dense,
 )
 
 

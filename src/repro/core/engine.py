@@ -160,6 +160,63 @@ def _chain_entry_cast(x, rd):
 
 
 # --------------------------------------------------------------------------
+# the affine gate (DESIGN.md §6.5) — models.gate_apply, given its l=0 scalars
+# --------------------------------------------------------------------------
+
+# Y_00 = 1/(2 sqrt(pi)): one unit of SH coefficient 0 is this constant on S^2
+_GATE_C0 = 0.5 / math.sqrt(math.pi)
+
+
+def _gate_mlp(p, s):
+    """The gate's scalar MLP: l=0 scalars s [..., C] -> gate g [..., C]."""
+    return jax.nn.sigmoid(jax.nn.silu(s @ p["w1"]) @ p["w2"])
+
+
+def _gate_coeffs(p, s):
+    """(g, beta): models.gate_apply in its affine form.
+
+    Given the l=0 scalars s, the gate is  gate(x) = g*x + beta*e0  on packed
+    SH coefficients — equivalently  gate(f) = g*f + beta*Y00  pointwise on
+    sphere samples — with beta = silu(s) - g*s, so coefficient 0 lands
+    exactly on silu(s) while every l > 0 coefficient scales by g.  Being
+    affine in the signal (g and beta depend only on s), the gate commutes
+    with every linear stage (projection, degree truncation), which is what
+    lets it fuse into the collocation kernel as a per-row scale+bias on the
+    VMEM-resident product grid — exactly, with zero aliasing.
+    """
+    g = _gate_mlp(p, s)
+    return g, jax.nn.silu(s) - g * s
+
+
+def _gate_sh(p, x):
+    """Apply the gate on packed SH coefficients (== models.gate_apply)."""
+    s = x[..., 0]
+    g = _gate_mlp(p, s)
+    return (x * g[..., None]).at[..., 0].set(jax.nn.silu(s))
+
+
+def _gate_rep(p, rep):
+    """Apply the gate on a Fourier-resident Rep WITHOUT leaving the basis.
+
+    The l=0 scalars come from the z-transform's l0 row — the torus (0,0)
+    coefficient is NOT the spherical mean (higher-degree S_l0 modes have
+    nonzero torus means), so a bare grid read would be wrong.  The whole
+    grid then scales by g, and beta*Y00 lands on the (u,v) = (0,0) mode
+    (a constant on the grid IS a pure (0,0) torus coefficient).
+    """
+    F = rep.data
+    L = rep.L
+    z0 = jnp.asarray((constants.z_half if rep.form == "half"
+                      else constants.z_dense)(L, 0, F.dtype.name)[:, :, 0])
+    s = jnp.einsum("...uv,uv->...", F, z0).real
+    g, beta = _gate_coeffs(p, s)
+    F = F * g[..., None, None].astype(F.dtype)
+    vc = 0 if rep.form == "half" else L
+    F = F.at[..., L, vc].add((beta * _GATE_C0).astype(F.dtype))
+    return dataclasses.replace(rep, data=F)
+
+
+# --------------------------------------------------------------------------
 # plan keys and backend registry
 # --------------------------------------------------------------------------
 
@@ -809,11 +866,13 @@ class ChainPlan:
     donate: bool = False
     shard: tuple = (None, (), "constraint")   # (mesh, dp_axes, mode)
     backend: str = "tree"    # one of CHAIN_BACKENDS (DESIGN.md §6.4)
+    gate: bool = False       # fused pointwise gate stage (DESIGN.md §6.5)
     apply: Callable = dataclasses.field(repr=False, compare=False, default=None)
     _jit_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                          compare=False)
 
-    def apply_jit(self, xs, weights=None, w_out=None, out_basis: str = "sh"):
+    def apply_jit(self, xs, weights=None, w_out=None, out_basis: str = "sh",
+                  gate_params=None):
         """``apply`` behind a cached ``jax.jit`` — the default consumer route.
 
         Duplicate operands are detected BEFORE the jit boundary: jit hands
@@ -822,9 +881,20 @@ class ChainPlan:
         the duplication pattern and sees each unique operand exactly once.
         With ``donate`` the unique operand list is donated to XLA (dedup
         also means a shared operand's buffer is never donated twice).
+
+        Gated plans (``plan_chain(..., gate=True)``) REQUIRE ``gate_params``
+        (the models' gate MLP dict {"w1", "w2"}); ungated plans reject it —
+        the gate changes the plan's math, so it must be part of the plan
+        identity, not a per-call surprise.
         """
         from .rep import Rep
 
+        if self.gate and gate_params is None:
+            raise ValueError("this chain plan was built with gate=True; "
+                             "apply needs gate_params={'w1', 'w2'}")
+        if gate_params is not None and not self.gate:
+            raise ValueError("gate_params passed to an ungated chain plan — "
+                             "build it with plan_chain(..., gate=True)")
         xs = list(xs)
         uniq, idx_map, seen = [], [], {}
         for x in xs:
@@ -845,15 +915,17 @@ class ChainPlan:
         fn = self._jit_cache.get(key)
         if fn is None:
             imap = tuple(idx_map)
+            gated = self.gate
 
-            def run(uniq, ws, w_out):
+            def run(uniq, ws, w_out, gp):
+                kw = {"gate_params": gp} if gated else {}
                 return self.apply([uniq[i] for i in imap], weights=ws,
-                                  w_out=w_out, out_basis=out_basis)
+                                  w_out=w_out, out_basis=out_basis, **kw)
 
             donate_args = (0,) if self.donate and \
                 jax.default_backend() != "cpu" else ()
             fn = self._jit_cache[key] = jax.jit(run, donate_argnums=donate_args)
-        return fn(uniq, ws, w_out)
+        return fn(uniq, ws, w_out, gate_params)
 
     @property
     def interior_pairs_eliminated(self) -> int:
@@ -868,13 +940,15 @@ class ChainPlan:
                 "looped": (2 * (n - 1), n - 1)}
 
     def describe(self) -> str:
+        g = " +gate" if self.gate else ""
         if self.backend.startswith("fused"):
             return (f"chain(Ls={list(self.Ls)}, Lout={self.Lout}, "
-                    f"dtype={self.dtype}) -> {self.backend} "
-                    f"[collocation: 1 dispatch, 0 conversions]")
+                    f"dtype={self.dtype}) -> {self.backend}{g} "
+                    f"[collocation: 1 dispatch, 0 conversions"
+                    f"{', fused pointwise gate' if self.gate else ''}]")
         return (f"chain(Ls={list(self.Ls)}, Lout={self.Lout}, "
                 f"conversion={self.conversion}, conv={self.conv}, "
-                f"dtype={self.dtype}, tree={self.tree}) -> {self.backend} "
+                f"dtype={self.dtype}, tree={self.tree}) -> {self.backend}{g} "
                 f"[-{self.interior_pairs_eliminated} interior pairs]")
 
 
@@ -1029,17 +1103,27 @@ def _build_chain_looped(Ls: tuple, Lout: int, dtype: str,
 
 
 def _build_chain_fused(Ls: tuple, Lout: int, dtype: str,
-                       pallas: bool) -> Callable:
+                       pallas: bool, gate: bool = False) -> Callable:
     """The n-way collocation chain (DESIGN.md §6.4): sample every operand
     onto the shared alias-free product grid, multiply pointwise n-way,
     project once — ONE dispatch (`fused_pallas`: one MXU-resident
     pallas_call; `fused_xla`: the same matrices in plain jnp).  Zero basis
     conversions: Fourier-resident operands enter as grids through the
     grid-evaluation sampling matrix, and a 'fourier' exit leaves the half
-    product grid resident."""
+    product grid resident.
+
+    ``gate=True`` fuses the models' equivariant gate into the kernel's
+    pointwise stage (DESIGN.md §6.5): the product's l=0 scalars are a cheap
+    multilinear form of the operands (`constants.chain_l0` — they cannot
+    come from the kernel's own output without a second dispatch), the gate
+    MLP turns them into per-row (g, beta) outside the kernel, and the
+    kernel applies ``v <- v*g + beta*Y00`` on the VMEM-resident product
+    values before projection — still ONE `pallas_call`, exact (the gate is
+    affine given s), and valid for both the SH and the resident exit."""
     from repro.core import constants as _c
 
     rd = _RDTYPE[dtype]
+    acc = jnp.dtype(_acc_dtype_str(dtype))
     Ltot = sum(Ls)
     # warm the all-SH matrices at build time with the EXACT argument tuples
     # the runners use (lru_cache keys on raw args, so entries=None would
@@ -1049,12 +1133,20 @@ def _build_chain_fused(Ls: tuple, Lout: int, dtype: str,
     if dtype != _acc_dtype_str(dtype):
         _c.chain_matrices(tuple(Ls), Lout, ("sh",) * len(Ls), "sh",
                           dtype=_acc_dtype_str(dtype))
+    if gate:
+        _c.chain_l0(tuple(Ls), ("sh",) * len(Ls))
 
-    def apply(xs, weights=None, w_out=None, out_basis: str = "sh"):
+    def apply(xs, weights=None, w_out=None, out_basis: str = "sh",
+              gate_params=None):
         from repro.kernels.gaunt_fused import (gaunt_chain_fused_pallas,
                                                gaunt_chain_fused_xla)
         from .rep import Rep
 
+        if gate and gate_params is None:
+            raise ValueError("gated chain plan requires gate_params")
+        if gate_params is not None and not gate:
+            raise ValueError("gate_params on an ungated chain plan — build "
+                             "it with plan_chain(..., gate=True)")
         xs = list(xs)
         if len(xs) != len(Ls):
             raise ValueError(f"chain got {len(xs)} operands for degrees {Ls}")
@@ -1085,15 +1177,55 @@ def _build_chain_fused(Ls: tuple, Lout: int, dtype: str,
                 raise ValueError(f"out_basis='fourier' keeps the full grid "
                                  f"(L={Ltot}); plan with Lout={Ltot} or "
                                  "project to SH")
+        gate_arg = None
+        if gate:
+            # the product's l=0 scalars as a multilinear form of the
+            # (already weighted) operands; grid entries contract through
+            # their real-stacked form, mirroring the kernel's preparation
+            flat = []
+            for a, e in zip(arrs, entries):
+                if e == "grid":
+                    Fl = a.reshape(a.shape[:-2] + (-1,))
+                    a = jnp.concatenate([Fl.real, Fl.imag], axis=-1)
+                flat.append(a.astype(acc))
+            M = jnp.asarray(_c.chain_l0(tuple(Ls), tuple(entries)), acc)
+            letters = "abcdefghij"[: len(Ls)]
+            expr = (",".join("..." + c for c in letters)
+                    + "," + letters + "->...")
+            s = jnp.einsum(expr, *flat, M)
+            g, beta = _gate_coeffs(gate_params, s)
+            gate_arg = (g, beta * _GATE_C0)
         fn = gaunt_chain_fused_pallas if pallas else gaunt_chain_fused_xla
         out = fn(arrs, Ls, Lout, entries=tuple(entries),
                  out_entry="grid" if out_basis == "fourier" else "sh",
-                 dtype=dtype)
+                 dtype=dtype, gate=gate_arg)
         if out_basis == "fourier":
             from .rep import Rep as _Rep
 
             return _Rep(out, Ltot, "fourier", "half")
         return _wmul(out.astype(rd), w_out, Lout)
+
+    return apply
+
+
+def _wrap_chain_gate(base: Callable, Lout: int) -> Callable:
+    """Gate a spectral chain backend (tree/looped) at its exit: SH exits
+    gate on the packed coefficients (before ``w_out`` — the gate acts on
+    the raw chain product, matching the fused stage's placement), resident
+    exits gate on the grid itself via `_gate_rep` — no conversions added
+    either way.  The collocation backends never use this wrapper: they fuse
+    the stage into the kernel (`_build_chain_fused(gate=True)`)."""
+
+    def apply(xs, weights=None, w_out=None, out_basis: str = "sh",
+              gate_params=None):
+        if gate_params is None:
+            raise ValueError("gated chain plan requires gate_params")
+        out = base(xs, weights=weights, w_out=None, out_basis=out_basis)
+        if out_basis == "fourier":
+            return _gate_rep(gate_params, out)
+        # the f32 gate MLP must not promote a bf16 chain exit: gate in f32
+        # (the accumulation dtype), round once back to the storage dtype
+        return _wmul(_gate_sh(gate_params, out).astype(out.dtype), w_out, Lout)
 
     return apply
 
@@ -1111,9 +1243,10 @@ def _constrained_chain_apply(apply: Callable, mesh, dp: tuple) -> Callable:
             return Rep(_c(x.data, 2), x.L, x.basis, x.form)
         return con(x) if jnp.ndim(x) > er else x
 
-    def wrapped(xs, weights=None, w_out=None, out_basis: str = "sh"):
+    def wrapped(xs, weights=None, w_out=None, out_basis: str = "sh", **kw):
         xs = [_c(x, 1) for x in xs]
-        out = apply(xs, weights=weights, w_out=w_out, out_basis=out_basis)
+        out = apply(xs, weights=weights, w_out=w_out, out_basis=out_basis,
+                    **kw)
         return _c(out, 1)
 
     return wrapped
@@ -1875,10 +2008,23 @@ class GauntEngine:
                    batch_hint: int | None = None,
                    entry_hint: tuple | None = None,
                    out_hint: str = "sh",
-                   share_hint: tuple | None = None) -> ChainPlan:
+                   share_hint: tuple | None = None,
+                   gate: bool = False) -> ChainPlan:
         """Plan a chained product  x_1 (x) ... (x) x_n  as ONE pass.
 
         Ls: per-operand max degrees (n >= 2).  Lout defaults to sum(Ls).
+
+        ``gate=True`` makes the equivariant gate (models.gate_apply) a
+        chain-INTERIOR stage (DESIGN.md §6.5): applies take a required
+        ``gate_params`` and return gate(product) — on the collocation
+        backends the gate fuses into the kernel's pointwise stage (still
+        ONE dispatch; l=0 scalars via `constants.chain_l0`), on tree/looped
+        it runs at the exit (a resident 'fourier' exit gates the grid
+        in-basis, so a whole TP -> gate -> selfmix layer keeps a single
+        entry/exit conversion pair).  ``w_out`` applies after the gate.
+        Gated plans key separately everywhere (plan cache and measured
+        autotune: the measure key gains ("gate", 1), so ungated persisted
+        entries stay valid).
 
         Backend dispatch (DESIGN.md §6.4): ``backend`` picks a chain
         realization from :data:`CHAIN_BACKENDS` — 'tree' (the resident
@@ -1987,7 +2133,7 @@ class GauntEngine:
             dts = self._select_chain_dtype(
                 Ls, Lout, batch_hint, sharded=bool(mesh is not None and dp),
                 entry_hint=entry_hint, out_hint=out_hint,
-                share_hint=share_hint, tune=tune)
+                share_hint=share_hint, tune=tune, gate=gate)
         else:
             dts = _dtype_str(dtype)
         if backend is None:
@@ -1998,27 +2144,34 @@ class GauntEngine:
                                              sharded=bool(mesh is not None and dp),
                                              entry_hint=entry_hint,
                                              out_hint=out_hint,
-                                             share_hint=share_hint)
+                                             share_hint=share_hint,
+                                             gate=gate)
         key = (Ls, Lout, conversion, conv, dts, tree, donate, mesh, dp, mode,
-               backend)
+               backend, gate)
         hit = self._chains.get(key)
         if hit is not None:
             return hit
         if backend == "tree":
             apply = _build_chain(Ls, Lout, conversion, conv, dts, tree,
                                  mesh, dp, mode)
+            if gate:
+                apply = _wrap_chain_gate(apply, Lout)
         elif backend == "looped":
             apply = _build_chain_looped(Ls, Lout, dts, self)
+            if gate:
+                apply = _wrap_chain_gate(apply, Lout)
         else:
             apply = _build_chain_fused(Ls, Lout, dts,
-                                       pallas=(backend == "fused_pallas"))
+                                       pallas=(backend == "fused_pallas"),
+                                       gate=gate)
             if mesh is not None and dp:
                 # collocation is row-parallel: rank-aware row constraints on
                 # the flattened operands/outputs let the partitioner shard it
                 apply = _constrained_chain_apply(apply, mesh, dp)
         cp = ChainPlan(Ls=Ls, Lout=Lout, conversion=conversion, conv=conv,
                        dtype=dts, tree=tree, donate=donate,
-                       shard=(mesh, dp, mode), backend=backend, apply=apply)
+                       shard=(mesh, dp, mode), backend=backend, gate=gate,
+                       apply=apply)
         self._chains[key] = cp
         return cp
 
@@ -2026,7 +2179,8 @@ class GauntEngine:
                       batch_hint: int | None, sharded: bool,
                       entry_hint: tuple | None = None,
                       out_hint: str = "sh",
-                      share_hint: tuple | None = None) -> str:
+                      share_hint: tuple | None = None,
+                      gate: bool = False) -> str:
         """Measured chain-backend selection, cached like plan autotune.
 
         The measurement mirrors the real call as closely as the hints allow:
@@ -2048,7 +2202,7 @@ class GauntEngine:
         if sharded:
             return "tree"  # the only backend with per-shard grid combination
         key = self._chain_measure_key(Ls, Lout, dts, batch_hint, entry_hint,
-                                      out_hint, share_hint)
+                                      out_hint, share_hint, gate=gate)
         batch_hint = key.batch_hint
         entries, share = key.opt("entries"), key.opt("share")
         # consult the persisted table before the trace-clean bail: loading
@@ -2080,15 +2234,23 @@ class GauntEngine:
                     x = Rep.from_sh(x, L).to_fourier("half")
                 made[(g, L, e)] = x
             xs.append(x)
+        # synthetic gate MLP sized so the per-row scalar path costs what the
+        # real [rows, channels] call costs (the synthetic lead is bare [B],
+        # so the MLP contracts B with a hidden width of 16 — same FLOPs
+        # shape as the models' [n, C] @ [C, 16] gate head)
+        gp = ({"w1": jnp.asarray(rng.normal(size=(B, 16)), jnp.float32),
+               "w2": jnp.asarray(rng.normal(size=(16, B)), jnp.float32)}
+              if gate else None)
         best_name, best_t = "tree", float("inf")
         for name in candidates:
             try:
-                cp = self.plan_chain(Ls, Lout, dtype=dts, backend=name)
+                cp = self.plan_chain(Ls, Lout, dtype=dts, backend=name,
+                                     gate=gate)
                 # eager apply, not a fresh jit: apply_jit is the consumer
                 # route and its pre-jit dedup is exactly what makes shared
                 # operands convert once in tree's real cost
                 fn = (lambda _c=cp: jax.block_until_ready(
-                    _c.apply_jit(xs, out_basis=out_hint)))
+                    _c.apply_jit(xs, out_basis=out_hint, gate_params=gp)))
                 fn()  # compile + warm
                 ts = []
                 for _ in range(3):
@@ -2114,10 +2276,13 @@ class GauntEngine:
     @staticmethod
     def _chain_measure_key(Ls: tuple, Lout: int, dts: str,
                            batch_hint: int | None, entry_hint: tuple | None,
-                           out_hint: str, share_hint: tuple | None) -> PlanKey:
+                           out_hint: str, share_hint: tuple | None,
+                           gate: bool = False) -> PlanKey:
         """The measured-autotune cache key for one chain shape.  Keys that
         differ only in ``dtype`` form one family (``PlanKey.with_dtype``);
-        'auto' is a valid member naming the family's resolved winner."""
+        'auto' is a valid member naming the family's resolved winner.
+        Gated chains append ("gate", 1) — ONLY when gated, so ungated keys
+        (and every persisted pre-gate cache entry) stay byte-identical."""
         if batch_hint is not None:
             q = 8
             while q < min(batch_hint, 16384):
@@ -2125,21 +2290,25 @@ class GauntEngine:
             batch_hint = q
         entries = entry_hint or ("sh",) * len(Ls)
         share = share_hint or tuple(range(len(Ls)))
+        extra = (("Ls", Ls), ("entries", entries),
+                 ("out", out_hint), ("share", share))
+        if gate:
+            extra = extra + (("gate", 1),)
         return PlanKey(max(Ls), min(Ls), Lout, kind="chain",
-                       batch_hint=batch_hint, dtype=dts,
-                       extra=(("Ls", Ls), ("entries", entries),
-                              ("out", out_hint), ("share", share)))
+                       batch_hint=batch_hint, dtype=dts, extra=extra)
 
     def _select_chain_dtype(self, Ls: tuple, Lout: int,
                             batch_hint: int | None, sharded: bool,
                             entry_hint: tuple | None, out_hint: str,
-                            share_hint: tuple | None, tune: str) -> str:
+                            share_hint: tuple | None, tune: str,
+                            gate: bool = False) -> str:
         """Resolve a chain ``dtype='auto'`` request: measure the f32 and bf16
         siblings of the key family and keep bf16 only where it actually wins.
         Falls back to float32 whenever measurement cannot run (heuristic
         mode, dirty trace, sharded mesh)."""
         auto_key = self._chain_measure_key(Ls, Lout, "auto", batch_hint,
-                                           entry_hint, out_hint, share_hint)
+                                           entry_hint, out_hint, share_hint,
+                                           gate=gate)
         self._maybe_load_cache()
         hit = self._measured.get(auto_key)
         if hit is not None:
@@ -2150,9 +2319,10 @@ class GauntEngine:
         for dts in ("float32", "bfloat16"):
             self._select_chain(Ls, Lout, dts, batch_hint, sharded=False,
                                entry_hint=entry_hint, out_hint=out_hint,
-                               share_hint=share_hint)
+                               share_hint=share_hint, gate=gate)
             t = self._measured_t.get(self._chain_measure_key(
-                Ls, Lout, dts, batch_hint, entry_hint, out_hint, share_hint))
+                Ls, Lout, dts, batch_hint, entry_hint, out_hint, share_hint,
+                gate=gate))
             if t is not None:
                 times[dts] = t
         winner = "bfloat16" if times.get("bfloat16", float("inf")) < \
@@ -2163,6 +2333,103 @@ class GauntEngine:
             # a process-lifetime (or persisted) precision decision
             self._measured[auto_key] = winner
             self._autoflush()
+        return winner
+
+    def select_gate(self, Ls, Lout: int | None = None, *, dtype="float32",
+                    batch_hint: int | None = None,
+                    entry_hint: tuple | None = None, out_hint: str = "sh",
+                    share_hint: tuple | None = None) -> str:
+        """Measured grid-vs-SH gate policy for one chain workload — the
+        decision behind ``cfg.grid_gate='auto'``.
+
+        Times the gate-fused chain plan (`plan_chain(..., gate=True)`)
+        against the ungated plan followed by the SH gate epilogue; for a
+        resident ``out_hint='fourier'`` the epilogue pays the full
+        exit -> gate -> re-entry round trip, which is exactly what fusion
+        elides.  Returns 'grid' | 'sh'.  Keyed like chain plans (the chain
+        measure key + ("gate", "policy")), cached in-process, persisted
+        with the autotune table; inside a jit trace an unseeded key
+        resolves to 'sh' (the safe no-reorder default) without caching.
+        """
+        Ls = tuple(int(L) for L in Ls)
+        Lout = sum(Ls) if Lout is None else int(Lout)
+        if isinstance(dtype, str) and dtype == "auto":
+            dts = self._select_chain_dtype(
+                Ls, Lout, batch_hint, sharded=False, entry_hint=entry_hint,
+                out_hint=out_hint, share_hint=share_hint, tune="measure",
+                gate=True)
+        else:
+            dts = _dtype_str(dtype)
+        base = self._chain_measure_key(Ls, Lout, dts, batch_hint, entry_hint,
+                                       out_hint, share_hint)
+        key = dataclasses.replace(base,
+                                  extra=base.extra + (("gate", "policy"),))
+        self._maybe_load_cache()
+        hit = self._measured.get(key)
+        if hit is not None:
+            return hit
+        if not _trace_clean():
+            return "sh"
+        entries, share = base.opt("entries"), base.opt("share")
+        B = base.batch_hint or 256
+        rng = np.random.default_rng(0)
+        rd = _RDTYPE[dts]
+        from .rep import Rep
+
+        xs, made = [], {}
+        for L, e, g in zip(Ls, entries, share):
+            x = made.get((g, L, e))
+            if x is None:
+                x = jnp.asarray(rng.normal(size=(B, num_coeffs(L))), dtype=rd)
+                if e == "fourier":
+                    x = Rep.from_sh(x, L).to_fourier("half")
+                made[(g, L, e)] = x
+            xs.append(x)
+        gp = {"w1": jnp.asarray(rng.normal(size=(B, 16)), jnp.float32),
+              "w2": jnp.asarray(rng.normal(size=(16, B)), jnp.float32)}
+        self.timing_runs += 1
+
+        def _time(fn):
+            fn()  # compile + warm
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fn()
+                ts.append(time.perf_counter() - t0)
+            return sorted(ts)[1]
+
+        kw = dict(dtype=dts, tune="measure", batch_hint=batch_hint,
+                  entry_hint=entry_hint, out_hint=out_hint,
+                  share_hint=share_hint)
+        try:
+            cpg = self.plan_chain(Ls, Lout, gate=True, **kw)
+            cps = self.plan_chain(Ls, Lout, **kw)
+
+            def grid_fn():
+                jax.block_until_ready(
+                    cpg.apply_jit(xs, out_basis=out_hint, gate_params=gp))
+
+            if out_hint == "fourier":
+
+                def sh_fn():
+                    rep = cps.apply_jit(xs, out_basis="fourier")
+                    sh = rep.to_sh()
+                    out = Rep.from_sh(_gate_sh(gp, sh.data),
+                                      rep.L).to_fourier("half")
+                    jax.block_until_ready(out.data)
+
+            else:
+
+                def sh_fn():
+                    jax.block_until_ready(_gate_sh(gp, cps.apply_jit(xs)))
+
+            tg, tsh = _time(grid_fn), _time(sh_fn)
+        except Exception:  # noqa: BLE001 — a failed measurement means 'sh'
+            return "sh"
+        winner = "grid" if tg < tsh else "sh"
+        self._measured[key] = winner
+        self._measured_t[key] = min(tg, tsh)
+        self._autoflush()
         return winner
 
     def _select_dtype(self, make_key: Callable, tune: str,

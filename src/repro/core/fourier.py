@@ -52,6 +52,13 @@ __all__ = [
     "grid_resize_half",
     "pack_hermitian",
     "unpack_hermitian",
+    "s2quad_size",
+    "s2quad_angles",
+    "s2quad_exact_degree",
+    "s2quad_sample_sh",
+    "s2quad_project_sh",
+    "s2quad_sample_fourier",
+    "s2quad_project_fourier",
 ]
 
 
@@ -299,3 +306,109 @@ def grid_resize_half(Fh, L_from: int, L_to: int):
         return jnp.pad(Fh, pad)
     c = -d
     return Fh[..., c:-c, : L_to + 1]
+
+
+# --------------------------------------------------------------------------
+# S^2 quadrature: Gauss-Legendre theta nodes x equispaced phi (DESIGN.md §6.5)
+# --------------------------------------------------------------------------
+#
+# Unlike the torus product grid above (which is exact by bandlimit counting
+# for *products of bandlimited signals*), general pointwise nonlinearities
+# need a true sphere-domain quadrature.  Gauss-Legendre nodes in cos(theta)
+# with n_t points integrate polynomials in cos(theta) up to degree 2*n_t - 1
+# exactly; the equispaced phi sum with n_p points kills e^{im phi} exactly
+# for 0 < |m| < n_p.  A product of real SH with total degree D therefore
+# integrates exactly iff  D <= s2quad_exact_degree(n_t, n_p)
+#                            = min(2*n_t - 1, n_p - 1).
+# Projecting a degree-d integrand onto degrees <= Lout needs d + Lout within
+# that bound; `s2quad_size(L, os)` picks (n_t, n_p) = (os*(L+1), 2*os*(L+1))
+# so the default oversampling os=2 resolves degree 4L+3 — enough for any
+# quadratic gate content at the signal's own bandlimit.
+
+
+def s2quad_size(L: int, os: int = 2) -> tuple[int, int]:
+    """Default (n_theta, n_phi) for a degree-L signal at oversampling ``os``."""
+    if os < 1:
+        raise ValueError(f"oversampling factor must be >= 1, got {os}")
+    nt = os * (L + 1)
+    return nt, 2 * nt
+
+
+def s2quad_angles(n_theta: int, n_phi: int):
+    """(theta [n_t], w_theta [n_t], phi [n_p]) — GL nodes/weights x uniform phi.
+
+    w_theta are the Gauss-Legendre weights in x = cos(theta):
+    int_0^pi f(theta) sin(theta) dtheta = sum_i w_i f(theta_i) exactly for f
+    polynomial of degree <= 2*n_t - 1 in cos(theta).
+    """
+    x, w = np.polynomial.legendre.leggauss(n_theta)
+    return np.arccos(x), w, 2 * math.pi * np.arange(n_phi) / n_phi
+
+
+def s2quad_exact_degree(n_theta: int, n_phi: int) -> int:
+    """Max total SH degree whose sphere integral this quadrature is exact for."""
+    return min(2 * n_theta - 1, n_phi - 1)
+
+
+def _s2quad_xyz(n_theta: int, n_phi: int) -> np.ndarray:
+    theta, _, phi = s2quad_angles(n_theta, n_phi)
+    tt, pp = np.meshgrid(theta, phi, indexing="ij")
+    return np.stack(
+        [np.sin(tt) * np.cos(pp), np.sin(tt) * np.sin(pp), np.cos(tt)], axis=-1
+    ).reshape(-1, 3)
+
+
+def s2quad_sample_sh(L: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """A [(L+1)^2, G]: real SH evaluated on the quadrature grid (float64).
+
+    ``x @ A`` turns packed SH coefficients into sample values; reshape the
+    last axis to [n_theta, n_phi] for the grid layout.
+    """
+    return real_sph_harm(L, _s2quad_xyz(n_theta, n_phi)).T.copy()
+
+
+def s2quad_project_sh(Lout: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """P [G, (Lout+1)^2]: quadrature projection of sample values onto SH.
+
+    P[g, k] = w_g * Y_k(omega_g) with w_g = w_GL(theta_g) * (2 pi / n_phi);
+    by real-SH orthonormality ``V @ P`` recovers the coefficients exactly
+    whenever the sampled content's degree + Lout stays within
+    `s2quad_exact_degree`.
+    """
+    _, w, _ = s2quad_angles(n_theta, n_phi)
+    S = real_sph_harm(Lout, _s2quad_xyz(n_theta, n_phi))  # [G, dout]
+    wg = np.repeat(w, n_phi) * (2 * math.pi / n_phi)
+    return S * wg[:, None]
+
+
+def s2quad_sample_fourier(L: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """M [2*(2L+1)*(L+1), G]: Fourier-resident entry onto the quadrature grid.
+
+    A resident Hermitian half grid F [2L+1 (u), L+1 (v >= 0)], stacked as the
+    real vector [Re F; Im F], evaluates to its real sphere samples in one
+    real matmul — same construction as `constants.chain_sample_grid`, but at
+    the quadrature angles (theta in (0, pi) is inside the torus domain, so
+    the torus Fourier series evaluates pointwise without extension issues).
+    """
+    theta, _, phi = s2quad_angles(n_theta, n_phi)
+    us = np.arange(-L, L + 1)
+    vs = np.arange(0, L + 1)
+    Et = np.exp(1j * np.outer(us, theta))      # [2L+1, n_t]
+    Ep = np.exp(1j * np.outer(vs, phi))        # [L+1, n_p]
+    c = np.where(vs == 0, 1.0, 2.0)
+    E = np.einsum("ua,vb,v->uvab", Et, Ep, c).reshape(
+        (2 * L + 1) * (L + 1), n_theta * n_phi)
+    return np.concatenate([E.real, -E.imag], axis=0)
+
+
+def s2quad_project_fourier(L: int, n_theta: int, n_phi: int) -> np.ndarray:
+    """Z [G, 2L+1, L+1] complex: quadrature samples -> Hermitian half grid.
+
+    The composition quadrature-project-to-SH then SH->Fourier as ONE matrix,
+    so a quadrature-resident Rep re-enters the Fourier basis in a single
+    transform (and ticks a single conversion counter).  Exact under the same
+    degree bound as `s2quad_project_sh` at Lout = L.
+    """
+    P = s2quad_project_sh(L, n_theta, n_phi)           # [G, (L+1)^2]
+    y = sh_to_fourier_half(L)                          # [(L+1)^2, 2L+1, L+1]
+    return np.einsum("gk,kuv->guv", P, y)

@@ -68,7 +68,8 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
                            cdtype=jnp.complex64, rdtype=None,
                            backend: str | None = None, tune: str = "heuristic",
                            donate: bool = False, shard_spec=None,
-                           out_basis: str = "sh", dtype=None):
+                           out_basis: str = "sh", dtype=None,
+                           gate_params=None):
     """xs: list of [..., (L_i+1)^2] features (or Fourier-resident ``Rep``s);
     Ls: their max degrees.
 
@@ -82,6 +83,13 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
     for complex64).  Accumulation and the resident grids stay >= f32 either
     way; rdtype=None returns the plan's storage dtype, an explicit rdtype
     casts the SH output.
+
+    gate_params: optional {'w1', 'w2'} MLP params — plans the chain with a
+    fused grid-resident equivariant gate (DESIGN.md §6.5): the affine gate
+    g*f + beta*Y00 runs pointwise on the resident product grid (inside the
+    collocation kernel on the fused backends), so gated SH output equals
+    ``models.equivariant.gate_apply(gate_params, out, Lout)`` without an
+    extra exit/re-entry conversion pair.  Chain route only.
 
     Default route: one Fourier-resident chain plan (`engine.plan_chain`) —
     conversion/conv default to the plan's measured auto policy ('half' grids,
@@ -134,11 +142,16 @@ def manybody_gaunt_product(xs, Ls, Lout: int | None = None, weights=None,
         cp = _engine.plan_chain(
             Ls, Lout, conversion=conversion, conv=conv, dtype=dts,
             donate=donate, shard_spec=shard_spec, tune=tune, batch_hint=hint,
-            entry_hint=entry_hint, out_hint=out_basis, share_hint=share_hint)
-        out = cp.apply_jit(list(xs), weights=weights, out_basis=out_basis)
+            entry_hint=entry_hint, out_hint=out_basis, share_hint=share_hint,
+            gate=gate_params is not None)
+        out = cp.apply_jit(list(xs), weights=weights, out_basis=out_basis,
+                           gate_params=gate_params)
         if out_basis == "fourier":
             return out
         return out if rdtype is None else out.astype(rdtype)
+    if gate_params is not None:
+        raise ValueError("gate_params requires the chain route "
+                         "(no explicit backend/conversion override)")
     if out_basis != "sh":
         raise ValueError("out_basis='fourier' requires the chain route "
                          "(no explicit backend/conversion override)")

@@ -48,7 +48,13 @@ __all__ = [
 # conversion counters (incremented by core.gaunt at call/trace time)
 # --------------------------------------------------------------------------
 
-_COUNTS = {"sh_to_fourier": 0, "fourier_to_sh": 0}
+_COUNTS = {"sh_to_fourier": 0, "fourier_to_sh": 0,
+           # S^2 quadrature-grid entry/exit transforms (DESIGN.md §6.5) —
+           # counted here for the same reason as the Fourier pair: resident-
+           # gate elision proofs must see the quadrature round trips a naive
+           # grid-gate implementation pays, or they could pass vacuously.
+           "sh_to_quad": 0, "quad_to_sh": 0,
+           "fourier_to_quad": 0, "quad_to_fourier": 0}
 
 
 def count_conversion(name: str) -> None:
@@ -133,6 +139,14 @@ def reset_conversion_stats() -> None:
 class Rep:
     """A degree-L equivariant activation tagged with its current basis.
 
+    basis 'sh' and 'fourier' are as documented in the module docstring;
+    basis 'quad' holds real sample values on the S^2 quadrature grid
+    (Gauss-Legendre theta x equispaced phi, data [..., n_theta, n_phi],
+    form 'grid') — the home of pointwise nonlinearities between ops
+    (DESIGN.md §6.5).  Enter with ``to_quad(os)`` from either basis, apply
+    value-space functions with ``apply_pointwise``, and leave with
+    ``to_sh``/``to_fourier`` (each leg ticks its own conversion counter).
+
     ``sdtype`` is the SH-side *storage* dtype tag ('float32' | 'bfloat16' |
     'float64', or None = untagged -> float32).  Resident grids are complex
     (complex has no bf16), so the tag is how a bf16 activation remembers its
@@ -147,10 +161,13 @@ class Rep:
     sdtype: str | None = None
 
     def __post_init__(self):
-        if self.basis not in ("sh", "fourier"):
+        if self.basis not in ("sh", "fourier", "quad"):
             raise ValueError(f"unknown basis {self.basis!r}")
         if self.basis == "fourier" and self.form not in ("dense", "half"):
             raise ValueError(f"unknown fourier form {self.form!r}")
+        if self.basis == "quad" and self.form != "grid":
+            raise ValueError(f"quad basis stores real samples (form='grid'), "
+                             f"got form={self.form!r}")
 
     # -- pytree protocol ---------------------------------------------------
 
@@ -204,6 +221,23 @@ class Rep:
             form = "half" if conversion == "half" else "dense"
         if self.basis == "fourier":
             return self.with_form(form)
+        if self.basis == "quad":
+            from . import constants as _c
+
+            tag = self.sdtype or self._tag(self.data)
+            if cdtype is None:
+                cdtype = (jnp.complex128
+                          if tag == "float64" and jax.config.jax_enable_x64
+                          else jnp.complex64)
+            cdtype = jnp.dtype(cdtype)
+            rdt = jnp.dtype("float64" if cdtype == jnp.complex128
+                            else "float32")
+            nt, nph = self.data.shape[-2:]
+            Pf = jnp.asarray(_c.quad_project_fourier(self.L, nt, nph), cdtype)
+            count_conversion("quad_to_fourier")
+            V = self.data.reshape(self.data.shape[:-2] + (-1,)).astype(rdt)
+            F = jnp.einsum("...g,guv->...uv", V, Pf)
+            return Rep(F, self.L, "fourier", "half", sdtype=tag).with_form(form)
         tag = self.sdtype or self._tag(self.data)
         if cdtype is None:
             cdtype = (jnp.complex128
@@ -229,9 +263,77 @@ class Rep:
                 raise ValueError(f"cannot raise SH degree {self.L} -> {Lout}")
             x = self.data if Lout == self.L else self.data[..., : num_coeffs(Lout)]
             return Rep(x, Lout, "sh", sdtype=self.sdtype)
+        if self.basis == "quad":
+            from . import constants as _c
+
+            if Lout > self.L:
+                raise ValueError(f"cannot raise SH degree {self.L} -> {Lout}")
+            nt, nph = self.data.shape[-2:]
+            cdt = jnp.dtype("float64" if self.data.dtype == jnp.float64
+                            else "float32")
+            P = jnp.asarray(_c.quad_project_sh(Lout, nt, nph), cdt)
+            count_conversion("quad_to_sh")
+            V = self.data.reshape(self.data.shape[:-2] + (-1,))
+            x = (V.astype(cdt) @ P).astype(rdt)
+            return Rep(x, Lout, "sh", sdtype=self._tag(x))
         conv = "half" if self.form == "half" else "dense"
         x = _g.fourier_to_sh(self.data, self.L, Lout, conv, rdt)
         return Rep(x, Lout, "sh", sdtype=self._tag(x))
+
+    def to_quad(self, os: int = 2, n_theta: int | None = None,
+                n_phi: int | None = None) -> "Rep":
+        """-> real samples on the S^2 quadrature grid (DESIGN.md §6.5).
+
+        Gauss-Legendre theta nodes x equispaced phi.  The default
+        oversampling ``os=2`` sizes the grid exact through degree 4L+3 —
+        enough to project a squared degree-2L signal or an affine gate of
+        it without aliasing; transcendental nonlinearities alias with an
+        error that shrinks as ``os`` grows (measured, not asserted —
+        tests/test_quadrature.py).  Explicit ``n_theta``/``n_phi``
+        override the sized grid (for aliasing sweeps).
+        """
+        from . import constants as _c
+
+        nt, nph = _fx.s2quad_size(self.L, os)
+        if n_theta is not None:
+            nt = int(n_theta)
+        if n_phi is not None:
+            nph = int(n_phi)
+        if self.basis == "quad":
+            if self.data.shape[-2:] != (nt, nph):
+                raise ValueError(
+                    f"quad Rep already on a {tuple(self.data.shape[-2:])} "
+                    f"grid; resampling to ({nt}, {nph}) is not supported — "
+                    f"exit via to_sh()/to_fourier() first")
+            return self
+        tag = self.sdtype or self._tag(self.data)
+        rdt = jnp.dtype("float64"
+                        if tag == "float64" and jax.config.jax_enable_x64
+                        else "float32")
+        if self.basis == "sh":
+            A = jnp.asarray(_c.quad_sample_sh(self.L, nt, nph), rdt)
+            count_conversion("sh_to_quad")
+            V = self.data.astype(rdt) @ A
+        else:
+            E = jnp.asarray(_c.quad_sample_fourier(self.L, nt, nph), rdt)
+            count_conversion("fourier_to_quad")
+            F = self.with_form("half").data
+            FR = jnp.concatenate(
+                [jnp.real(F).reshape(F.shape[:-2] + (-1,)),
+                 jnp.imag(F).reshape(F.shape[:-2] + (-1,))], axis=-1)
+            V = FR.astype(rdt) @ E
+        V = V.reshape(V.shape[:-1] + (nt, nph))
+        return Rep(V, self.L, "quad", "grid", sdtype=tag)
+
+    def apply_pointwise(self, fn) -> "Rep":
+        """Apply a value-space function sample-wise (quad Reps only) — the
+        point of the quadrature grid: nonlinearities are plain sample maps
+        there, with aliasing controlled by the oversampling chosen at entry.
+        """
+        if self.basis != "quad":
+            raise ValueError("apply_pointwise requires a quadrature-grid "
+                             "Rep; enter with to_quad() first")
+        return dataclasses.replace(self, data=fn(self.data))
 
     def with_form(self, form: str) -> "Rep":
         """Change fourier storage form (Hermitian pack/unpack — no FLOPs)."""
@@ -269,7 +371,7 @@ class Rep:
 
     def astype(self, dtype) -> "Rep":
         data = self.data.astype(dtype)
-        tag = self._tag(data) if self.basis == "sh" else self.sdtype
+        tag = self._tag(data) if self.basis in ("sh", "quad") else self.sdtype
         return dataclasses.replace(self, data=data, sdtype=tag)
 
     def __add__(self, other: "Rep") -> "Rep":

@@ -119,7 +119,7 @@ def _kernel(x1_ref, x2_ref, t1_ref, t2_ref, p_ref, o_ref):
     o_ref[...] = jnp.dot(v1 * v2, p_ref[...], preferred_element_type=jnp.float32)
 
 
-def _make_chain_kernel(n: int, acc_dt):
+def _make_chain_kernel(n: int, acc_dt, gated: bool = False):
     """The n-operand collocation kernel body.
 
     Grid is (row blocks, grid blocks): for one row block the kernel walks the
@@ -128,14 +128,24 @@ def _make_chain_kernel(n: int, acc_dt):
     the output block (revisited across the minor grid axis, the standard
     k-accumulation pattern).  Padded sample columns are zero in every T AND
     carry zero projection rows, so they contribute nothing.
+
+    ``gated`` adds the fused pointwise-gate stage (DESIGN.md §6.5): two extra
+    per-row scalar inputs (gs, gb — the affine form of `gate_apply` given its
+    l=0 scalars, computed outside the kernel) scale-and-shift the VMEM-
+    resident product values *before* projection: ``v <- v*gs + gb``.  Padded
+    sample columns pick up the constant ``gb`` but their projection rows are
+    zero; padded batch rows carry gs = gb = 0, so both stay inert.
     """
 
     def kernel(*refs):
         xs, ts = refs[:n], refs[n: 2 * n]
-        p_ref, o_ref = refs[2 * n], refs[2 * n + 1]
+        p_ref, o_ref = refs[2 * n], refs[-1]
         v = jnp.dot(xs[0][...], ts[0][...], preferred_element_type=acc_dt)
         for x_ref, t_ref in zip(xs[1:], ts[1:]):
             v = v * jnp.dot(x_ref[...], t_ref[...], preferred_element_type=acc_dt)
+        if gated:
+            gs_ref, gb_ref = refs[2 * n + 1], refs[2 * n + 2]
+            v = v * gs_ref[...] + gb_ref[...]
         part = jnp.dot(v, p_ref[...], preferred_element_type=acc_dt)
         g = pl.program_id(1)
 
@@ -158,7 +168,8 @@ def _pad_axis(a: np.ndarray, axis: int, to: int) -> np.ndarray:
 
 @lru_cache(maxsize=None)
 def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
-                  block_b: int, block_g: int, interpret: bool, sdt: str):
+                  block_b: int, block_g: int, interpret: bool, sdt: str,
+                  gated: bool = False):
     """A cached, custom-VJP'd row-level chain runner for one static config.
 
     Takes the tuple of row-flattened operands ([Bp, d_i], already padded to a
@@ -170,6 +181,13 @@ def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
     ``sdt`` is the storage dtype: operands and sampling matrices T_i live at
     ``sdt``, every dot accumulates at the >= f32 accumulation dtype, and the
     projection matrix P plus the output stay at the accumulation dtype.
+
+    ``gated`` runners take two extra row-scalar arrays ([Bp, 1], at the
+    accumulation dtype): ``run(arrs, gs, gb)`` applies ``v <- v*gs + gb`` to
+    the product values between the n-way multiply and the projection —
+    still ONE `pallas_call`.  The VJP extends accordingly: with V the
+    pre-gate product grid, dgs = rowsum(U*V), dgb = rowsum(U), and each
+    operand gradient picks up the gs scale (U = dout @ P^T).
     """
     from repro.core.constants import chain_matrices
 
@@ -183,15 +201,17 @@ def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
     P = _pad_axis(P, 0, Gp)
     dout = P.shape[1]
     n = len(Ls)
-    kernel = _make_chain_kernel(n, acc_dt)
+    kernel = _make_chain_kernel(n, acc_dt, gated)
 
-    def _call(arrs):
+    def _call(arrs, gate_arrs=()):
         Bp = arrs[0].shape[0]
         d_in = [T.shape[0] for T in Ts]
         in_specs = (
             [pl.BlockSpec((block_b, d), lambda i, g: (i, 0)) for d in d_in]
             + [pl.BlockSpec((d, block_g), lambda i, g: (0, g)) for d in d_in]
             + [pl.BlockSpec((block_g, dout), lambda i, g: (g, 0))]
+            + [pl.BlockSpec((block_b, 1), lambda i, g: (i, 0))
+               for _ in gate_arrs]
         )
         return pl.pallas_call(
             kernel,
@@ -200,30 +220,56 @@ def _chain_runner(Ls: tuple, Lout: int, entries: tuple, out_entry: str,
             out_specs=pl.BlockSpec((block_b, dout), lambda i, g: (i, 0)),
             out_shape=jax.ShapeDtypeStruct((Bp, dout), acc_dt),
             interpret=interpret,
-        )(*arrs, *(jnp.asarray(T) for T in Ts), jnp.asarray(P))
+        )(*arrs, *(jnp.asarray(T) for T in Ts), jnp.asarray(P), *gate_arrs)
 
-    @jax.custom_vjp
-    def run(arrs):
-        return _call(arrs)
-
-    def fwd(arrs):
-        return _call(arrs), arrs
-
-    def bwd(arrs, dout_bar):
+    def _bwd_core(arrs, gs, dout_bar):
         # same storage discipline as the forward: operands and T stay at
         # ``sdt`` into the MXU, accumulation at acc_dt via preferred dtype
         Tj = [jnp.asarray(T) for T in Ts]
         Vs = [jnp.dot(a, T, preferred_element_type=acc_dt)
               for a, T in zip(arrs, Tj)]
         U = dout_bar.astype(acc_dt) @ jnp.asarray(P).T
+        Ug = U if gs is None else U * gs.astype(acc_dt)
         grads = []
         for i in range(n):
-            dV = U
+            dV = Ug
             for j in range(n):
                 if j != i:
                     dV = dV * Vs[j]
             grads.append((dV @ Tj[i].T.astype(acc_dt)).astype(arrs[i].dtype))
-        return (tuple(grads),)
+        return tuple(grads), Vs, U
+
+    if gated:
+
+        @jax.custom_vjp
+        def run(arrs, gs, gb):
+            return _call(arrs, (gs, gb))
+
+        def fwd(arrs, gs, gb):
+            return _call(arrs, (gs, gb)), (arrs, gs, gb)
+
+        def bwd(res, dout_bar):
+            arrs, gs, gb = res
+            grads, Vs, U = _bwd_core(arrs, gs, dout_bar)
+            V = Vs[0]
+            for Vj in Vs[1:]:
+                V = V * Vj
+            dgs = jnp.sum(U * V, axis=-1, keepdims=True).astype(gs.dtype)
+            dgb = jnp.sum(U, axis=-1, keepdims=True).astype(gb.dtype)
+            return grads, dgs, dgb
+
+    else:
+
+        @jax.custom_vjp
+        def run(arrs):
+            return _call(arrs)
+
+        def fwd(arrs):
+            return _call(arrs), arrs
+
+        def bwd(arrs, dout_bar):
+            grads, _, _ = _bwd_core(arrs, None, dout_bar)
+            return (grads,)
 
     run.defvjp(fwd, bwd)
     return run, dout
@@ -268,6 +314,7 @@ def gaunt_chain_fused_pallas(
     block_g: int | None = None,
     interpret: bool | None = None,
     dtype: str | None = None,
+    gate=None,
 ):
     """n-way fused chain Gaunt product — ONE `pallas_call`.
 
@@ -284,9 +331,15 @@ def gaunt_chain_fused_pallas(
               from the operands (bf16 only when ALL operands are bf16).
               Operands are cast to it once at entry; accumulation is always
               >= f32 and the output comes back at the accumulation dtype.
+    gate    : optional (gs, gb) pair of per-row scalars (each broadcastable
+              to the operands' leading shape): the fused pointwise stage
+              applies ``v <- v*gs + gb`` to the VMEM-resident product values
+              before projection — `gate_apply` in its affine form, for free
+              inside the same single `pallas_call` (DESIGN.md §6.5).
 
     float64 storage exists only under x64 and is interpret-only (TPUs have
-    no f64).  Differentiable via the collocation VJP.
+    no f64).  Differentiable via the collocation VJP (extended with
+    dgs/dgb when gated).
     """
     Ls = tuple(int(L) for L in Ls)
     Lout = sum(Ls) if Lout is None else int(Lout)
@@ -316,13 +369,20 @@ def gaunt_chain_fused_pallas(
     block_b = min(block_b, eff_b)
     block_g = max(128, (block_g // 128) * 128)
     run, dout = _chain_runner(Ls, Lout, entries, out_entry, block_b, block_g,
-                              bool(interpret), sdt)
+                              bool(interpret), sdt, gate is not None)
     _STATS["chain_pallas_calls"] += 1
     Bp = -(-B // block_b) * block_b
     st_dt = jnp.dtype(sdt)
     flat = [jnp.zeros((Bp, a.shape[-1]), st_dt).at[:B].set(a.astype(st_dt))
             for a in flat]
-    out = run(tuple(flat))[:B]
+    if gate is not None:
+        acc_dt = jnp.float64 if sdt == "float64" else jnp.float32
+        pads = [jnp.zeros((Bp, 1), acc_dt).at[:B].set(
+                    jnp.broadcast_to(g, lead).reshape(B, 1).astype(acc_dt))
+                for g in gate]
+        out = run(tuple(flat), *pads)[:B]
+    else:
+        out = run(tuple(flat))[:B]
     return _chain_finish(out, lead, sum(Ls), out_entry)
 
 
@@ -334,6 +394,7 @@ def gaunt_chain_fused_xla(
     entries: tuple | None = None,
     out_entry: str = "sh",
     dtype: str | None = None,
+    gate=None,
 ):
     """The chain collocation math as plain jnp (XLA) — the same matrices,
     no Pallas.  Grad/vmap/dtype support come for free; off-TPU this is the
@@ -341,7 +402,9 @@ def gaunt_chain_fused_xla(
 
     Same storage rule as the Pallas runner: operands and T_i at the storage
     dtype, >= f32 accumulation via ``preferred_element_type``, P and the
-    output at the accumulation dtype.
+    output at the accumulation dtype.  ``gate=(gs, gb)`` applies the same
+    fused pointwise stage as the Pallas runner (``v <- v*gs + gb`` on the
+    product values before projection).
     """
     from repro.core.constants import chain_matrices
 
@@ -360,6 +423,10 @@ def gaunt_chain_fused_xla(
     for a, T in zip(flat[1:], Ts[1:]):
         v = v * jnp.dot(a.astype(st_dt), jnp.asarray(T),
                         preferred_element_type=acc_dt)
+    if gate is not None:
+        gs, gb = (jnp.broadcast_to(g, lead).reshape(B, 1).astype(acc_dt)
+                  for g in gate)
+        v = v * gs + gb
     out = v @ jnp.asarray(P)
     return _chain_finish(out, lead, sum(Ls), out_entry)
 

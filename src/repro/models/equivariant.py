@@ -56,6 +56,54 @@ def gate_apply(p, x, L):
     return jnp.concatenate([scal[..., None], rest], axis=-1)
 
 
+def _gate_quad(p, x, L, os: int = 2):
+    """`gate_apply` evaluated on the S^2 quadrature grid (DESIGN.md §6.5).
+
+    The gate is affine in the signal once its scalars are known — f ->
+    g*f + beta*Y00 with (g, beta) functions of the l=0 channel scalars
+    only — so the grid evaluation is exact at any quadrature order (an
+    affine map does not raise the bandlimit); oversampling matters for
+    nonlinearities applied to the *samples* themselves.  Ticks the
+    sh_to_quad / quad_to_sh conversion counters: this is the Rep-level
+    grid-resident gate, used where no chain is adjacent to absorb the
+    gate as a fused pointwise stage (SEGNN's post-mix gate).
+    """
+    from repro.core.engine import _GATE_C0, _gate_coeffs
+    from repro.core.rep import Rep
+
+    s = x[..., :, 0]
+    g, beta = _gate_coeffs(p, s)
+    rep = Rep.from_sh(x, L).to_quad(os=os)
+    gated = rep.apply_pointwise(
+        lambda v: v * g[..., None, None].astype(v.dtype)
+        + (beta * _GATE_C0)[..., None, None].astype(v.dtype))
+    return gated.to_sh(L).data.astype(x.dtype)
+
+
+def _resolve_grid_gate(cfg, Ls, Lout, batch_hint=None, share_hint=None) -> bool:
+    """Resolve ``cfg.grid_gate`` to a concrete on/off for one gated chain
+    workload.  'auto' consults the engine's measured gate policy
+    (`engine.select_gate`, keyed like chain plans) and requires
+    chain_tune='measure' — an unmeasured 'auto' stays off.  NOTE for MACE
+    grid_gate is a *parameterization* choice (gate-before-mb_mix): fix it
+    per checkpoint; the measured 'auto' policy is per-host but persists
+    via the autotune cache, and serve warmup() seeds it."""
+    mode = getattr(cfg, "grid_gate", "off")
+    if mode in ("off", None, False):
+        return False
+    if mode in ("on", "grid", True):
+        return True
+    if mode != "auto":
+        raise ValueError(f"unknown grid_gate {mode!r}")
+    if getattr(cfg, "chain_tune", "heuristic") != "measure":
+        return False
+    from repro.core import engine as _engine
+
+    return _engine.get_engine().select_gate(
+        Ls, Lout, dtype=_model_dtype(cfg), batch_hint=batch_hint,
+        entry_hint=("sh",) * len(Ls), share_hint=share_hint) == "grid"
+
+
 def radial_basis(r, n: int, cutoff: float):
     """Bessel-like radial basis with smooth cutoff envelope. r [...]."""
     rs = jnp.clip(r, 1e-4, None)
@@ -264,6 +312,11 @@ class MaceGaunt:
                 geom = conv.geometry_rep(rhat[:, :, None, :])
         x = jnp.zeros((n, c.channels, num_coeffs(c.L)))
         x = x.at[..., 0].set(params["species"][species])
+        # grid-resident gate policy (DESIGN.md §6.5), resolved once for the
+        # stack: every layer's selfmix chain shares one workload shape
+        grid_gate = _resolve_grid_gate(c, (c.L,) * c.nu, c.L,
+                                       batch_hint=n * c.channels,
+                                       share_hint=(0,) * c.nu)
         for lp in params["layers"]:
             rb = radial_basis(dist, c.n_radial, c.cutoff)  # [n,n,R]
             h = jax.nn.silu(rb @ lp["radial"]["w1"]) @ lp["radial"]["w2"]
@@ -274,15 +327,28 @@ class MaceGaunt:
             m = jnp.sum(m * mask[:, :, None, None], axis=1)  # [n, C, dim]
             A = equi_linear(lp["mix"], m, c.L) + x
             # many-body: nu-fold Gaunt self-product, per-degree weights
-            B = manybody_selfmix(
-                A, c.L, c.nu, Lout=c.L,
+            mb_kw = dict(
                 weights=[jnp.broadcast_to(w, (n, c.channels, c.L + 1))
                          for w in lp["mb_w"]],
                 shard_spec=shard,  # the chain route honors sharding directly
                 tune=getattr(c, "chain_tune", "heuristic"),
                 dtype=_model_dtype(c),  # storage precision (chain-entry cast)
             )
-            x = x + gate_apply(lp["gate"], equi_linear(lp["mb_mix"], B, c.L), c.L)
+            if grid_gate:
+                # grid-resident gate (DESIGN.md §6.5): the affine gate runs
+                # as a pointwise stage on the selfmix chain's resident
+                # product grid — the whole many-body stage is one region
+                # with one entry + one exit conversion.  The gate cannot
+                # cross the mb_mix channel mix, so this variant gates B
+                # *before* the mix (an equally expressive
+                # reparameterization — fix grid_gate per checkpoint).
+                B = manybody_selfmix(A, c.L, c.nu, Lout=c.L,
+                                     gate_params=lp["gate"], **mb_kw)
+                x = x + equi_linear(lp["mb_mix"], B, c.L)
+            else:
+                B = manybody_selfmix(A, c.L, c.nu, Lout=c.L, **mb_kw)
+                x = x + gate_apply(lp["gate"],
+                                   equi_linear(lp["mb_mix"], B, c.L), c.L)
         return x[..., 0]  # invariant channels [n, C]
 
     def energy(self, params, species, pos):
@@ -375,6 +441,16 @@ class SegnnNBody:
             tp0 = _tp(c, c.L, c.L_edge, c.L)
             tp = lambda a: tp0(a, jnp.broadcast_to(  # noqa: E731
                 edge_sh[:, :, None, :], (n, n, c.channels, edge_sh.shape[-1])))
+        # SEGNN's gate sits after the channel mix, so no adjacent chain can
+        # absorb it; grid_gate='on' evaluates it on the S^2 quadrature grid
+        # (`_gate_quad` — exact, same function as 'off') to keep the
+        # Rep-level residency path exercised.  It adds a quadrature
+        # conversion pair rather than eliding one, so the measured 'auto'
+        # policy never selects it here — 'auto' resolves to off.
+        gg = getattr(c, "grid_gate", "off")
+        use_quad_gate = gg in ("on", "grid", True)
+        if gg not in ("off", "on", "grid", "auto", True, False, None):
+            raise ValueError(f"unknown grid_gate {gg!r}")
         for lp in params["layers"]:
             rb = radial_basis(dist, c.n_radial, cutoff=10.0)
             h = jax.nn.silu(rb @ lp["radial"]["w1"]) @ lp["radial"]["w2"]
@@ -383,7 +459,11 @@ class SegnnNBody:
             hw = expand_degree_weights(h, c.L)
             m = tp(xj * hw)
             m = jnp.sum(m * mask[:, :, None, None], axis=1)[..., : num_coeffs(c.L)]
-            x = x + gate_apply(lp["gate"], equi_linear(lp["mix"], m, c.L), c.L)
+            y = equi_linear(lp["mix"], m, c.L)
+            if use_quad_gate:
+                x = x + _gate_quad(lp["gate"], y, c.L)
+            else:
+                x = x + gate_apply(lp["gate"], y, c.L)
             x = x + equi_linear(lp["self_mix"], x, c.L)
         out = equi_linear(params["out"], x, c.L)[:, 0]  # [n, dim]
         dsh = out[:, 1:4]  # l=1 block (y,z,x)

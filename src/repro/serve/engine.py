@@ -256,11 +256,27 @@ class EquivariantServeEngine:
             # leading dims per element) and the selfmix [A]*nu share pattern
             rows = self.max_atoms * cfg.channels
             dts = getattr(cfg, "compute_dtype", "float32")
+            # grid-resident gate (DESIGN.md §6.5): resolve the measured
+            # 'auto' policy here, outside jit — inside the step's trace an
+            # unseeded select_gate key falls back to 'sh', so the policy
+            # must be decided (and cached) before the step compiles.  A
+            # resolved-on config additionally seeds the gate-fused chain
+            # key so the traced step hits the cached gated selection.
+            gg = getattr(cfg, "grid_gate", "off")
+            if gg == "auto":
+                gg = "on" if eng.select_gate(
+                    (cfg.L,) * cfg.nu, cfg.L, dtype=dts, batch_hint=rows,
+                    entry_hint=("sh",) * cfg.nu,
+                    share_hint=(0,) * cfg.nu) == "grid" else "off"
+            gate_opts = (False, True) if gg in ("on", "grid", True) \
+                else (False,)
             for d in dict.fromkeys(["float32", dts] if dts != "auto"
                                    else ["auto"]):
-                _engine.plan_chain((cfg.L,) * cfg.nu, cfg.L, tune="measure",
-                                   batch_hint=rows,
-                                   share_hint=(0,) * cfg.nu, dtype=d)
+                for g in gate_opts:
+                    _engine.plan_chain((cfg.L,) * cfg.nu, cfg.L,
+                                       tune="measure", batch_hint=rows,
+                                       share_hint=(0,) * cfg.nu, dtype=d,
+                                       gate=g)
         jax.block_until_ready(self._step_fn(
             self.params, jnp.asarray(self.species), jnp.asarray(self.pos),
             jnp.asarray(self.mask)))

@@ -269,6 +269,160 @@ def test_chain_kernel_grid_blocking_accumulates(dtype):
 
 
 # --------------------------------------------------------------------------
+# grid-resident gate fused into the chain (DESIGN.md §6.5)
+# --------------------------------------------------------------------------
+
+
+def _gate_params(C, seed):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.normal(size=(C, 16)) * 0.3, jnp.float32),
+            "w2": jnp.asarray(rng.normal(size=(16, C)) * 0.3, jnp.float32)}
+
+
+@pytest.mark.parametrize("backend", engine.CHAIN_BACKENDS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gated_chain_matches_sh_gate(backend, dtype, Ls=(2, 1, 2), Lout=3):
+    """plan_chain(gate=True) == gate applied to the ungated product on SH
+    coefficients — on EVERY chain backend (tree/looped gate at the exit; the
+    collocation backends fuse the gate as a kernel pointwise stage)."""
+    B, C = 5, 3
+    xs = [_rand((B, C, num_coeffs(L)), 300 + i, dtype) for i, L in enumerate(Ls)]
+    gp = _gate_params(C, 310)
+    tree = engine.plan_chain(Ls, Lout, backend="tree")
+    want = np.asarray(engine._gate_sh(
+        gp, tree.apply([x.astype(jnp.float32) for x in xs])))
+    cp = engine.plan_chain(Ls, Lout, backend=backend, dtype=dtype, gate=True)
+    assert cp.gate and "+gate" in cp.describe()
+    got = cp.apply(xs, gate_params=gp)
+    assert got.dtype == jnp.dtype(dtype)
+    assert_close(np.asarray(got).astype(np.float64), want, dtype=dtype,
+                 tier="identity", tol=3e-5 if dtype == "float32" else None)
+
+
+@pytest.mark.parametrize("backend", ["tree", "fused_xla", "fused_pallas"])
+def test_gated_chain_resident_exit(backend):
+    """A gated plan's out_basis='fourier' exit gates the product grid
+    in-basis (no extra conversions) and projects back to the gated SH out."""
+    Ls, B, C = (1, 2, 1), 4, 3
+    Ltot = sum(Ls)
+    xs = [_rand((B, C, num_coeffs(L)), 320 + i) for i, L in enumerate(Ls)]
+    gp = _gate_params(C, 330)
+    cp = engine.plan_chain(Ls, Ltot, backend=backend, gate=True)
+    want = np.asarray(cp.apply(xs, gate_params=gp))
+    rep = cp.apply(xs, out_basis="fourier", gate_params=gp)
+    assert rep.is_fourier and rep.L == Ltot
+    np.testing.assert_allclose(np.asarray(rep.to_sh().data), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gated_looped_has_no_resident_exit():
+    cp = engine.plan_chain((1, 1), 2, backend="looped", gate=True)
+    xs = [_rand((4, 2, num_coeffs(1)), 340 + i) for i in range(2)]
+    with pytest.raises(ValueError, match="no resident exit"):
+        cp.apply(xs, out_basis="fourier", gate_params=_gate_params(2, 341))
+
+
+def test_gated_chain_single_pallas_call():
+    """The acceptance proof: the gate-fused chain is still ONE pallas_call —
+    dispatch counter ticks once, and the traced jaxpr holds exactly one
+    pallas_call primitive (the gate rides the kernel's pointwise stage, it
+    does not add a dispatch)."""
+    Ls, Lout, B, C = (2, 2, 2), 2, 8, 3
+    xs = [_rand((B, C, num_coeffs(L)), 350 + i) for i, L in enumerate(Ls)]
+    gp = _gate_params(C, 360)
+    cp = engine.plan_chain(Ls, Lout, backend="fused_pallas", gate=True)
+    reset_kernel_stats()
+    jax.block_until_ready(cp.apply(xs, gate_params=gp))
+    assert kernel_stats()["chain_pallas_calls"] == 1
+    jaxpr = jax.make_jaxpr(
+        lambda a, b, c, p: cp.apply([a, b, c], gate_params=p))(*xs, gp)
+    assert _count_pallas_eqns(jaxpr.jaxpr) == 1
+
+
+def test_gated_chain_grad_matches_xla():
+    """The extended custom VJP: gradients through the fused gate (wrt both
+    an operand and the gate MLP weights) match the XLA reference kernel."""
+    Ls, Lout, B, C = (2, 1, 2), 3, 4, 3
+    xs = [_rand((B, C, num_coeffs(L)), 370 + i) for i, L in enumerate(Ls)]
+    gp = _gate_params(C, 380)
+    plans = [engine.plan_chain(Ls, Lout, backend=b, gate=True)
+             for b in ("fused_pallas", "fused_xla")]
+
+    def loss(plan):
+        return lambda a, p: jnp.sum(
+            plan.apply([a, xs[1], xs[2]], gate_params=p) ** 2)
+
+    gx_p, gw_p = jax.grad(loss(plans[0]), argnums=(0, 1))(xs[0], gp)
+    gx_x, gw_x = jax.grad(loss(plans[1]), argnums=(0, 1))(xs[0], gp)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_x),
+                               rtol=2e-3, atol=2e-3)
+    for k in ("w1", "w2"):
+        np.testing.assert_allclose(np.asarray(gw_p[k]), np.asarray(gw_x[k]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_gated_plan_params_validation():
+    cp = engine.plan_chain((1, 1), 2, backend="tree", gate=True)
+    cpu = engine.plan_chain((1, 1), 2, backend="tree")
+    xs = [_rand((4, 2, num_coeffs(1)), 390 + i) for i in range(2)]
+    with pytest.raises(ValueError, match="gate_params"):
+        cp.apply_jit(xs)
+    with pytest.raises(ValueError, match="ungated"):
+        cpu.apply_jit(xs, gate_params=_gate_params(2, 391))
+
+
+def test_gated_chain_rotation_equivariance():
+    """The fused gate is equivariant: its scalars are l=0 functions of the
+    operands (rotation-invariant), so gating commutes with rotation."""
+    Ls, Lout, C = (2, 1, 2), 2, 3
+    ang = random_angles(seed=6)
+    xs = [np.asarray(random_irreps(L, (5, C), seed=400 + i))
+          for i, L in enumerate(Ls)]
+    gp = _gate_params(C, 410)
+    cp = engine.plan_chain(Ls, Lout, backend="fused_pallas", gate=True)
+    out = np.asarray(cp.apply([jnp.asarray(x) for x in xs], gate_params=gp))
+    out_rot = np.asarray(cp.apply(
+        [jnp.asarray(rotate_irreps(x, L, ang)) for x, L in zip(xs, Ls)],
+        gate_params=gp))
+    np.testing.assert_allclose(out_rot, rotate_irreps(out, Lout, ang),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gate_autotune_keys_and_policy():
+    """Gated plans measure under their own key (("gate", 1) appended — the
+    ungated persisted keys stay byte-identical), and select_gate caches a
+    ("gate", "policy") entry whose value is 'grid' or 'sh'."""
+    eng = engine.GauntEngine()
+    Ls, B = (1, 1), 64
+    cp = eng.plan_chain(Ls, 2, tune="measure", batch_hint=B, gate=True)
+    assert cp.backend in engine.CHAIN_BACKENDS and cp.gate
+    key = engine.PlanKey(1, 1, 2, kind="chain", batch_hint=B,
+                         dtype="float32",
+                         extra=(("Ls", Ls), ("entries", ("sh", "sh")),
+                                ("out", "sh"), ("share", (0, 1)),
+                                ("gate", 1)))
+    assert eng._measured[key] == cp.backend
+    # ungated key is untouched by the gated measurement
+    ukey = engine.PlanKey(1, 1, 2, kind="chain", batch_hint=B,
+                          dtype="float32",
+                          extra=(("Ls", Ls), ("entries", ("sh", "sh")),
+                                 ("out", "sh"), ("share", (0, 1))))
+    assert ukey not in eng._measured
+    pol = eng.select_gate(Ls, 2, batch_hint=B)
+    assert pol in ("grid", "sh")
+    pkey = engine.PlanKey(1, 1, 2, kind="chain", batch_hint=B,
+                          dtype="float32",
+                          extra=(("Ls", Ls), ("entries", ("sh", "sh")),
+                                 ("out", "sh"), ("share", (0, 1)),
+                                 ("gate", "policy")))
+    assert eng._measured[pkey] == pol
+    # cached: a second call re-times nothing
+    runs = eng.timing_runs
+    assert eng.select_gate(Ls, 2, batch_hint=B) == pol
+    assert eng.timing_runs == runs
+
+
+# --------------------------------------------------------------------------
 # mixed-precision: the chain-entry dtype rule (DESIGN.md §3.6)
 # --------------------------------------------------------------------------
 

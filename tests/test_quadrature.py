@@ -1,0 +1,168 @@
+"""S^2 quadrature (DESIGN.md §6.5): exactness at the predicted order,
+aliasing decay under oversampling, Rep-level grid residency counters, and
+rotation equivariance of the grid-resident gate.
+
+The quadrature constants are plain numpy float64, so the exactness tests
+run at full precision without an x64 subprocess.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import constants
+from repro.core.fourier import s2quad_exact_degree, s2quad_size
+from repro.core.rep import Rep, conversion_stats
+from repro.models.equivariant import _gate_quad, gate_apply
+from repro.testing import assert_close, random_angles, random_irreps, rotate_irreps
+
+
+def _sigmoid(v):
+    return 1.0 / (1.0 + np.exp(-v))
+
+
+# --------------------------------------------------------------------------
+# quadrature rule: numpy float64 exactness
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L", [1, 2, 3])
+def test_roundtrip_exact_at_os1(L):
+    # degree-L coeffs -> samples -> coeffs needs integrands of degree 2L,
+    # within the os=1 exact degree 2L+1: sample @ project == identity.
+    nt, nph = s2quad_size(L, 1)
+    I = constants.quad_sample_sh(L, nt, nph) @ constants.quad_project_sh(L, nt, nph)
+    assert np.max(np.abs(I - np.eye((L + 1) ** 2))) < 1e-12
+
+
+def test_exact_degree_bound_is_sharp():
+    # On the os=2 grid for L=1 (n_t=4, n_phi=8) the predicted exact degree
+    # is 7: the SH Gram matrix is the identity exactly up to the largest L'
+    # with 2L' <= 7 (L'=3) and breaks at L'=4.
+    nt, nph = s2quad_size(1, 2)
+    assert s2quad_exact_degree(nt, nph) == 7
+    ok = constants.quad_sample_sh(3, nt, nph) @ constants.quad_project_sh(3, nt, nph)
+    assert np.max(np.abs(ok - np.eye(16))) < 1e-12
+    bad = constants.quad_sample_sh(4, nt, nph) @ constants.quad_project_sh(4, nt, nph)
+    assert np.max(np.abs(bad - np.eye(25))) > 1e-2
+
+
+@pytest.mark.parametrize("L", [1, 2])
+def test_polynomial_gate_exact_at_predicted_order(L):
+    # Squaring a degree-L signal and projecting to 2L integrates degree-4L
+    # content: exact at os=2 (degree 4L+3 resolved), aliased at os=1
+    # (degree 2L+1 only).  Exactness is shown as os=2 == os=4 at f64.
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(5, (L + 1) ** 2))
+
+    def squared(os):
+        nt, nph = s2quad_size(L, os)
+        v = x @ constants.quad_sample_sh(L, nt, nph)
+        return v**2 @ constants.quad_project_sh(2 * L, nt, nph)
+
+    assert np.max(np.abs(squared(2) - squared(4))) < 1e-12
+    assert np.max(np.abs(squared(1) - squared(4))) > 1e-4
+
+
+def test_sigmoid_aliasing_bounded_and_monotone():
+    # A transcendental sample map aliases at every finite order, but its
+    # smooth spectrum decays fast: the projection error vs a dense (os=16)
+    # reference is bounded and shrinks monotonically with oversampling.
+    L = 2
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(5, (L + 1) ** 2)) * 0.5
+
+    def proj(os):
+        nt, nph = s2quad_size(L, os)
+        v = _sigmoid(x @ constants.quad_sample_sh(L, nt, nph))
+        return v @ constants.quad_project_sh(L, nt, nph)
+
+    ref = proj(16)
+    errs = [np.max(np.abs(proj(os) - ref)) for os in (1, 2, 4)]
+    assert errs[0] < 1e-2  # bounded even at critical sampling
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-9
+
+
+# --------------------------------------------------------------------------
+# Rep-level grid residency
+# --------------------------------------------------------------------------
+
+
+def test_rep_sh_quad_roundtrip_ticks_counters():
+    L = 2
+    x = random_irreps(L, (4, 3), seed=1)
+    with conversion_stats(fresh=True) as stats:
+        back = Rep.from_sh(x, L).to_quad().to_sh()
+    assert stats["sh_to_quad"] == 1
+    assert stats["quad_to_sh"] == 1
+    assert back.basis == "sh"
+    assert_close(back.data, x, "float32", tier="identity")
+
+
+def test_rep_fourier_quad_legs():
+    # fourier -> quad -> fourier residency uses the single-transform legs
+    # (one counter tick each), and the quad detour is value-exact.
+    L = 2
+    x = random_irreps(L, (4,), seed=2)
+    with conversion_stats(fresh=True) as stats:
+        r = Rep.from_sh(x, L).to_fourier("half").to_quad()
+        back = r.to_fourier().to_sh()
+    assert stats["fourier_to_quad"] == 1
+    assert stats["quad_to_fourier"] == 1
+    assert stats["sh_to_quad"] == 0 and stats["quad_to_sh"] == 0
+    assert_close(back.data, x, "float32", tier="transform")
+
+
+def test_rep_quad_error_paths():
+    L = 1
+    x = random_irreps(L, (2,), seed=3)
+    sh = Rep.from_sh(x, L)
+    with pytest.raises(ValueError, match="apply_pointwise requires"):
+        sh.apply_pointwise(lambda v: v)
+    q = sh.to_quad(os=2)
+    with pytest.raises(ValueError, match="resampling"):
+        q.to_quad(os=4)
+    with pytest.raises(ValueError, match="cannot raise"):
+        q.to_sh(L + 1)
+
+
+def test_quad_gate_matches_gate_apply():
+    # The gate is affine in the signal (g*f + beta*Y00 with g, beta from
+    # the l=0 scalars), so the quadrature evaluation matches the SH-side
+    # gate at any oversampling — including critical sampling.
+    L = 2
+    x = jnp.asarray(random_irreps(L, (5, 4), seed=4))
+    rng = np.random.default_rng(5)
+    p = {"w1": jnp.asarray(rng.normal(size=(4, 16)) * 0.3, jnp.float32),
+         "w2": jnp.asarray(rng.normal(size=(16, 4)) * 0.3, jnp.float32)}
+    ref = gate_apply(p, x, L)
+    for os in (1, 2):
+        assert_close(_gate_quad(p, x, L, os=os), ref, "float32", tier="transform")
+
+
+# --------------------------------------------------------------------------
+# rotation equivariance of the grid-gate path
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_grid_gate_rotation_equivariance(dtype):
+    # The gate scalars live in l=0 (rotation-invariant), so gating commutes
+    # with rotation.  bf16 inputs are pre-quantized so both orders see the
+    # same representable values.
+    L = 2
+    x32 = random_irreps(L, (6, 4), seed=6)
+    if dtype == "bfloat16":
+        x32 = np.asarray(
+            jnp.asarray(x32).astype(jnp.bfloat16).astype(jnp.float32))
+    x = jnp.asarray(x32, jnp.dtype(dtype))
+    rng = np.random.default_rng(7)
+    p = {"w1": jnp.asarray(rng.normal(size=(4, 16)) * 0.3, jnp.float32),
+         "w2": jnp.asarray(rng.normal(size=(16, 4)) * 0.3, jnp.float32)}
+    ang = random_angles(8)
+    gate_then_rot = rotate_irreps(
+        np.asarray(_gate_quad(p, x, L), dtype=np.float32), L, ang)
+    rot_then_gate = _gate_quad(
+        p, jnp.asarray(rotate_irreps(x32, L, ang), jnp.dtype(dtype)), L)
+    assert_close(np.asarray(rot_then_gate, dtype=np.float32), gate_then_rot,
+                 dtype, tier="transform")

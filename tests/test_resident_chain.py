@@ -206,6 +206,157 @@ def test_mace_resident_matches_nonresident_general_conv():
 
 
 # --------------------------------------------------------------------------
+# grid-resident gates (DESIGN.md §6.5): the nonlinearity is chain-interior
+# --------------------------------------------------------------------------
+
+
+def _gate_params(C, seed):
+    rng = np.random.default_rng(seed)
+    return {"w1": jnp.asarray(rng.normal(size=(C, 16)) * 0.3, jnp.float32),
+            "w2": jnp.asarray(rng.normal(size=(16, C)) * 0.3, jnp.float32)}
+
+
+def test_grid_gate_region_single_entry_exit_pair():
+    """THE elision proof: a whole TP -> gate -> selfmix layer plans as ONE
+    grid-resident region.  The gated TP exits resident (the gate rides the
+    grid), the selfmix re-enters for free, so the region pays one entry
+    group + one exit — the SH-side gate forces a full exit -> gate ->
+    re-entry in the middle and pays >= 2 conversion pairs."""
+    L, B, C = 1, 4, 3
+    Ltot = 2 * L
+    x1 = _rand((B, C, num_coeffs(L)), 500)
+    x2 = _rand((B, C, num_coeffs(L)), 501)
+    gp = _gate_params(C, 502)
+    tp_g = engine.plan_chain((L, L), Ltot, backend="tree", gate=True)
+    tp = engine.plan_chain((L, L), Ltot, backend="tree")
+    mix = engine.plan_chain((Ltot, Ltot), Ltot, backend="tree")
+
+    def grid_region():
+        mid = tp_g.apply([x1, x2], out_basis="fourier", gate_params=gp)
+        mix.apply([mid, mid])
+
+    def sh_region():
+        y = engine._gate_sh(gp, tp.apply([x1, x2]))
+        mix.apply([y, y])
+
+    s2f_grid, f2s_grid = _count(grid_region)
+    s2f_sh, f2s_sh = _count(sh_region)
+    # grid: 2 operand entries + 1 region exit; the gate adds NOTHING
+    assert (s2f_grid, f2s_grid) == (2, 1)
+    # SH gate: TP pays (2, 1), then the gated product re-enters the selfmix
+    # (one shared-operand conversion) — a full extra exit/entry pair
+    assert (s2f_sh, f2s_sh) == (3, 2)
+    pairs_eliminated = min(s2f_sh - s2f_grid, f2s_sh - f2s_grid)
+    assert pairs_eliminated >= 1
+    # and the two regions compute the same thing
+    mid = tp_g.apply([x1, x2], out_basis="fourier", gate_params=gp)
+    got = mix.apply([mid, mid])
+    y = engine._gate_sh(gp, tp.apply([x1, x2]))
+    want = mix.apply([y, y])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_selfmix_gate_params_matches_gate_apply():
+    """manybody_selfmix(gate_params=...) == the models' gate applied to the
+    ungated self-product — the fused stage is exact, not approximate."""
+    from repro.models.equivariant import gate_apply
+
+    L, nu, B, C = 2, 3, 4, 3
+    x = _rand((B, C, num_coeffs(L)), 510)
+    gp = _gate_params(C, 511)
+    want = gate_apply(gp, manybody_selfmix(x, L, nu, Lout=L), L)
+    got = manybody_selfmix(x, L, nu, Lout=L, gate_params=gp)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # the gate is a chain-route feature: an explicit backend pins the
+    # per-plan route, which rejects it
+    with pytest.raises(ValueError, match="chain route"):
+        manybody_gaunt_product([x, x], (L, L), Lout=L, backend="fft",
+                               gate_params=gp)
+
+
+def test_mace_grid_gate_one_conversion_pair_per_layer():
+    """Acceptance: a MaceGaunt layer with grid_gate='on' executes with
+    exactly ONE entry + ONE exit conversion (the gate lives inside the
+    selfmix chain's resident region).  With identity mb_mix the reordered
+    parameterization coincides with the legacy one, so the outputs match."""
+    from repro.configs.gaunt_ff import EquivariantConfig
+    from repro.models.equivariant import MaceGaunt
+
+    cfg = EquivariantConfig(name="t", kind="mace", L=1, L_edge=1, channels=5,
+                            n_layers=1, nu=3, conv_impl="escn")
+    n = 4
+    rng = np.random.default_rng(520)
+    species = jnp.asarray(rng.integers(0, cfg.n_species, size=(n,)))
+    pos = jnp.asarray(rng.normal(size=(n, 3)) * 1.5, jnp.float32)
+    model_on = MaceGaunt(dataclasses.replace(cfg, grid_gate="on"))
+    params = model_on.init(jax.random.PRNGKey(3))
+    # the jit-cached chain ticks at trace time only, while the per-forward
+    # conv re-traces every call (fresh EquivariantConv per features call):
+    # first-minus-second isolates the gated many-body region's conversions
+    first = _count(lambda: model_on.features(params, species, pos))
+    second = _count(lambda: model_on.features(params, species, pos))
+    assert (first[0] - second[0], first[1] - second[1]) == (1, 1)
+    # and the fused gate adds nothing anywhere else: steady state matches
+    # the ungated model's steady state exactly
+    model_plain = MaceGaunt(cfg)
+    model_plain.features(params, species, pos)  # warm its chain trace
+    assert second == _count(lambda: model_plain.features(params, species, pos))
+    # identity channel mix makes gate-before-mix == gate-after-mix exactly
+    for lp in params["layers"]:
+        lp["mb_mix"] = jnp.broadcast_to(
+            jnp.eye(cfg.channels), (cfg.L + 1, cfg.channels, cfg.channels))
+    out_on = model_on.features(params, species, pos)
+    out_off = MaceGaunt(cfg).features(params, species, pos)
+    np.testing.assert_allclose(np.asarray(out_on), np.asarray(out_off),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_segnn_grid_gate_quad_path_matches_off():
+    """SEGNN's post-mix gate has no adjacent chain to fuse into: grid_gate
+    ='on' routes it through the S^2 quadrature Rep (exact — the gate is
+    affine), ticking one sh_to_quad/quad_to_sh pair per layer."""
+    from repro.configs.gaunt_ff import EquivariantConfig
+    from repro.models.equivariant import SegnnNBody
+
+    cfg = EquivariantConfig(name="t", kind="segnn", L=1, L_edge=1, channels=4,
+                            n_layers=2)
+    n = 5
+    rng = np.random.default_rng(530)
+    charge = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    pos = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    vel = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+    model_off = SegnnNBody(cfg)
+    params = model_off.init(jax.random.PRNGKey(4))
+    model_on = SegnnNBody(dataclasses.replace(cfg, grid_gate="on"))
+    with rep.conversion_stats(fresh=True) as c:
+        out_on = model_on.forward(params, charge, pos, vel)
+    assert c["sh_to_quad"] == cfg.n_layers
+    assert c["quad_to_sh"] == cfg.n_layers
+    out_off = model_off.forward(params, charge, pos, vel)
+    np.testing.assert_allclose(np.asarray(out_on), np.asarray(out_off),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_resolve_grid_gate_policy():
+    from repro.configs.gaunt_ff import EquivariantConfig
+    from repro.models.equivariant import _resolve_grid_gate
+
+    cfg = EquivariantConfig(name="t", kind="mace", L=1, channels=4)
+    Ls = (1, 1, 1)
+    assert _resolve_grid_gate(cfg, Ls, 1) is False
+    assert _resolve_grid_gate(
+        dataclasses.replace(cfg, grid_gate="on"), Ls, 1) is True
+    # 'auto' without measured tuning stays off (no silent timing runs)
+    assert _resolve_grid_gate(
+        dataclasses.replace(cfg, grid_gate="auto"), Ls, 1) is False
+    with pytest.raises(ValueError, match="grid_gate"):
+        _resolve_grid_gate(
+            dataclasses.replace(cfg, grid_gate="bogus"), Ls, 1)
+
+
+# --------------------------------------------------------------------------
 # Rep semantics
 # --------------------------------------------------------------------------
 
