@@ -1,0 +1,154 @@
+"""Serve load generator (DESIGN.md §10.5): open-loop QPS sweep and the
+bucketed-vs-single-``max_atoms`` throughput comparison.
+
+Two scenarios over a tiny MaceGaunt model and a MIXED-size molecular
+workload (60% small / 30% medium / 10% large — the distribution bucketing
+exists for):
+
+- ``serve_bucketed_vs_single`` — closed loop: the same request stream
+  drained through size-bucketed slot pools vs one fixed-``max_atoms`` slot
+  array with the SAME total slot count.  Records wall time, throughput,
+  padding efficiency for both, and the throughput speedup (the CI guard's
+  acceptance signal: bucketing must beat worst-case padding on CPU).
+- ``serve_qps{q}`` — open loop at each swept arrival rate: requests are
+  submitted on a wall-clock schedule (arrival i at ``i/qps`` seconds) and
+  the scheduler pumps the pipelined engine, admitting mid-flight.  Records
+  p50/p99 total latency, achieved throughput, padding efficiency, and
+  rejection counts straight from the serve metrics layer.
+
+Both engines are warmed (per-bucket compiles excluded from timing) — serve
+latency here is serving cost, not compile cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .common import record
+
+SIZE_CLASSES = ((2, 6, 0.6), (7, 12, 0.3), (13, 24, 0.1))
+BUCKETS = ((6, 2), (12, 2), (24, 2))          # small/medium/large ladder
+SINGLE_SLOTS = sum(n for _, n in BUCKETS)     # same concurrency, one bucket
+
+
+def _tiny_model():
+    import jax
+
+    from repro.configs.gaunt_ff import gaunt_mace_ff
+    from repro.models.equivariant import MaceGaunt
+
+    cfg = dataclasses.replace(gaunt_mace_ff, channels=8, n_layers=1, L=1,
+                              L_edge=1, n_species=4)
+    model = MaceGaunt(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _workload(n_req: int, seed: int = 0):
+    """Mixed-size request stream; deterministic."""
+    from repro.serve.engine import EquivariantRequest
+
+    rng = np.random.default_rng(seed)
+    lo = np.array([c[0] for c in SIZE_CLASSES])
+    hi = np.array([c[1] for c in SIZE_CLASSES])
+    probs = np.array([c[2] for c in SIZE_CLASSES])
+    cls = rng.choice(len(SIZE_CLASSES), size=n_req, p=probs)
+    sizes = rng.integers(lo[cls], hi[cls] + 1)
+    return [EquivariantRequest(
+        species=rng.integers(0, 4, n),
+        pos=(rng.normal(size=(n, 3)) * 1.5).astype(np.float32), rid=i)
+        for i, n in enumerate(sizes)]
+
+
+def _drain_timed(eng, reqs):
+    t0 = time.monotonic()
+    eng.run(reqs)
+    return time.monotonic() - t0
+
+
+def _open_loop(eng, reqs, qps: float) -> float:
+    """Submit request i at wall-clock ``i/qps`` seconds; pump the pipelined
+    engine (admissions overlap in-flight steps).  Returns elapsed seconds."""
+    from repro.serve.scheduler import Scheduler
+
+    sched = Scheduler(eng)
+    arrivals = [i / qps for i in range(len(reqs))]
+    t0 = time.monotonic()
+    i = 0
+
+    def feed():
+        nonlocal i
+        now = time.monotonic() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            sched.submit(reqs[i])
+            i += 1
+
+    while True:
+        feed()
+        if not sched.pump(poll=feed) and i >= len(reqs):
+            break
+        if not eng.has_active() and not len(sched.queue) and i < len(reqs):
+            time.sleep(min(0.002, max(0.0, arrivals[i] -
+                                      (time.monotonic() - t0))))
+    return time.monotonic() - t0
+
+
+def run_serve(fast: bool = True, csv: bool = True, qps_list=None,
+              n_req: int | None = None):
+    from repro.serve.engine import EquivariantServeEngine
+
+    records = []
+    model, params = _tiny_model()
+    n_req = n_req or (24 if fast else 96)
+    qps_list = qps_list or ((20.0, 60.0) if fast else (10.0, 30.0, 100.0))
+
+    # ---------------- closed loop: bucketed vs single-max_atoms ------------
+    bucketed = EquivariantServeEngine(model, params, buckets=BUCKETS)
+    bucketed.warmup()
+    single = EquivariantServeEngine(model, params, n_slots=SINGLE_SLOTS,
+                                    max_atoms=max(b[0] for b in BUCKETS))
+    single.warmup()
+    t_single = _drain_timed(single, _workload(n_req))
+    t_bucketed = _drain_timed(bucketed, _workload(n_req))
+    ms = single.metrics.summary()
+    mb = bucketed.metrics.summary()
+    record(records, "serve_bucketed_vs_single", t_bucketed * 1e6, echo=csv,
+           single_us=round(t_single * 1e6, 1),
+           speedup_vs_single=round(t_single / t_bucketed, 2),
+           throughput_rps=round(n_req / t_bucketed, 1),
+           single_throughput_rps=round(n_req / t_single, 1),
+           padding_efficiency=round(mb["padding_efficiency"], 3),
+           single_padding_efficiency=round(ms["padding_efficiency"], 3),
+           n_requests=n_req)
+
+    # ---------------- open loop: QPS sweep over the bucketed engine --------
+    from repro.core.engine import get_engine
+
+    for qps in qps_list:
+        bucketed.metrics.reset()
+        runs0 = get_engine().timing_runs
+        elapsed = _open_loop(bucketed, _workload(n_req, seed=int(qps)), qps)
+        m = bucketed.metrics.summary()
+        # timing runs DURING serving (the global counter also counts other
+        # bench jobs in this process): must be zero — a warm engine never
+        # time-measures mid-traffic
+        mid_serve_runs = get_engine().timing_runs - runs0
+        record(records, f"serve_qps{qps:g}", m["latency_p50_ms"] * 1e3,
+               echo=csv,
+               p99_us=round(m["latency_p99_ms"] * 1e3, 1),
+               queue_wait_p50_us=round(m["queue_wait_p50_ms"] * 1e3, 1),
+               step_p50_us=round(m["step_p50_ms"] * 1e3, 1),
+               target_qps=qps,
+               throughput_rps=round(m["completed"] / elapsed, 1),
+               padding_efficiency=round(m["padding_efficiency"], 3),
+               occupancy=round(m["occupancy_mean"], 3),
+               completed=m["completed"], rejected=m["rejected"],
+               steps=m["steps"], staged_early=m["staged_early"],
+               timing_runs=mid_serve_runs)
+    return records
+
+
+if __name__ == "__main__":
+    run_serve(fast=True)

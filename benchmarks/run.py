@@ -35,6 +35,7 @@ def main() -> None:
         bench_manybody,
         bench_mace_gaunt,
         bench_sanity_nbody,
+        bench_serve,
     )
 
     jobs = {
@@ -48,6 +49,7 @@ def main() -> None:
         "engine_grid_gate": bench_engine.run_grid_gate,
         "engine_mixed": bench_engine.run_mixed_precision,
         "engine_autotune_cache": bench_engine.run_autotune_cache,
+        "serve": lambda: bench_serve.run_serve(fast=args.fast),
         "fig1a": lambda: bench_feature_interaction.run(
             L_list=(1, 2, 3, 4) if args.fast else (1, 2, 3, 4, 5, 6, 8),
             backend=args.backend),

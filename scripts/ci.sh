@@ -44,6 +44,20 @@ python -m pytest -q tests/test_equivariance.py tests/test_chain_kernel.py \
 echo "=== batched-bench smoke (batched vs looped dispatch) ==="
 python -m benchmarks.run --fast --only engine_batched --json ''
 
+echo "=== serve tier: load-generator smoke (low QPS, tiny model, bucketed pools) ==="
+# the serving scale-out gate (DESIGN.md §10): the open-loop load generator
+# drives the bucketed scheduler/pool/pipelining stack end-to-end at low QPS
+# — a deadlock, lost request, or scheduler regression hangs or fails here
+# before the full bench (which re-runs serve into BENCH_gaunt.json) starts
+python - <<'EOF'
+from benchmarks.bench_serve import run_serve
+recs = run_serve(fast=True, n_req=12, qps_list=(15.0,))
+by = {r["name"]: r for r in recs}
+assert by["serve_qps15"]["completed"] == 12, by
+assert by["serve_qps15"]["rejected"] == 0, by
+print("serve smoke OK")
+EOF
+
 echo "=== fast benchmarks (--backend auto -> BENCH_gaunt.json) ==="
 python -m benchmarks.run --fast --backend auto --json BENCH_gaunt.json
 
@@ -72,6 +86,16 @@ for r in recs:
         print(f"  {r['name']:36s} {r['us']:>10.1f} us  warm "
               f"(cold {r.get('cold_us')} us, x{r.get('speedup_vs_cold')}, "
               f"warm timing runs {r.get('warm_timing_runs')})")
+    elif r["name"] == "serve_bucketed_vs_single":
+        print(f"  {r['name']:36s} {r['us']:>10.1f} us  bucketed "
+              f"x{r.get('speedup_vs_single')} vs single max_atoms "
+              f"({r.get('throughput_rps')} rps, padding eff "
+              f"{r.get('padding_efficiency')} vs "
+              f"{r.get('single_padding_efficiency')})")
+    elif r["name"].startswith("serve_qps"):
+        print(f"  {r['name']:36s} {r['us']:>10.1f} us p50  "
+              f"(p99 {r.get('p99_us')} us, {r.get('throughput_rps')} rps, "
+              f"padding eff {r.get('padding_efficiency')})")
     elif r["name"].startswith(("engine_batched", "engine_chain")):
         print(f"  {r['name']:36s} {r['us']:>10.1f} us  "
               f"(looped {r.get('looped_us')} us, x{r.get('speedup_vs_looped')})")
@@ -237,6 +261,44 @@ if gate_recs and REQUIRE_GATE_WIN and not any(
     fail.append("engine_grid_gate: the fused grid gate beat the SH gate on "
                 "NO benchmarked workload (set BENCH_GUARD_REQUIRE_GATE_WIN=0 "
                 "if the SH epilogue honestly wins everywhere on this host)")
+
+# guard 7 — serve scale-out (DESIGN.md §10): the bench record must EXIST
+# (a silently-skipped serve job would let the serving layer rot unmeasured),
+# open-loop p99 latency must stay under an env-tunable ceiling, nothing may
+# be rejected at the smoke's low QPS, and the bucketed pools must beat the
+# single-max_atoms baseline on throughput for the mixed-size workload —
+# the whole point of size bucketing (committed runs show ~x2.7 on CPU; the
+# floor sits at 1.0 because the win comes from padded-FLOP arithmetic, not
+# microbenchmark noise).  BENCH_GUARD_SERVE_P99_MS / BENCH_GUARD_SERVE_FLOOR
+# env-tunable; BENCH_GUARD_REQUIRE_SERVE_WIN=0 opts out of the win check on
+# hosts whose scheduling jitter genuinely swamps the padding arithmetic.
+SERVE_P99_MS = float(os.environ.get("BENCH_GUARD_SERVE_P99_MS", "500"))
+SERVE_FLOOR = float(os.environ.get("BENCH_GUARD_SERVE_FLOOR", "1.0"))
+REQUIRE_SERVE_WIN = os.environ.get("BENCH_GUARD_REQUIRE_SERVE_WIN", "1") != "0"
+serve_recs = [r for r in recs if r["name"].startswith("serve_")]
+if not serve_recs:
+    fail.append("serve: BENCH_gaunt.json carries NO serve_* records — the "
+                "load-generator bench did not run or did not record")
+else:
+    vs = [r for r in serve_recs if r["name"] == "serve_bucketed_vs_single"]
+    if not vs:
+        fail.append("serve: the serve_bucketed_vs_single record is missing")
+    elif REQUIRE_SERVE_WIN and vs[0].get("speedup_vs_single", 0.0) < SERVE_FLOOR:
+        fail.append(f"serve_bucketed_vs_single: bucketed pools LOST to the "
+                    f"single-max_atoms baseline on throughput "
+                    f"(x{vs[0].get('speedup_vs_single')} < {SERVE_FLOOR})")
+    qps_recs = [r for r in serve_recs if r["name"].startswith("serve_qps")]
+    if not qps_recs:
+        fail.append("serve: no serve_qps* records — the QPS sweep is missing")
+    for r in qps_recs:
+        p99_ms = r.get("p99_us", 0.0) / 1e3
+        if p99_ms > SERVE_P99_MS:
+            fail.append(f"{r['name']}: p99 latency {p99_ms:.1f}ms exceeds "
+                        f"the {SERVE_P99_MS}ms ceiling "
+                        f"(BENCH_GUARD_SERVE_P99_MS)")
+        if r.get("timing_runs") not in (None, 0):
+            fail.append(f"{r['name']}: {r['timing_runs']} mid-serve autotune "
+                        f"timing runs (serving must never time-measure)")
 
 if fail:
     print("BENCH GUARD FAILURES:")

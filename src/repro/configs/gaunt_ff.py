@@ -63,6 +63,14 @@ class EquivariantConfig:
     # (engine.select_gate, keyed like chain plans) per workload; requires
     # chain_tune='measure', else it resolves to 'off'.
     grid_gate: str = "off"
+    # serve-time slot buckets (DESIGN.md §10.2): ((max_atoms, n_slots), ...)
+    # size-bucketed pools for EquivariantServeEngine — each bucket compiles
+    # its own step at its own padded shape and seeds its own warmup/autotune
+    # keys, so small molecules stop padding to the deployment maximum.  None
+    # (default) keeps the engine's single fixed-max_atoms bucket; the
+    # engine's explicit ``buckets=`` argument overrides this knob.  See
+    # serve/pools.py `default_buckets` for the small/medium/large ladder.
+    serve_buckets: tuple[tuple[int, int], ...] | None = None
 
 
 gaunt_mace_ff = EquivariantConfig(

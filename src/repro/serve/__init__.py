@@ -1,1 +1,5 @@
-from .engine import ServeEngine, Request  # noqa: F401
+from .engine import (ServeEngine, Request,  # noqa: F401
+                     EquivariantServeEngine, EquivariantRequest)
+from .metrics import ServeMetrics, percentile  # noqa: F401
+from .pools import BucketSpec, BucketedPools, SlotPool, default_buckets  # noqa: F401
+from .scheduler import AdmissionQueue, Scheduler  # noqa: F401

@@ -1,54 +1,63 @@
-"""Batched serving engines.
+"""Batched serving engines (DESIGN.md §10).
 
 `ServeEngine` — slot-based continuous batching for LM decoding over a shared
 KV (or recurrent-state) cache:
 
 - Fixed B decode slots; requests are admitted into free slots, prefilled
   one-at-a-time (slot-batched prefill), then all active slots step together.
-- Greedy or temperature sampling; per-slot stop conditions (EOS / max_len).
+- Greedy or temperature sampling; sampling keys derive from
+  ``(engine seed, request rid, token index)`` so a request's sampled tokens
+  are reproducible regardless of admission order or batch composition.
+- Per-slot stop conditions (EOS / max_len); the ``max_new_tokens`` budget is
+  checked at admission too — the prefill-sampled token counts against it.
 - Cache layouts come from Model.init_cache and work for every family
   (attention KV, RWKV state, Zamba hybrid).
 
 `EquivariantServeEngine` — the same continuous-batching discipline for
 force-field inference (energy/forces/relaxation requests on a Gaunt-MACE
-model): ragged molecules are padded into fixed atom slots, ghost atoms are
-parked beyond the cutoff and masked out of the energy, and every step
-evaluates ALL active slots in one jitted vmapped call — whose tensor
-products route through the engine's batched Gaunt plans (DESIGN.md §5) and
-through Fourier-resident chain plans (DESIGN.md §6): inside every relaxation
-step each layer's many-body product converts once and projects once, the
-edge geometry (resident filter grid or hoisted Wigner blocks) is built once
-per step, and the compiled step function (plus the plan/constant caches
-backing it) is carried across ALL relaxation steps of every request — so
-the per-step cost is pure resident math, no replanning and no interior SH
-round trips.  Residency holds for sharded configs too (``shard_data``):
-resident grids row-shard through the batched buckets, so the serving step
-is never forced off the resident route.  ``warmup()`` builds and compiles
-that step on ghost-only slots so the first real request pays serving cost
-only.
+model), scaled out across the serve subsystem:
+
+- **admission** rides `serve/scheduler.py`: a priority queue with
+  per-request deadlines and structured rejection (invalid or oversized
+  geometry never touches a shared batched step);
+- **slots** ride `serve/pools.py`: size-bucketed slot pools, each bucket
+  compiling its own step function for its own padded shape, so a small
+  molecule no longer pads to the deployment-maximum atom count;
+- **stepping** is pipelined: each pool's jitted step is dispatched
+  asynchronously and the NEXT step's admissions + host slot writes +
+  device staging overlap the in-flight device computation;
+- **observability** rides `serve/metrics.py`: queue-wait/step/total
+  latency, occupancy and padding-waste gauges, rejection counters, and the
+  Gaunt engine's own timing-run/conversion counters.
+
+Inside every step each layer's tensor products route through the engine's
+batched Gaunt plans (DESIGN.md §5) and Fourier-resident chain plans
+(DESIGN.md §6): per relaxation step each layer's many-body product converts
+once and projects once, the edge geometry is built once, and each bucket's
+compiled step (plus the plan/constant caches behind it) is carried across
+ALL relaxation steps of every request it serves.  Residency holds for
+sharded configs too (``shard_data``): resident grids row-shard through the
+batched buckets, so the serving step is never forced off the resident
+route.  ``warmup()`` seeds every bucket's measured autotune keys and
+compiles every bucket's step on ghost-only slots, so the first real request
+pays serving cost only.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .metrics import ServeMetrics
+from .pools import BucketedPools, BucketSpec
+from .scheduler import REASON_INVALID, REASON_TOO_LARGE, Scheduler
+
 __all__ = ["ServeEngine", "Request",
            "EquivariantServeEngine", "EquivariantRequest"]
-
-
-def _drain(engine, requests: list) -> list:
-    """Continuous batching: admit as slots free up, step until drained.
-    Shared by both engines (they expose _free_slots/add_request/step)."""
-    pending = list(requests)
-    while pending or any(r is not None for r in engine.slot_req):
-        while pending and engine._free_slots():
-            engine.add_request(pending.pop(0))
-        engine.step()
-    return requests
 
 
 @dataclasses.dataclass
@@ -57,9 +66,15 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     rid: int = 0
+    # scheduling (serve/scheduler.py): lower priority value = served first;
+    # deadline = seconds of allowed queue wait from submission, None = none
+    priority: int = 0
+    deadline: float | None = None
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False
+    reject_reason: str | None = None
 
 
 class ServeEngine:
@@ -71,7 +86,8 @@ class ServeEngine:
         self.cache = model.init_cache(n_slots, max_len)
         self.pos = np.full(n_slots, -1, dtype=np.int32)  # last written index
         self.slot_req: list[Optional[Request]] = [None] * n_slots
-        self.key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
+        self.metrics = ServeMetrics()
         self._decode = jax.jit(model.decode_step)
 
         def prefill_one(params, cache, tokens, slot):
@@ -99,6 +115,22 @@ class ServeEngine:
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
+    def has_active(self) -> bool:
+        return any(r is not None for r in self.slot_req)
+
+    def validate(self, req: Request):
+        """Admission-time validation -> None | (reason, detail)."""
+        if not req.prompt:
+            return (REASON_INVALID, "empty prompt")
+        if req.max_new_tokens < 1:
+            return (REASON_INVALID,
+                    f"max_new_tokens={req.max_new_tokens} < 1")
+        if len(req.prompt) + 1 >= self.max_len:
+            return (REASON_TOO_LARGE,
+                    f"prompt of {len(req.prompt)} tokens leaves no decode "
+                    f"room under max_len={self.max_len}")
+        return None
+
     def _reset_slot(self, slot: int):
         """Zero one slot's rows in every cache leaf (batch dim = 1)."""
         self.cache = jax.tree.map(
@@ -118,22 +150,38 @@ class ServeEngine:
         # update every row per step, which would pollute live slots
         self.cache = jax.tree.map(
             lambda old, new: old.at[:, slot].set(new[:, slot]), snapshot, new_cache)
+        # first generated token comes from the last prompt logits
+        tok = self._sample(last_logits, req)
+        req.output.append(int(tok))
+        if len(req.output) >= req.max_new_tokens:
+            # budget met by the prefill-sampled token: retire at admission,
+            # never occupy the slot (a max_new_tokens=1 request used to get
+            # a second token before the post-step done check fired)
+            req.done = True
+            self.metrics.observe_complete(req)
+            return True
         self.pos[slot] = len(req.prompt) - 1
         self.slot_req[slot] = req
-        # first generated token comes from the last prompt logits
-        tok = self._sample(last_logits, req.temperature)
-        req.output.append(int(tok))
         return True
 
-    def _sample(self, logits, temperature: float):
-        if temperature <= 0:
+    # scheduler protocol: admission (validation runs in the scheduler)
+    try_admit = add_request
+
+    def _sample(self, logits, req: Request):
+        if req.temperature <= 0:
             return int(jnp.argmax(logits))
-        self.key, sub = jax.random.split(self.key)
-        return int(jax.random.categorical(sub, logits / temperature))
+        # reproducible per request: (engine seed, rid, token index) — NOT a
+        # shared mutating engine key, whose stream depended on admission order
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._base_key, req.rid), len(req.output))
+        return int(jax.random.categorical(key, logits / req.temperature))
 
     # ------------------------------------------------------------- stepping
-    def step(self):
-        """One decode step for all active slots."""
+    def step(self, overlap=None):
+        """One decode step for all active slots.  ``overlap`` (the
+        scheduler's admission pass) runs after the decode dispatch and
+        before sampling reads the logits, so prefill/bookkeeping for the
+        next step's admissions overlaps the in-flight decode."""
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return
@@ -145,18 +193,21 @@ class ServeEngine:
         pos = jnp.asarray(pos_np)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks), pos)
+        if overlap is not None:
+            overlap()
         for i in active:
             self.pos[i] += 1
             req = self.slot_req[i]
-            tok = self._sample(logits[i, 0], req.temperature)
+            tok = self._sample(logits[i, 0], req)
             req.output.append(tok)
             if len(req.output) >= req.max_new_tokens or self.pos[i] + 2 >= self.max_len:
                 req.done = True
+                self.metrics.observe_complete(req)
                 self.slot_req[i] = None
                 self.pos[i] = -1
 
     def run(self, requests: list[Request]) -> list[Request]:
-        return _drain(self, requests)
+        return Scheduler(self).run(requests)
 
 
 # --------------------------------------------------------------------------
@@ -176,70 +227,88 @@ class EquivariantRequest:
     steps: int = 1
     step_size: float = 0.0        # relaxation: pos += step_size * forces
     rid: int = 0
+    # scheduling (serve/scheduler.py): lower priority value = served first;
+    # deadline = seconds of allowed queue wait from submission, None = none
+    priority: int = 0
+    deadline: float | None = None
     # filled by the engine:
     energy: float | None = None
     forces: np.ndarray | None = None
     done: bool = False
+    rejected: bool = False
+    reject_reason: str | None = None
 
 
 class EquivariantServeEngine:
-    """Continuous batching for a MaceGaunt-style model: fixed atom-padded
-    slots, one fused batched evaluation per step for every active request."""
+    """Continuous batching for a MaceGaunt-style model over size-bucketed
+    atom-padded slot pools: every step dispatches one fused batched
+    evaluation per active bucket, pipelining the next step's admissions
+    against the in-flight device compute."""
 
     def __init__(self, model, params, n_slots: int = 4, max_atoms: int = 16,
-                 warmup: bool = False):
+                 warmup: bool = False, buckets=None, clock=time.monotonic):
         self.model = model
         self.params = params
-        self.n_slots = n_slots
-        self.max_atoms = max_atoms
-        self.slot_req: list[Optional[EquivariantRequest]] = [None] * n_slots
-        self.species = np.zeros((n_slots, max_atoms), np.int32)
-        self.pos = np.asarray(self._parked(), np.float32)[None].repeat(n_slots, 0)
-        self.mask = np.zeros((n_slots, max_atoms), np.float32)
-
-        def batched(params, species, pos, mask):
-            """All slots in one call: vmapped masked energy + forces."""
-            def one(sp, p, m):
-                e, g = jax.value_and_grad(
-                    lambda pp: model.energy_masked(params, sp, pp, m))(p)
-                return e, -g
-            return jax.vmap(one)(species, pos, mask)
-
-        # step inputs are fresh device buffers every step (jnp.asarray of the
-        # host-side slot state), so donating them is safe on accelerators
-        donate = (1, 2, 3) if jax.default_backend() != "cpu" else ()
-        self._step_fn = jax.jit(batched, donate_argnums=donate)
+        self.clock = clock
+        self.metrics = ServeMetrics(clock=clock)
+        specs = self._resolve_buckets(buckets, n_slots, max_atoms)
+        self.pools = BucketedPools(model, params, specs,
+                                   metrics=self.metrics, clock=clock)
         if warmup:
             self.warmup()
 
+    def _resolve_buckets(self, buckets, n_slots, max_atoms):
+        """Bucket resolution: explicit ``buckets`` arg > the config's
+        ``serve_buckets`` knob > a single (max_atoms, n_slots) bucket (the
+        historical fixed-padding behavior)."""
+        if buckets is None:
+            cfg = getattr(self.model, "cfg", None)
+            buckets = getattr(cfg, "serve_buckets", None) \
+                if cfg is not None else None
+        if buckets is None:
+            return (BucketSpec(max_atoms, n_slots),)
+        return tuple(b if isinstance(b, BucketSpec) else BucketSpec(*b)
+                     for b in buckets)
+
+    # ------------------------------------------------------- compat surface
+    @property
+    def max_atoms(self) -> int:
+        return self.pools.max_atoms
+
+    @property
+    def n_slots(self) -> int:
+        return sum(p.spec.n_slots for p in self.pools)
+
+    @property
+    def slot_req(self) -> list:
+        """Flat view over every pool's slots (smallest bucket first)."""
+        return [r for p in self.pools for r in p.slot_req]
+
+    # ------------------------------------------------------------- warmup
     def warmup(self) -> None:
-        """Compile the fused step (and build every Gaunt chain/boundary plan
-        + conversion constant behind it) on ghost-only slots, so admission
-        latency for the first real request is serving cost only.  The
-        compiled step — with its Fourier-resident plans — is what every
-        subsequent relaxation step of every request reuses.
+        """Per-bucket compile + autotune seeding, so admission latency for
+        the first real request is serving cost only.  Each bucket's step is
+        compiled on ghost-only slots, and each bucket's measured chain keys
+        are seeded at that bucket's OWN row count — the batch_hint its
+        traced step actually presents.
 
         With ``cfg.chain_tune='measure'`` the model's chained products
         dispatch through the engine's measured chain autotuner (DESIGN.md
-        §6.4) — measurement cannot run inside the step's jit trace, so it is
-        seeded here, outside jit: the many-body selfmix chain key (the only
-        chain a served MaceGaunt plans — its layer-constant edge geometry
-        rides boundary buckets, not chains) is measured once and the traced
-        step then hits the cached selection (possibly the single-dispatch
-        collocation kernel).  Both storage precisions are pre-measured
-        (DESIGN.md §3.6): the config's ``compute_dtype`` AND its float32
-        sibling — for ``compute_dtype='auto'`` the auto key itself times
-        both and caches the winner — so the traced step hits a warm
-        precision selection, never a mid-serve timing pass.  Skipped for
-        ``shard_data`` configs: sharded chains pin the 'tree' backend and
-        never consult the measured cache, so seeding would be pure wasted
-        warmup latency.
+        §6.4) — measurement cannot run inside a step's jit trace, so it is
+        seeded here, outside jit: per bucket, the many-body selfmix chain
+        key (the only chain a served MaceGaunt plans — its layer-constant
+        edge geometry rides boundary buckets, not chains) is measured once
+        and the traced step then hits the cached selection.  Both storage
+        precisions are pre-measured (DESIGN.md §3.6), and a ``grid_gate``
+        'auto' policy is resolved per bucket before its step compiles
+        (DESIGN.md §6.5).  Skipped for ``shard_data`` configs: sharded
+        chains pin the 'tree' backend and never consult the measured cache.
 
         If a persistent autotune cache is configured (``cfg.autotune_cache``
-        or $REPRO_AUTOTUNE_CACHE, see DESIGN.md §4.5), it is loaded FIRST:
-        on a warm host every seeded key hits the persisted table and warmup
-        performs zero timing runs — the chain measurements below become
-        lookups and the whole cold-start cliff collapses to one jit compile."""
+        or $REPRO_AUTOTUNE_CACHE, DESIGN.md §4.5), it is loaded FIRST: on a
+        warm host every per-bucket key hits the persisted table and warmup
+        performs zero timing runs — subprocess-proven in
+        tests/test_serve_scale.py."""
         cfg = getattr(self.model, "cfg", None)
         from repro.core import engine as _engine
 
@@ -251,87 +320,101 @@ class EquivariantServeEngine:
         if (cfg is not None
                 and getattr(cfg, "chain_tune", "heuristic") == "measure"
                 and not getattr(cfg, "shard_data", False)):
-            # mirror the traced call's key exactly: per-slot row count (the
-            # step vmaps over slots, so the chain sees [max_atoms, channels]
-            # leading dims per element) and the selfmix [A]*nu share pattern
-            rows = self.max_atoms * cfg.channels
-            dts = getattr(cfg, "compute_dtype", "float32")
-            # grid-resident gate (DESIGN.md §6.5): resolve the measured
-            # 'auto' policy here, outside jit — inside the step's trace an
-            # unseeded select_gate key falls back to 'sh', so the policy
-            # must be decided (and cached) before the step compiles.  A
-            # resolved-on config additionally seeds the gate-fused chain
-            # key so the traced step hits the cached gated selection.
-            gg = getattr(cfg, "grid_gate", "off")
-            if gg == "auto":
-                gg = "on" if eng.select_gate(
-                    (cfg.L,) * cfg.nu, cfg.L, dtype=dts, batch_hint=rows,
-                    entry_hint=("sh",) * cfg.nu,
-                    share_hint=(0,) * cfg.nu) == "grid" else "off"
-            gate_opts = (False, True) if gg in ("on", "grid", True) \
-                else (False,)
-            for d in dict.fromkeys(["float32", dts] if dts != "auto"
-                                   else ["auto"]):
-                for g in gate_opts:
-                    _engine.plan_chain((cfg.L,) * cfg.nu, cfg.L,
-                                       tune="measure", batch_hint=rows,
-                                       share_hint=(0,) * cfg.nu, dtype=d,
-                                       gate=g)
-        jax.block_until_ready(self._step_fn(
-            self.params, jnp.asarray(self.species), jnp.asarray(self.pos),
-            jnp.asarray(self.mask)))
-
-    def _parked(self) -> np.ndarray:
-        """Ghost-atom positions: distinct sites far outside any cutoff, so
-        padded atoms interact with nothing (incl. each other)."""
-        far = 1e4 * (1.0 + np.arange(self.max_atoms, dtype=np.float32))
-        return np.stack([far, np.zeros_like(far), np.zeros_like(far)], -1)
+            for pool in self.pools:
+                # mirror each bucket's traced call exactly: per-slot row
+                # count (the step vmaps over slots, so the chain sees
+                # [bucket max_atoms, channels] leading dims per element)
+                # and the selfmix [A]*nu share pattern
+                rows = pool.spec.max_atoms * cfg.channels
+                dts = getattr(cfg, "compute_dtype", "float32")
+                gg = getattr(cfg, "grid_gate", "off")
+                if gg == "auto":
+                    gg = "on" if eng.select_gate(
+                        (cfg.L,) * cfg.nu, cfg.L, dtype=dts, batch_hint=rows,
+                        entry_hint=("sh",) * cfg.nu,
+                        share_hint=(0,) * cfg.nu) == "grid" else "off"
+                gate_opts = (False, True) if gg in ("on", "grid", True) \
+                    else (False,)
+                for d in dict.fromkeys(["float32", dts] if dts != "auto"
+                                       else ["auto"]):
+                    for g in gate_opts:
+                        _engine.plan_chain((cfg.L,) * cfg.nu, cfg.L,
+                                           tune="measure", batch_hint=rows,
+                                           share_hint=(0,) * cfg.nu, dtype=d,
+                                           gate=g)
+        for pool in self.pools:
+            pool.warmup_compile()
 
     # ------------------------------------------------------------- admission
-    def _free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    def has_active(self) -> bool:
+        return self.pools.has_active()
+
+    def validate(self, req: EquivariantRequest):
+        """Admission-time validation -> None | (reason, detail).  Bad
+        geometry is rejected HERE, structurally — one NaN position evaluated
+        in a shared batched step would poison every slot's gradient."""
+        species = np.asarray(req.species)
+        if species.size == 0:
+            return (REASON_INVALID, "empty species")
+        if getattr(req, "steps", 1) < 1:
+            return (REASON_INVALID, f"steps={req.steps} < 1")
+        pos = np.asarray(req.pos, np.float32)
+        if pos.shape != (species.size, 3):
+            return (REASON_INVALID,
+                    f"pos shape {pos.shape} != ({species.size}, 3)")
+        if not np.all(np.isfinite(pos)):
+            return (REASON_INVALID, "non-finite positions")
+        if species.size > self.pools.max_atoms:
+            return (REASON_TOO_LARGE,
+                    f"{species.size} atoms > largest bucket "
+                    f"{self.pools.max_atoms}")
+        return None
+
+    def try_admit(self, req: EquivariantRequest) -> bool:
+        """Admit into the smallest bucket that fits (strictly — a small
+        request never spills into a larger bucket, so it can never trigger
+        a larger bucket's compile or pay its padding)."""
+        pool = self.pools.select(len(req.species))
+        if pool is None:  # unreachable through the scheduler (validate)
+            return False
+        return pool.admit(req)
 
     def add_request(self, req: EquivariantRequest) -> bool:
-        n = len(req.species)
-        if n > self.max_atoms:
-            raise ValueError(f"request has {n} atoms > max_atoms={self.max_atoms}")
-        free = self._free_slots()
-        if not free:
-            return False
-        slot = free[0]
-        self.species[slot] = 0
-        self.species[slot, :n] = np.asarray(req.species, np.int32)
-        self.pos[slot] = self._parked()
-        self.pos[slot, :n] = np.asarray(req.pos, np.float32)
-        self.mask[slot] = 0.0
-        self.mask[slot, :n] = 1.0
-        self.slot_req[slot] = req
-        return True
+        """Direct (scheduler-less) admission, kept for callers that manage
+        their own loop: validation failures reject structurally (the request
+        is consumed: ``rejected=True, done=True``) and return True; False
+        means no free slot right now."""
+        err = self.validate(req)
+        if err is not None:
+            req.rejected, req.done = True, True
+            req.reject_reason = f"{err[0]}:{err[1]}" if err[1] else err[0]
+            self.metrics.observe_reject(req, err[0])
+            return True
+        return self.try_admit(req)
 
     # ------------------------------------------------------------- stepping
-    def step(self):
-        """One fused evaluation for all active slots; advances relaxations
-        and retires finished requests."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return
-        e, f = self._step_fn(self.params, jnp.asarray(self.species),
-                             jnp.asarray(self.pos), jnp.asarray(self.mask))
-        e = np.asarray(e)
-        f = np.asarray(f)
-        for i in active:
-            req = self.slot_req[i]
-            n = len(req.species)
-            req.energy = float(e[i])
-            req.forces = f[i, :n].copy()
-            req.pos = self.pos[i, :n].copy()  # the evaluated geometry
-            req.steps -= 1
-            if req.steps <= 0:
-                req.done = True
-                self.slot_req[i] = None
-                self.mask[i] = 0.0
-            else:  # relaxation: steepest descent on the masked energy
-                self.pos[i, :n] += req.step_size * f[i, :n]
+    def step(self, overlap=None):
+        """One pipelined evaluation round: dispatch every active bucket's
+        jitted step (asynchronous), run the overlap callback (the
+        scheduler's admission pass — queue pops, validation, host slot
+        writes) and pre-stage idle pools' tensors while the device computes,
+        then block, retire finished requests, and advance relaxations."""
+        inflight = []
+        for pool in self.pools:
+            h = pool.begin_step()
+            if h is not None:
+                inflight.append((pool, h))
+        if overlap is not None:
+            overlap()
+        busy = {id(p) for p, _ in inflight}
+        for pool in self.pools:
+            # stage pools admitted-into during the overlap window (their
+            # step dispatches next round); in-flight pools re-stage after
+            # finish_step's relaxation writes
+            if id(pool) not in busy and pool.n_active():
+                pool.stage(early=True)
+        for pool, h in inflight:
+            pool.finish_step(h)
 
     def run(self, requests: list[EquivariantRequest]) -> list[EquivariantRequest]:
-        return _drain(self, requests)
+        return Scheduler(self, clock=self.clock).run(requests)

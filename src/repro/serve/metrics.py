@@ -1,0 +1,178 @@
+"""Serve observability (DESIGN.md §10.4).
+
+One `ServeMetrics` instance rides along an engine and its scheduler/pools:
+
+- **per-request latency** — queue wait (submit→admit), service
+  (admit→complete), and total (submit→complete), kept as raw second lists so
+  any percentile can be asked for after the fact (`percentile`, `p50`/`p99`);
+- **per-step gauges** — slot occupancy (active/total slots at each dispatched
+  step) and padding waste (real atoms vs padded atom-slots the step actually
+  computed on), both per pool and aggregated;
+- **counters** — submissions, admissions, completions, structured rejections
+  (`rejected:<reason>`), steps, early host-side stagings (the async-pipelining
+  overlap hits);
+- **engine surfacing** — `summary()` snapshots the Gaunt engine's
+  `timing_runs` counter and the `repro.core.rep` basis-conversion counters,
+  so a serve deployment can see mid-traffic autotune timing passes (there
+  must be none after warmup) and interior conversion regressions without
+  instrumenting the model.
+
+Everything is plain host-side Python (no device work, no locks — the serving
+loop is single-threaded by design); a fake clock can be injected for tests.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Optional
+
+__all__ = ["ServeMetrics", "percentile"]
+
+
+def percentile(xs, p: float) -> float:
+    """Linear-interpolated percentile of a sequence (p in [0, 100])."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    if len(s) == 1:
+        return float(s[0])
+    rank = (p / 100.0) * (len(s) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(s) - 1)
+    frac = rank - lo
+    return float(s[lo] * (1.0 - frac) + s[hi] * frac)
+
+
+class ServeMetrics:
+    """Mutable metrics sink shared by a serve engine, its scheduler, and its
+    slot pools.  All observation methods are cheap appends/increments."""
+
+    def __init__(self, clock=time.monotonic):
+        self.clock = clock
+        self.counters: collections.Counter = collections.Counter()
+        # latency samples (seconds)
+        self.queue_wait_s: list[float] = []
+        self.service_s: list[float] = []
+        self.total_s: list[float] = []
+        self.step_s: list[float] = []
+        # per-step gauge samples
+        self.occupancy: list[tuple[int, int]] = []   # (active, n_slots)
+        self.atoms_real = 0        # sum over steps of real atoms evaluated
+        self.atoms_padded = 0      # sum over steps of padded atom-slots
+        self.per_pool: dict[str, collections.Counter] = \
+            collections.defaultdict(collections.Counter)
+
+    def reset(self) -> None:
+        """Zero every counter/sample (the load generator reuses one warmed
+        engine across sweep points; compiled steps survive, numbers don't)."""
+        self.counters.clear()
+        self.queue_wait_s.clear()
+        self.service_s.clear()
+        self.total_s.clear()
+        self.step_s.clear()
+        self.occupancy.clear()
+        self.atoms_real = self.atoms_padded = 0
+        self.per_pool.clear()
+
+    # ------------------------------------------------------------ lifecycle
+    def observe_submit(self, req, now: Optional[float] = None) -> None:
+        req._submit_t = self.clock() if now is None else now
+        self.counters["submitted"] += 1
+
+    def observe_admit(self, req, now: Optional[float] = None) -> None:
+        now = self.clock() if now is None else now
+        req._admit_t = now
+        sub = getattr(req, "_submit_t", None)
+        if sub is not None:
+            self.queue_wait_s.append(now - sub)
+        self.counters["admitted"] += 1
+
+    def observe_reject(self, req, reason: str) -> None:
+        self.counters["rejected"] += 1
+        self.counters[f"rejected:{reason}"] += 1
+
+    def observe_complete(self, req, now: Optional[float] = None) -> None:
+        now = self.clock() if now is None else now
+        sub = getattr(req, "_submit_t", None)
+        adm = getattr(req, "_admit_t", None)
+        if sub is not None:
+            self.total_s.append(now - sub)
+        if adm is not None:
+            self.service_s.append(now - adm)
+        self.counters["completed"] += 1
+
+    # ------------------------------------------------------------ stepping
+    def observe_step(self, pool: str, active: int, n_slots: int,
+                     real_atoms: int, padded_atoms: int,
+                     dur_s: float) -> None:
+        self.counters["steps"] += 1
+        self.step_s.append(dur_s)
+        self.occupancy.append((active, n_slots))
+        self.atoms_real += real_atoms
+        self.atoms_padded += padded_atoms
+        pc = self.per_pool[pool]
+        pc["steps"] += 1
+        pc["active_slots"] += active
+        pc["atoms_real"] += real_atoms
+        pc["atoms_padded"] += padded_atoms
+
+    def observe_staged_early(self, pool: str) -> None:
+        """A pool's next-step tensors were staged on the host while another
+        step was in flight on the device (the pipelining overlap win)."""
+        self.counters["staged_early"] += 1
+        self.per_pool[pool]["staged_early"] += 1
+
+    # ------------------------------------------------------------ derived
+    def padding_efficiency(self) -> float:
+        """Real atoms / padded atom-slots over every dispatched step — 1.0
+        means no ghost-atom compute at all; a 12-atom molecule padded into a
+        256-atom slot scores 0.047."""
+        if self.atoms_padded == 0:
+            return 1.0
+        return self.atoms_real / self.atoms_padded
+
+    def occupancy_mean(self) -> float:
+        if not self.occupancy:
+            return 0.0
+        return sum(a for a, _ in self.occupancy) / \
+            max(1, sum(n for _, n in self.occupancy))
+
+    def summary(self) -> dict:
+        """One flat dict for logging / bench records — latency percentiles,
+        gauges, counters, and the engine-side counters (autotune timing runs
+        and basis-conversion totals) snapshotted at call time."""
+        out = {
+            "submitted": self.counters["submitted"],
+            "admitted": self.counters["admitted"],
+            "completed": self.counters["completed"],
+            "rejected": self.counters["rejected"],
+            "steps": self.counters["steps"],
+            "staged_early": self.counters["staged_early"],
+            "queue_wait_p50_ms": percentile(self.queue_wait_s, 50) * 1e3,
+            "queue_wait_p99_ms": percentile(self.queue_wait_s, 99) * 1e3,
+            "latency_p50_ms": percentile(self.total_s, 50) * 1e3,
+            "latency_p99_ms": percentile(self.total_s, 99) * 1e3,
+            "step_p50_ms": percentile(self.step_s, 50) * 1e3,
+            "step_p99_ms": percentile(self.step_s, 99) * 1e3,
+            "occupancy_mean": self.occupancy_mean(),
+            "padding_efficiency": self.padding_efficiency(),
+        }
+        for name, pc in self.per_pool.items():
+            out[f"pool:{name}:steps"] = pc["steps"]
+            if pc["atoms_padded"]:
+                out[f"pool:{name}:padding_efficiency"] = \
+                    pc["atoms_real"] / pc["atoms_padded"]
+        for k, v in self.counters.items():
+            if k.startswith("rejected:"):
+                out[k] = v
+        # engine-side counters: mid-serve timing passes (should be zero on a
+        # warm host) and interior basis conversions
+        try:
+            from repro.core import engine as _engine
+            from repro.core import rep as _rep
+
+            out["engine_timing_runs"] = _engine.get_engine().timing_runs
+            out["conversions"] = dict(_rep.conversion_stats())
+        except Exception:  # pragma: no cover - engine import must not break
+            pass
+        return out

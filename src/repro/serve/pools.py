@@ -1,0 +1,265 @@
+"""Size-bucketed slot pools for force-field serving (DESIGN.md §10.2).
+
+The single fixed-``max_atoms`` slot array that `EquivariantServeEngine`
+carried since PR 2 padded EVERY molecule to the worst case: a 12-atom
+molecule in a 256-atom deployment paid 256-atom pair geometry, convolution,
+and many-body products.  A `SlotPool` is that slot array scoped to one
+atom-count bucket — its own host arrays, its own ghost-atom parking, and its
+OWN jitted step function compiled for its own ``[n_slots, max_atoms]``
+shapes — and `BucketedPools` is the small/medium/large ladder: a request is
+routed to the smallest bucket it fits (`select`), so padding waste is
+bounded by the bucket ladder instead of the deployment maximum.
+
+Per-bucket compilation is lazy (a bucket that never sees traffic never
+compiles — counter-proven in tests/test_serve_scheduler.py) and per-bucket
+warmup is explicit: `EquivariantServeEngine.warmup()` seeds each bucket's
+measured chain/gate autotune keys at that bucket's own row count
+(``max_atoms * channels`` — the batch_hint the traced step actually sees)
+and compiles each step on ghost-only slots.
+
+Async host↔device pipelining (DESIGN.md §10.3) lives in the
+`begin_step`/`finish_step` split: `begin_step` uploads the staged slot
+tensors and dispatches the jitted step — JAX dispatch is asynchronous, so
+the call returns an in-flight handle while the device computes — and
+`finish_step` blocks, retires finished requests, and advances relaxations.
+Between the two, the engine runs the scheduler's admission pass and
+pre-stages other pools' tensors (`stage`), overlapping `jnp.asarray` +
+bookkeeping with device compute.  A pool whose host state did not change
+since the last upload reuses its staged device tensors (skipped when the
+step donates its inputs — donation consumes them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BucketSpec", "SlotPool", "BucketedPools", "default_buckets"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """One size bucket: molecules with ``n <= max_atoms`` atoms may land in
+    any of its ``n_slots`` slots."""
+    max_atoms: int
+    n_slots: int = 4
+    name: str = ""
+
+    def label(self) -> str:
+        return self.name or f"b{self.max_atoms}"
+
+
+def default_buckets(max_atoms: int, n_slots: int = 4,
+                    ladder=(4, 2, 1)) -> tuple[BucketSpec, ...]:
+    """A small/medium/large ladder under a deployment cap: bucket sizes
+    ``max_atoms // f`` for each ladder divisor (deduplicated, floor 2).
+    ``default_buckets(256)`` -> 64/128/256; tiny caps collapse to fewer
+    buckets (``default_buckets(4)`` is a single bucket)."""
+    names = {0: "small", 1: "medium", 2: "large"}
+    sizes = sorted({max(2, max_atoms // f) for f in ladder})
+    n = len(sizes)
+    return tuple(
+        BucketSpec(sz, n_slots, names.get(i + (3 - n), f"b{sz}"))
+        for i, sz in enumerate(sizes))
+
+
+class _Inflight:
+    """Handle for a dispatched-but-unfinished pool step."""
+    __slots__ = ("active", "energy", "forces", "t0")
+
+    def __init__(self, active, energy, forces, t0):
+        self.active = active
+        self.energy = energy
+        self.forces = forces
+        self.t0 = t0
+
+
+class SlotPool:
+    """Fixed atom-padded slots for ONE size bucket, with the bucket's own
+    compiled step function (vmapped masked energy + forces over slots)."""
+
+    def __init__(self, model, params, spec: BucketSpec, metrics=None,
+                 clock=time.monotonic):
+        self.model = model
+        self.params = params
+        self.spec = spec
+        self.metrics = metrics
+        self.clock = clock
+        n_slots, max_atoms = spec.n_slots, spec.max_atoms
+        self.slot_req: list[Optional[object]] = [None] * n_slots
+        self.species = np.zeros((n_slots, max_atoms), np.int32)
+        self.pos = np.asarray(self._parked(), np.float32)[None] \
+            .repeat(n_slots, 0)
+        self.mask = np.zeros((n_slots, max_atoms), np.float32)
+        self.steps_run = 0
+
+        def batched(params, species, pos, mask):
+            """All slots in one call: vmapped masked energy + forces."""
+            def one(sp, p, m):
+                e, g = jax.value_and_grad(
+                    lambda pp: model.energy_masked(params, sp, pp, m))(p)
+                return e, -g
+            return jax.vmap(one)(species, pos, mask)
+
+        # step inputs are fresh device buffers every step on accelerators
+        # (donation consumes them, so the staged-tensor reuse below is a
+        # CPU-only economy); on CPU nothing is donated and clean staged
+        # tensors survive across steps
+        self._donate = jax.default_backend() != "cpu"
+        donate = (1, 2, 3) if self._donate else ()
+        self._step_fn = jax.jit(batched, donate_argnums=donate)
+        self._staged = None          # (species_dev, pos_dev, mask_dev)
+        self._dirty = True
+
+    # ------------------------------------------------------------ queries
+    def compiled(self) -> bool:
+        """Whether this bucket's step function has ever compiled — the
+        no-cross-bucket-compile counter-proof hooks in here."""
+        return self._step_fn._cache_size() > 0
+
+    def fits(self, n_atoms: int) -> bool:
+        return n_atoms <= self.spec.max_atoms
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def n_active(self) -> int:
+        return sum(1 for r in self.slot_req if r is not None)
+
+    # ------------------------------------------------------------ slots
+    def _parked(self) -> np.ndarray:
+        """Ghost-atom positions: distinct sites far outside any cutoff, so
+        padded atoms interact with nothing (incl. each other)."""
+        far = 1e4 * (1.0 + np.arange(self.spec.max_atoms, dtype=np.float32))
+        return np.stack([far, np.zeros_like(far), np.zeros_like(far)], -1)
+
+    def admit(self, req) -> bool:
+        """Place a (validated, fitting) request into a free slot; host-side
+        writes only — safe while a step for the CURRENT slot contents is in
+        flight (the step read its own device copies at dispatch)."""
+        free = self.free_slots()
+        if not free:
+            return False
+        n = len(req.species)
+        slot = free[0]
+        self.species[slot] = 0
+        self.species[slot, :n] = np.asarray(req.species, np.int32)
+        self.pos[slot] = self._parked()
+        self.pos[slot, :n] = np.asarray(req.pos, np.float32)
+        self.mask[slot] = 0.0
+        self.mask[slot, :n] = 1.0
+        self.slot_req[slot] = req
+        self._dirty = True
+        return True
+
+    # ------------------------------------------------------------ stepping
+    def stage(self, early: bool = False) -> None:
+        """Upload the slot arrays to the device if they changed since the
+        last upload.  Called with ``early=True`` from the pipelining overlap
+        window (another pool's step in flight) — counted so the overlap is
+        observable, not just asserted."""
+        if self._staged is not None and not self._dirty:
+            return
+        self._staged = (jnp.asarray(self.species), jnp.asarray(self.pos),
+                        jnp.asarray(self.mask))
+        self._dirty = False
+        if early and self.metrics is not None:
+            self.metrics.observe_staged_early(self.spec.label())
+
+    def warmup_compile(self) -> None:
+        """Compile this bucket's step on its current (ghost-only at boot)
+        slot contents, blocking until done — the per-bucket half of
+        `EquivariantServeEngine.warmup()`."""
+        self.stage()
+        sp, p, m = self._staged
+        if self._donate:
+            self._staged = None
+        jax.block_until_ready(self._step_fn(self.params, sp, p, m))
+
+    def begin_step(self) -> Optional[_Inflight]:
+        """Dispatch one fused evaluation of every active slot; returns an
+        in-flight handle (device compute proceeds asynchronously)."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return None
+        self.stage()
+        sp, p, m = self._staged
+        if self._donate:
+            self._staged = None          # donated — never touch again
+        t0 = self.clock()
+        e, f = self._step_fn(self.params, sp, p, m)
+        return _Inflight(active, e, f, t0)
+
+    def finish_step(self, h: _Inflight) -> list:
+        """Block on the in-flight step, retire finished requests, advance
+        relaxations.  Returns the requests completed by this step."""
+        e = np.asarray(h.energy)       # blocks until the device finishes
+        f = np.asarray(h.forces)
+        dur = self.clock() - h.t0
+        self.steps_run += 1
+        completed = []
+        real_atoms = sum(len(self.slot_req[i].species) for i in h.active)
+        if self.metrics is not None:
+            self.metrics.observe_step(
+                self.spec.label(), active=len(h.active),
+                n_slots=self.spec.n_slots, real_atoms=real_atoms,
+                padded_atoms=len(h.active) * self.spec.max_atoms,
+                dur_s=dur)
+        for i in h.active:
+            req = self.slot_req[i]
+            n = len(req.species)
+            req.energy = float(e[i])
+            req.forces = f[i, :n].copy()
+            req.pos = self.pos[i, :n].copy()  # the evaluated geometry
+            req.steps -= 1
+            if req.steps <= 0:
+                req.done = True
+                self.slot_req[i] = None
+                self.mask[i] = 0.0
+                self._dirty = True
+                completed.append(req)
+                if self.metrics is not None:
+                    self.metrics.observe_complete(req, self.clock())
+            elif req.step_size != 0.0:
+                # relaxation: steepest descent on the masked energy
+                self.pos[i, :n] += req.step_size * f[i, :n]
+                self._dirty = True
+        return completed
+
+
+class BucketedPools:
+    """The bucket ladder: pools sorted by ``max_atoms`` ascending; a request
+    routes to the smallest bucket that fits it."""
+
+    def __init__(self, model, params, specs, metrics=None,
+                 clock=time.monotonic):
+        specs = sorted(specs, key=lambda s: s.max_atoms)
+        if len({s.max_atoms for s in specs}) != len(specs):
+            raise ValueError(f"duplicate bucket sizes: {specs}")
+        self.pools = [SlotPool(model, params, s, metrics=metrics,
+                               clock=clock) for s in specs]
+
+    def __iter__(self):
+        return iter(self.pools)
+
+    def __len__(self) -> int:
+        return len(self.pools)
+
+    @property
+    def max_atoms(self) -> int:
+        return self.pools[-1].spec.max_atoms
+
+    def select(self, n_atoms: int) -> Optional[SlotPool]:
+        """Smallest bucket with ``max_atoms >= n_atoms``; None if the
+        request exceeds even the largest bucket."""
+        for p in self.pools:
+            if p.fits(n_atoms):
+                return p
+        return None
+
+    def has_active(self) -> bool:
+        return any(p.n_active() for p in self.pools)

@@ -76,11 +76,46 @@ def test_relaxation_advances_and_returns_geometry(small_model):
 
 
 def test_oversized_request_rejected(small_model):
+    """Oversize is a structured rejection (reason 'too_large'), not an
+    exception: the request is consumed without ever touching a slot."""
     model, params = small_model
     eng = EquivariantServeEngine(model, params, n_slots=1, max_atoms=3)
     sp, pos = _mol(5, 8)
-    with pytest.raises(ValueError):
-        eng.add_request(EquivariantRequest(species=sp, pos=pos))
+    req = EquivariantRequest(species=sp, pos=pos)
+    assert eng.add_request(req)  # consumed, not admitted
+    assert req.rejected and req.done and req.energy is None
+    assert req.reject_reason.startswith("too_large")
+    assert eng.slot_req == [None]
+
+
+def test_invalid_geometry_rejected_not_evaluated(small_model):
+    """Admission-time validation: NaN positions, zero step budgets, empty
+    species, and shape mismatches are rejected with structured reasons and
+    never poison the shared batched step — a good request served in the
+    same run still gets the exact direct-evaluation energy."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, n_slots=2, max_atoms=6)
+    sp, pos = _mol(3, 21)
+    nan_pos = pos.copy()
+    nan_pos[1, 1] = np.nan
+    bad_nan = EquivariantRequest(species=sp, pos=nan_pos, rid=1)
+    bad_steps = EquivariantRequest(*_mol(3, 22), steps=0, rid=2)
+    bad_empty = EquivariantRequest(species=np.zeros(0, np.int64),
+                                   pos=np.zeros((0, 3)), rid=3)
+    bad_shape = EquivariantRequest(species=sp, pos=pos[:2], rid=4)
+    good = EquivariantRequest(*_mol(3, 23), rid=5)
+    out = eng.run([bad_nan, bad_steps, bad_empty, bad_shape, good])
+    assert all(r.done for r in out)
+    for bad in (bad_nan, bad_steps, bad_empty, bad_shape):
+        assert bad.rejected and bad.energy is None
+        assert bad.reject_reason.startswith("invalid"), bad.reject_reason
+    assert not good.rejected
+    e_direct = float(model.energy(params, jnp.asarray(good.species),
+                                  jnp.asarray(np.asarray(good.pos,
+                                                         np.float32))))
+    assert abs(good.energy - e_direct) < 1e-4 * max(1.0, abs(e_direct))
+    assert np.all(np.isfinite(good.forces))
+    assert eng.metrics.counters["rejected:invalid"] == 4
 
 
 def test_serve_step_runs_resident_and_sharded():
