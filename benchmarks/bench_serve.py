@@ -150,5 +150,108 @@ def run_serve(fast: bool = True, csv: bool = True, qps_list=None,
     return records
 
 
+def _chaos_workload(n_req: int, seed: int = 0):
+    """The mixed-size stream as short relaxations with retry budget — the
+    shape fault recovery must preserve (idempotent restart from snapshot)."""
+    reqs = _workload(n_req, seed)
+    for r in reqs:
+        r.steps = 2
+        r.step_size = 0.01
+        r.max_retries = 8
+    return reqs
+
+
+def run_serve_chaos(fast: bool = True, csv: bool = True, rates=None,
+                    n_req: int | None = None):
+    """Chaos proof (DESIGN.md §11.4): the SAME closed-loop request stream
+    drained fault-free and under seeded injected faults at sweep rates
+    (step raises + non-finite outputs + timeouts, equal thirds).  Records
+    per rate: lost requests (must be 0 — every request completed or
+    structurally rejected), whether every non-rejected result matches the
+    fault-free run bit-for-bit (retry idempotency), recovery p99, and
+    throughput degradation vs the fault-free baseline.  A final record
+    drives a 2-replica `ReplicaSet` with one replica's steps failing
+    deterministically until it is cordoned — its requests must complete on
+    the survivor."""
+    from repro.serve.engine import EquivariantServeEngine
+    from repro.serve.faults import FaultPlan, injected
+    from repro.serve.replicas import ReplicaSet
+
+    records = []
+    model, params = _tiny_model()
+    n_req = n_req or (24 if fast else 96)
+    rates = rates or ((0.05, 0.15) if fast else (0.02, 0.05, 0.15))
+
+    eng = EquivariantServeEngine(model, params, buckets=BUCKETS)
+    eng.warmup()
+    t_base = _drain_timed(eng, base := _chaos_workload(n_req))
+    baseline = {r.rid: r.energy for r in base if not r.rejected}
+
+    for rate in rates:
+        eng.metrics.reset()
+        plan = FaultPlan(seed=int(rate * 1000),
+                         rates={"step_raise": rate / 3,
+                                "step_nonfinite": rate / 3,
+                                "step_timeout": rate / 3},
+                         # every sweep point proves recovery from all three
+                         # kinds at least once, even at tiny rates
+                         at={"step_raise": (0,), "step_nonfinite": (1,),
+                             "step_timeout": (2,)})
+        reqs = _chaos_workload(n_req)
+        t0 = time.monotonic()
+        with injected(plan):
+            eng.run(reqs)
+        elapsed = time.monotonic() - t0
+        m = eng.metrics.summary()
+        lost = sum(1 for r in reqs if not r.done)
+        diffs = [abs(r.energy - baseline[r.rid]) for r in reqs
+                 if not r.rejected and r.rid in baseline]
+        record(records, f"serve_chaos_rate{rate:g}", elapsed * 1e6, echo=csv,
+               fault_rate=rate, faults_fired=len(plan.fired),
+               lost=lost, completed=m["completed"], rejected=m["rejected"],
+               results_match=bool(diffs and max(diffs) == 0.0
+                                  or not diffs),
+               max_energy_diff=float(max(diffs)) if diffs else 0.0,
+               step_failures=m["step_failures"], retries=m["retries"],
+               quarantined=m["quarantined"],
+               recovery_p99_ms=round(m["recovery_p99_ms"], 3),
+               throughput_rps=round(n_req / elapsed, 1),
+               degradation_vs_baseline=round(elapsed / t_base, 2),
+               n_requests=n_req)
+
+    # ---------------- replica failover under a deterministic outage --------
+    def factory(i, metrics):
+        e = EquivariantServeEngine(model, params, buckets=BUCKETS,
+                                   metrics=metrics, tag=f"replica{i}")
+        e.warmup()
+        return e
+
+    rset = ReplicaSet(factory, n_replicas=2, max_fail_streak=2,
+                      restart_backoff_s=5.0)   # no restart within the run:
+    #                                            survivors must carry it all
+    plan = FaultPlan(seed=0, rates={"step_raise": 1.0},
+                     scope=lambda ctx: ctx.get("tag") == "replica0")
+    reqs = _chaos_workload(n_req)
+    t0 = time.monotonic()
+    with injected(plan):
+        rset.run(reqs)
+    elapsed = time.monotonic() - t0
+    m = rset.metrics.summary()
+    lost = sum(1 for r in reqs if not r.done)
+    diffs = [abs(r.energy - baseline[r.rid]) for r in reqs
+             if not r.rejected and r.rid in baseline]
+    record(records, "serve_chaos_failover", elapsed * 1e6, echo=csv,
+           lost=lost, completed=m["completed"], rejected=m["rejected"],
+           results_match=bool(diffs and max(diffs) == 0.0 or not diffs),
+           failovers=m["failovers"],
+           requeued_on_failover=m["requeued_on_failover"],
+           replica_restarts=m["replica_restarts"],
+           recovery_p99_ms=round(m["recovery_p99_ms"], 3),
+           throughput_rps=round(n_req / elapsed, 1),
+           n_requests=n_req)
+    return records
+
+
 if __name__ == "__main__":
     run_serve(fast=True)
+    run_serve_chaos(fast=True)

@@ -50,6 +50,7 @@ def main() -> None:
         "engine_mixed": bench_engine.run_mixed_precision,
         "engine_autotune_cache": bench_engine.run_autotune_cache,
         "serve": lambda: bench_serve.run_serve(fast=args.fast),
+        "serve_chaos": lambda: bench_serve.run_serve_chaos(fast=args.fast),
         "fig1a": lambda: bench_feature_interaction.run(
             L_list=(1, 2, 3, 4) if args.fast else (1, 2, 3, 4, 5, 6, 8),
             backend=args.backend),

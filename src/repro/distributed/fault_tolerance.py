@@ -54,12 +54,19 @@ class PreemptionGuard:
 class StragglerMonitor:
     """Flags steps slower than `factor` x rolling median (straggler
     mitigation hook: the launcher logs and can trigger re-balancing or host
-    cordoning; here it surfaces the signal)."""
+    cordoning; serving cordons replicas on it — serve/replicas.py).
 
-    def __init__(self, window: int = 50, factor: float = 2.0):
+    ``flagged`` keeps only the most recent ``max_flagged`` events (a
+    long-lived serving host flags forever; an unbounded list is a slow
+    leak); ``total_flagged`` counts every flag ever raised and is what
+    `ServeMetrics.summary()` folds in."""
+
+    def __init__(self, window: int = 50, factor: float = 2.0,
+                 max_flagged: int = 256):
         self.times = deque(maxlen=window)
         self.factor = factor
-        self.flagged: list[tuple[int, float]] = []
+        self.flagged: deque[tuple[int, float]] = deque(maxlen=max_flagged)
+        self.total_flagged = 0
 
     def record(self, step: int, dt: float) -> bool:
         slow = False
@@ -68,5 +75,6 @@ class StragglerMonitor:
             slow = dt > self.factor * med
             if slow:
                 self.flagged.append((step, dt))
+                self.total_flagged += 1
         self.times.append(dt)
         return slow

@@ -1,5 +1,7 @@
 from .engine import (ServeEngine, Request,  # noqa: F401
                      EquivariantServeEngine, EquivariantRequest)
+from .faults import FaultPlan, InjectedFault, injected  # noqa: F401
 from .metrics import ServeMetrics, percentile  # noqa: F401
 from .pools import BucketSpec, BucketedPools, SlotPool, default_buckets  # noqa: F401
+from .replicas import ReplicaSet  # noqa: F401
 from .scheduler import AdmissionQueue, Scheduler  # noqa: F401

@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import faults
 from .metrics import ServeMetrics
 from .pools import BucketedPools, BucketSpec
 from .scheduler import REASON_INVALID, REASON_TOO_LARGE, Scheduler
@@ -141,6 +142,7 @@ class ServeEngine:
         if not free:
             return False
         slot = free[0]
+        pre = self.cache  # pre-admission cache (fast-retire restores it)
         self._reset_slot(slot)  # recurrent families accumulate state otherwise
         toks = jnp.asarray(req.prompt, jnp.int32)
         snapshot = self.cache
@@ -156,7 +158,10 @@ class ServeEngine:
         if len(req.output) >= req.max_new_tokens:
             # budget met by the prefill-sampled token: retire at admission,
             # never occupy the slot (a max_new_tokens=1 request used to get
-            # a second token before the post-step done check fired)
+            # a second token before the post-step done check fired) — and
+            # put the cache back exactly as found: the slot was never
+            # occupied, so its rows must not carry this prefill's state
+            self.cache = pre
             req.done = True
             self.metrics.observe_complete(req)
             return True
@@ -227,6 +232,10 @@ class EquivariantRequest:
     steps: int = 1
     step_size: float = 0.0        # relaxation: pos += step_size * forces
     rid: int = 0
+    # fault tolerance (DESIGN.md §11): failed/timed-out/non-finite steps
+    # retry this request from its admission snapshot up to max_retries
+    # total attempts beyond the first; past it -> reject_reason='step_failed'
+    max_retries: int = 2
     # scheduling (serve/scheduler.py): lower priority value = served first;
     # deadline = seconds of allowed queue wait from submission, None = none
     priority: int = 0
@@ -246,14 +255,20 @@ class EquivariantServeEngine:
     against the in-flight device compute."""
 
     def __init__(self, model, params, n_slots: int = 4, max_atoms: int = 16,
-                 warmup: bool = False, buckets=None, clock=time.monotonic):
+                 warmup: bool = False, buckets=None, clock=time.monotonic,
+                 step_timeout_s: float | None = None,
+                 retry_backoff_s: float = 5e-4, metrics=None, tag: str = ""):
         self.model = model
         self.params = params
         self.clock = clock
-        self.metrics = ServeMetrics(clock=clock)
+        self.tag = tag                 # replica label (fault scoping)
+        self.metrics = metrics if metrics is not None \
+            else ServeMetrics(clock=clock)
         specs = self._resolve_buckets(buckets, n_slots, max_atoms)
         self.pools = BucketedPools(model, params, specs,
-                                   metrics=self.metrics, clock=clock)
+                                   metrics=self.metrics, clock=clock,
+                                   step_timeout_s=step_timeout_s,
+                                   retry_backoff_s=retry_backoff_s, tag=tag)
         if warmup:
             self.warmup()
 
@@ -316,7 +331,13 @@ class EquivariantServeEngine:
         cache = getattr(cfg, "autotune_cache", None) if cfg is not None else None
         if cache is not None:
             eng.set_autotune_cache(cache)
-        eng._maybe_load_cache()
+        if faults._ACTIVE is not None and faults.fire(
+                "autotune_cache_load", tag=self.tag) is not None:
+            # unreadable persistent cache: degrade to cold measurement —
+            # serving still comes up, it just pays warmup timing runs
+            self.metrics.counters["autotune_cache_load_failed"] += 1
+        else:
+            eng._maybe_load_cache()
         if (cfg is not None
                 and getattr(cfg, "chain_tune", "heuristic") == "measure"
                 and not getattr(cfg, "shard_data", False)):
@@ -343,11 +364,26 @@ class EquivariantServeEngine:
                                            share_hint=(0,) * cfg.nu, dtype=d,
                                            gate=g)
         for pool in self.pools:
-            pool.warmup_compile()
+            # transient compile failures (injected or real) retry: a serving
+            # host that loses one compile attempt should come up, not die
+            for attempt in range(3):
+                try:
+                    pool.warmup_compile()
+                    break
+                except Exception:
+                    self.metrics.counters["warmup_retries"] += 1
+                    if attempt == 2:
+                        raise
 
     # ------------------------------------------------------------- admission
     def has_active(self) -> bool:
         return self.pools.has_active()
+
+    def evict_active(self) -> list:
+        """Pull every in-flight request out of every pool, restored to its
+        admission snapshot (replica failover: `serve/replicas.py` requeues
+        them onto surviving replicas)."""
+        return [r for p in self.pools for r in p.evict()]
 
     def validate(self, req: EquivariantRequest):
         """Admission-time validation -> None | (reason, detail).  Bad
@@ -356,6 +392,20 @@ class EquivariantServeEngine:
         species = np.asarray(req.species)
         if species.size == 0:
             return (REASON_INVALID, "empty species")
+        if not np.issubdtype(species.dtype, np.integer):
+            return (REASON_INVALID,
+                    f"species dtype {species.dtype} is not integral")
+        if species.min() < 0:
+            return (REASON_INVALID,
+                    f"negative species value {int(species.min())}")
+        n_species = getattr(getattr(self.model, "cfg", None),
+                            "n_species", None)
+        if n_species is not None and species.max() >= n_species:
+            # the jitted step's embedding gather clamps out-of-range
+            # indices, which would silently produce a wrong energy
+            return (REASON_INVALID,
+                    f"species value {int(species.max())} >= "
+                    f"n_species={n_species}")
         if getattr(req, "steps", 1) < 1:
             return (REASON_INVALID, f"steps={req.steps} < 1")
         pos = np.asarray(req.pos, np.float32)

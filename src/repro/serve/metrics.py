@@ -11,6 +11,12 @@ One `ServeMetrics` instance rides along an engine and its scheduler/pools:
 - **counters** — submissions, admissions, completions, structured rejections
   (`rejected:<reason>`), steps, early host-side stagings (the async-pipelining
   overlap hits);
+- **fault tolerance** (DESIGN.md §11) — step failures by kind
+  (`step_failures:<kind>`), per-request retries, non-finite slot
+  quarantines and bisect passes, replica failovers/restarts and requeued
+  in-flight requests, straggler flags (a capped `StragglerMonitor` rides
+  along), and time-to-recovery samples (failure detected → first successful
+  step afterwards) with p50/p99 in `summary()`;
 - **engine surfacing** — `summary()` snapshots the Gaunt engine's
   `timing_runs` counter and the `repro.core.rep` basis-conversion counters,
   so a serve deployment can see mid-traffic autotune timing passes (there
@@ -25,6 +31,8 @@ from __future__ import annotations
 import collections
 import time
 from typing import Optional
+
+from repro.distributed.fault_tolerance import StragglerMonitor
 
 __all__ = ["ServeMetrics", "percentile"]
 
@@ -61,6 +69,13 @@ class ServeMetrics:
         self.atoms_padded = 0      # sum over steps of padded atom-slots
         self.per_pool: dict[str, collections.Counter] = \
             collections.defaultdict(collections.Counter)
+        # fault tolerance (DESIGN.md §11): time-to-recovery samples, the
+        # completion sequence (failover ordering proofs read it), and a
+        # capped straggler monitor fed by every observed step duration
+        self.recovery_s: list[float] = []
+        self.completed_order: collections.deque = collections.deque(
+            maxlen=10_000)
+        self.straggler = StragglerMonitor()
 
     def reset(self) -> None:
         """Zero every counter/sample (the load generator reuses one warmed
@@ -73,6 +88,9 @@ class ServeMetrics:
         self.occupancy.clear()
         self.atoms_real = self.atoms_padded = 0
         self.per_pool.clear()
+        self.recovery_s.clear()
+        self.completed_order.clear()
+        self.straggler = StragglerMonitor()
 
     # ------------------------------------------------------------ lifecycle
     def observe_submit(self, req, now: Optional[float] = None) -> None:
@@ -100,6 +118,7 @@ class ServeMetrics:
         if adm is not None:
             self.service_s.append(now - adm)
         self.counters["completed"] += 1
+        self.completed_order.append(getattr(req, "rid", None))
 
     # ------------------------------------------------------------ stepping
     def observe_step(self, pool: str, active: int, n_slots: int,
@@ -115,6 +134,50 @@ class ServeMetrics:
         pc["active_slots"] += active
         pc["atoms_real"] += real_atoms
         pc["atoms_padded"] += padded_atoms
+        if self.straggler.record(self.counters["steps"], dur_s):
+            self.counters["straggler_steps"] += 1
+            pc["straggler_steps"] += 1
+
+    # ------------------------------------------------------ fault tolerance
+    def observe_step_failure(self, pool: str, kind: str) -> None:
+        """A pool step raised, timed out, or returned unusable results and
+        entered recovery (host-state rebuild + per-request retry)."""
+        self.counters["step_failures"] += 1
+        self.counters[f"step_failures:{kind}"] += 1
+        self.per_pool[pool]["step_failures"] += 1
+
+    def observe_retry(self, pool: str, kind: str) -> None:
+        """One request re-queued in its slot for another attempt (restarted
+        from its admission geometry snapshot — retry is idempotent)."""
+        self.counters["retries"] += 1
+        self.counters[f"retries:{kind}"] += 1
+        self.per_pool[pool]["retries"] += 1
+
+    def observe_quarantine(self, pool: str) -> None:
+        """One slot's results were non-finite and ONLY that slot was pulled
+        from the step's retirements (bucket-mates keep their numbers)."""
+        self.counters["quarantined"] += 1
+        self.per_pool[pool]["quarantined"] += 1
+
+    def observe_bisect(self, pool: str, evals: int) -> None:
+        """A collectively non-finite batch was bisected into per-slot
+        verdicts (``evals`` extra sub-batch evaluations)."""
+        self.counters["nonfinite_bisects"] += 1
+        self.counters["nonfinite_bisect_evals"] += evals
+        self.per_pool[pool]["nonfinite_bisects"] += 1
+
+    def observe_recovery(self, dur_s: float) -> None:
+        """Time-to-recovery: first failure detection in a pool → its next
+        successful step (includes retry backoff, honest end-to-end)."""
+        self.recovery_s.append(dur_s)
+
+    def observe_failover(self, replica, reason: str, n_requeued: int) -> None:
+        self.counters["failovers"] += 1
+        self.counters[f"failovers:{reason}"] += 1
+        self.counters["requeued_on_failover"] += n_requeued
+
+    def observe_restart(self, replica) -> None:
+        self.counters["replica_restarts"] += 1
 
     def observe_staged_early(self, pool: str) -> None:
         """A pool's next-step tensors were staged on the host while another
@@ -156,6 +219,17 @@ class ServeMetrics:
             "step_p99_ms": percentile(self.step_s, 99) * 1e3,
             "occupancy_mean": self.occupancy_mean(),
             "padding_efficiency": self.padding_efficiency(),
+            # fault tolerance (DESIGN.md §11)
+            "step_failures": self.counters["step_failures"],
+            "retries": self.counters["retries"],
+            "quarantined": self.counters["quarantined"],
+            "nonfinite_bisects": self.counters["nonfinite_bisects"],
+            "failovers": self.counters["failovers"],
+            "replica_restarts": self.counters["replica_restarts"],
+            "requeued_on_failover": self.counters["requeued_on_failover"],
+            "straggler_steps": self.straggler.total_flagged,
+            "recovery_p50_ms": percentile(self.recovery_s, 50) * 1e3,
+            "recovery_p99_ms": percentile(self.recovery_s, 99) * 1e3,
         }
         for name, pc in self.per_pool.items():
             out[f"pool:{name}:steps"] = pc["steps"]
@@ -163,7 +237,8 @@ class ServeMetrics:
                 out[f"pool:{name}:padding_efficiency"] = \
                     pc["atoms_real"] / pc["atoms_padded"]
         for k, v in self.counters.items():
-            if k.startswith("rejected:"):
+            if k.startswith(("rejected:", "step_failures:", "retries:",
+                             "failovers:")):
                 out[k] = v
         # engine-side counters: mid-serve timing passes (should be zero on a
         # warm host) and interior basis conversions

@@ -27,6 +27,23 @@ pre-stages other pools' tensors (`stage`), overlapping `jnp.asarray` +
 bookkeeping with device compute.  A pool whose host state did not change
 since the last upload reuses its staged device tensors (skipped when the
 step donates its inputs — donation consumes them).
+
+Step-level fault tolerance (DESIGN.md §11.2): the host slot arrays are the
+source of truth, so recovery from a failed step is cheap — drop the staged
+device tensors and re-stage.  A step that raises (dispatch or at the
+blocking read), exceeds the per-pool watchdog deadline (``step_timeout_s``
+against the injectable clock), or returns non-finite results enters
+`_on_step_failure`: every affected request is restarted from its admission
+geometry snapshot (retry is idempotent — relaxations restart from step 0)
+up to its ``max_retries``, past which it is structurally rejected with
+``reject_reason='step_failed:<kind>'``; the pool backs off exponentially
+(``retry_backoff_s``, consecutive-failure doubling) before re-dispatching.
+Non-finite outputs quarantine ONLY the offending slots — bucket-mates with
+finite numbers retire normally in the same step — and a batch that fails
+collectively is bisected into per-slot verdicts by re-evaluating masked
+sub-batches, so one degenerate geometry cannot poison its mates' results.
+Fault-injection points (`serve/faults.py`) thread through both halves of
+the step; they are no-ops unless a `FaultPlan` is installed.
 """
 from __future__ import annotations
 
@@ -37,6 +54,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from . import faults
 
 __all__ = ["BucketSpec", "SlotPool", "BucketedPools", "default_buckets"]
 
@@ -83,12 +102,16 @@ class SlotPool:
     compiled step function (vmapped masked energy + forces over slots)."""
 
     def __init__(self, model, params, spec: BucketSpec, metrics=None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, step_timeout_s: float | None = None,
+                 retry_backoff_s: float = 5e-4, tag: str = ""):
         self.model = model
         self.params = params
         self.spec = spec
         self.metrics = metrics
         self.clock = clock
+        self.step_timeout_s = step_timeout_s
+        self.retry_backoff_s = retry_backoff_s
+        self.tag = tag                 # fault-scope / replica label
         n_slots, max_atoms = spec.n_slots, spec.max_atoms
         self.slot_req: list[Optional[object]] = [None] * n_slots
         self.species = np.zeros((n_slots, max_atoms), np.int32)
@@ -96,6 +119,11 @@ class SlotPool:
             .repeat(n_slots, 0)
         self.mask = np.zeros((n_slots, max_atoms), np.float32)
         self.steps_run = 0
+        # recovery state (DESIGN.md §11.2)
+        self.failures = 0              # total failed steps (replica health)
+        self._fail_streak = 0          # consecutive failures -> backoff
+        self._cooldown_until = 0.0     # begin_step sits out until then
+        self._failed_at = None         # first failure of the current outage
 
         def batched(params, species, pos, mask):
             """All slots in one call: vmapped masked energy + forces."""
@@ -140,7 +168,10 @@ class SlotPool:
     def admit(self, req) -> bool:
         """Place a (validated, fitting) request into a free slot; host-side
         writes only — safe while a step for the CURRENT slot contents is in
-        flight (the step read its own device copies at dispatch)."""
+        flight (the step read its own device copies at dispatch).  The
+        admission geometry is snapshotted on the request: a retried or
+        failed-over request restarts from this snapshot, so retry is
+        idempotent (relaxations restart from step 0)."""
         free = self.free_slots()
         if not free:
             return False
@@ -153,6 +184,8 @@ class SlotPool:
         self.mask[slot] = 0.0
         self.mask[slot, :n] = 1.0
         self.slot_req[slot] = req
+        req._snap_pos = self.pos[slot, :n].copy()
+        req._snap_steps = int(getattr(req, "steps", 1))
         self._dirty = True
         return True
 
@@ -173,7 +206,13 @@ class SlotPool:
     def warmup_compile(self) -> None:
         """Compile this bucket's step on its current (ghost-only at boot)
         slot contents, blocking until done — the per-bucket half of
-        `EquivariantServeEngine.warmup()`."""
+        `EquivariantServeEngine.warmup()` (which retries transient compile
+        failures — the injected kind raises here, before any device work)."""
+        if faults._ACTIVE is not None and faults.fire(
+                "compile_fail", tag=self.tag,
+                pool=self.spec.label()) is not None:
+            raise faults.InjectedFault(
+                f"injected compile failure in bucket {self.spec.label()}")
         self.stage()
         sp, p, m = self._staged
         if self._donate:
@@ -182,26 +221,69 @@ class SlotPool:
 
     def begin_step(self) -> Optional[_Inflight]:
         """Dispatch one fused evaluation of every active slot; returns an
-        in-flight handle (device compute proceeds asynchronously)."""
+        in-flight handle (device compute proceeds asynchronously).  Returns
+        None while the pool is in retry backoff, and routes dispatch-time
+        exceptions (real or injected) into step-failure recovery."""
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
+            return None
+        if self._cooldown_until and self.clock() < self._cooldown_until:
+            return None                  # retry backoff: sit this round out
+        if faults._ACTIVE is not None and faults.fire(
+                "step_raise", tag=self.tag, pool=self.spec.label(),
+                n_active=len(active)) is not None:
+            self._on_step_failure(active, "step_raised")
             return None
         self.stage()
         sp, p, m = self._staged
         if self._donate:
             self._staged = None          # donated — never touch again
         t0 = self.clock()
-        e, f = self._step_fn(self.params, sp, p, m)
+        try:
+            e, f = self._step_fn(self.params, sp, p, m)
+        except Exception:
+            self._on_step_failure(active, "step_raised")
+            return None
         return _Inflight(active, e, f, t0)
 
     def finish_step(self, h: _Inflight) -> list:
         """Block on the in-flight step, retire finished requests, advance
-        relaxations.  Returns the requests completed by this step."""
-        e = np.asarray(h.energy)       # blocks until the device finishes
-        f = np.asarray(h.forces)
+        relaxations.  Returns the requests completed by this step.
+
+        The recovery half of the watchdog lives here: an exception at the
+        blocking read, a duration past ``step_timeout_s``, or non-finite
+        outputs route into `_on_step_failure` — non-finite outputs
+        quarantine ONLY the offending slots (bucket-mates retire normally;
+        a collectively failing batch is bisected first)."""
+        try:
+            e = np.asarray(h.energy)   # blocks until the device finishes
+            f = np.asarray(h.forces)
+        except Exception:
+            self._on_step_failure(h.active, "step_raised")
+            return []
         dur = self.clock() - h.t0
+        timed_out = (self.step_timeout_s is not None
+                     and dur > self.step_timeout_s)
+        if faults._ACTIVE is not None:
+            if faults.fire("step_timeout", tag=self.tag,
+                           pool=self.spec.label(),
+                           n_active=len(h.active)) is not None:
+                timed_out = True
+            nf = faults.fire("step_nonfinite", tag=self.tag,
+                             pool=self.spec.label(), n_active=len(h.active))
+            if nf is not None:
+                e = e.copy()
+                f = f.copy()
+                slots = nf.payload.get("slots", [0])
+                rel = range(len(h.active)) if slots == "all" \
+                    else [int(j) % len(h.active) for j in slots]
+                for j in rel:
+                    e[h.active[j]] = np.nan
+                    f[h.active[j]] = np.nan
+        if timed_out:
+            self._on_step_failure(h.active, "step_timeout")
+            return []
         self.steps_run += 1
-        completed = []
         real_atoms = sum(len(self.slot_req[i].species) for i in h.active)
         if self.metrics is not None:
             self.metrics.observe_step(
@@ -209,7 +291,29 @@ class SlotPool:
                 n_slots=self.spec.n_slots, real_atoms=real_atoms,
                 padded_atoms=len(h.active) * self.spec.max_atoms,
                 dur_s=dur)
-        for i in h.active:
+        finite = {i: self._finite(e, f, i) for i in h.active}
+        bad = [i for i in h.active if not finite[i]]
+        if bad and len(bad) == len(h.active) and len(h.active) > 1:
+            # the whole batch is non-finite: bisect into per-slot verdicts
+            # (one poisoned slot must not take its mates down with it)
+            truly_bad = self._bisect_nonfinite(list(h.active))
+            if truly_bad:
+                self._on_step_failure(sorted(truly_bad), "nonfinite",
+                                      quarantine=True)
+            transient = [i for i in h.active if i not in truly_bad
+                         and self.slot_req[i] is not None]
+            if transient:
+                # individually finite — the corruption was batch-level;
+                # plain retry, no quarantine accounting
+                self._on_step_failure(transient, "nonfinite_collective")
+            return []
+        if bad:
+            # per-slot quarantine: pull ONLY the offending slots from this
+            # step's retirements; finite bucket-mates retire normally below
+            self._on_step_failure(bad, "nonfinite", quarantine=True)
+        completed = []
+        good = [i for i in h.active if finite[i]]
+        for i in good:
             req = self.slot_req[i]
             n = len(req.species)
             req.energy = float(e[i])
@@ -228,7 +332,127 @@ class SlotPool:
                 # relaxation: steepest descent on the masked energy
                 self.pos[i, :n] += req.step_size * f[i, :n]
                 self._dirty = True
+        if good:
+            # the pool produced usable results: the outage (if any) is over
+            self._fail_streak = 0
+            self._cooldown_until = 0.0
+            if self._failed_at is not None:
+                if self.metrics is not None:
+                    self.metrics.observe_recovery(self.clock()
+                                                  - self._failed_at)
+                self._failed_at = None
         return completed
+
+    # --------------------------------------------------------- recovery
+    def _finite(self, e, f, i) -> bool:
+        n = len(self.slot_req[i].species)
+        return bool(np.isfinite(e[i]) and np.all(np.isfinite(f[i, :n])))
+
+    def _bisect_nonfinite(self, slots: list) -> set:
+        """Per-slot finite verdicts for a collectively non-finite batch, by
+        re-evaluating masked sub-batches from the host slot arrays: a group
+        whose re-evaluation separates finite from non-finite slots is
+        trusted; a group that fails collectively again is split in half.
+        Returns the set of slots that are INDIVIDUALLY non-finite."""
+        evals = 0
+
+        def verdicts(group):
+            nonlocal evals
+            evals += 1
+            mask = np.zeros_like(self.mask)
+            for i in group:
+                mask[i, :len(self.slot_req[i].species)] = 1.0
+            e, f = self._step_fn(self.params, jnp.asarray(self.species),
+                                 jnp.asarray(self.pos), jnp.asarray(mask))
+            e, f = np.asarray(e), np.asarray(f)
+            return {i: self._finite(e, f, i) for i in group}
+
+        def bisect(group):
+            v = verdicts(group)
+            bad = [i for i in group if not v[i]]
+            if len(group) == 1 or len(bad) < len(group):
+                return set(bad)
+            mid = len(group) // 2
+            return bisect(group[:mid]) | bisect(group[mid:])
+
+        bad = bisect(slots)
+        if self.metrics is not None:
+            self.metrics.observe_bisect(self.spec.label(), evals)
+        return bad
+
+    def _on_step_failure(self, slots: list, kind: str,
+                         quarantine: bool = False) -> None:
+        """Step-failure recovery for ``slots``: restart each affected
+        request from its admission snapshot (or structurally reject it past
+        ``max_retries``), rebuild device state from the host slot arrays,
+        and back off exponentially before the next dispatch."""
+        now = self.clock()
+        if self._failed_at is None:
+            self._failed_at = now
+        self.failures += 1
+        self._fail_streak += 1
+        self._cooldown_until = now + self.retry_backoff_s * \
+            (2.0 ** min(self._fail_streak - 1, 6))
+        if self.metrics is not None:
+            self.metrics.observe_step_failure(self.spec.label(), kind)
+        for i in slots:
+            req = self.slot_req[i]
+            if req is None:
+                continue
+            if quarantine and self.metrics is not None:
+                self.metrics.observe_quarantine(self.spec.label())
+            req._retries = getattr(req, "_retries", 0) + 1
+            if req._retries > max(0, int(getattr(req, "max_retries", 2))):
+                req.rejected = True
+                req.done = True
+                req.reject_reason = f"step_failed:{kind}"
+                req.energy = None
+                req.forces = None
+                if self.metrics is not None:
+                    self.metrics.observe_reject(req, "step_failed")
+                self.slot_req[i] = None
+                self.mask[i] = 0.0
+            else:
+                if self.metrics is not None:
+                    self.metrics.observe_retry(self.spec.label(), kind)
+                self._restore_slot(i)
+        # the staged device tensors may reflect the failed dispatch (or have
+        # been donated into it): drop them — the host arrays are the source
+        # of truth and the next stage() rebuilds device state from them
+        self._staged = None
+        self._dirty = True
+
+    def _restore_slot(self, i: int) -> None:
+        """Reset slot ``i`` to its request's admission snapshot (idempotent
+        retry: relaxation restarts from step 0 on the original geometry)."""
+        req = self.slot_req[i]
+        n = len(req.species)
+        self.pos[i] = self._parked()
+        self.pos[i, :n] = req._snap_pos
+        req.steps = req._snap_steps
+        req.energy = None
+        req.forces = None
+
+    def evict(self) -> list:
+        """Pull every active request out of the pool (replica failover):
+        each is restored to its admission snapshot and its slot freed, so
+        the caller can requeue it elsewhere.  Retry counts survive — a
+        failover does not launder a degenerate geometry's history."""
+        evicted = []
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            n = len(req.species)
+            req.pos = req._snap_pos.copy()
+            req.steps = req._snap_steps
+            req.energy = None
+            req.forces = None
+            self.slot_req[i] = None
+            self.mask[i] = 0.0
+            evicted.append(req)
+        self._staged = None
+        self._dirty = True
+        return evicted
 
 
 class BucketedPools:
@@ -236,12 +460,15 @@ class BucketedPools:
     routes to the smallest bucket that fits it."""
 
     def __init__(self, model, params, specs, metrics=None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, step_timeout_s: float | None = None,
+                 retry_backoff_s: float = 5e-4, tag: str = ""):
         specs = sorted(specs, key=lambda s: s.max_atoms)
         if len({s.max_atoms for s in specs}) != len(specs):
             raise ValueError(f"duplicate bucket sizes: {specs}")
         self.pools = [SlotPool(model, params, s, metrics=metrics,
-                               clock=clock) for s in specs]
+                               clock=clock, step_timeout_s=step_timeout_s,
+                               retry_backoff_s=retry_backoff_s, tag=tag)
+                      for s in specs]
 
     def __iter__(self):
         return iter(self.pools)

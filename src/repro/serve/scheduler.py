@@ -109,6 +109,11 @@ class Scheduler:
         self.queue = AdmissionQueue(clock)
         self.metrics = metrics if metrics is not None \
             else getattr(engine, "metrics", None)
+        # engines that re-submit work (a ReplicaSet failing over a cordoned
+        # replica's in-flight requests) need the queue to requeue into
+        attach = getattr(engine, "attach_queue", None)
+        if attach is not None:
+            attach(self.queue)
 
     # ------------------------------------------------------------ admission
     def submit(self, req) -> None:

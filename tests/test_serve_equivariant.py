@@ -118,6 +118,36 @@ def test_invalid_geometry_rejected_not_evaluated(small_model):
     assert eng.metrics.counters["rejected:invalid"] == 4
 
 
+def test_out_of_range_species_rejected(small_model):
+    """Species values are validated at admission: negative, >= n_species,
+    or non-integral species would flow into the jitted step where gather
+    clamping silently produces a WRONG energy — they must reject with a
+    structured 'invalid' reason instead, and a good request in the same
+    run still serves exactly."""
+    model, params = small_model          # cfg.n_species == 4
+    eng = EquivariantServeEngine(model, params, n_slots=2, max_atoms=6)
+    sp, pos = _mol(3, 31)
+    neg = np.array(sp, np.int64)
+    neg[0] = -1
+    high = np.array(sp, np.int64)
+    high[1] = model.cfg.n_species        # first out-of-range value
+    bad_neg = EquivariantRequest(species=neg, pos=pos.copy(), rid=1)
+    bad_high = EquivariantRequest(species=high, pos=pos.copy(), rid=2)
+    bad_float = EquivariantRequest(species=np.asarray(sp, np.float32),
+                                   pos=pos.copy(), rid=3)
+    good = EquivariantRequest(*_mol(3, 32), rid=4)
+    out = eng.run([bad_neg, bad_high, bad_float, good])
+    assert all(r.done for r in out)
+    for bad in (bad_neg, bad_high, bad_float):
+        assert bad.rejected and bad.energy is None, bad.rid
+        assert bad.reject_reason.startswith("invalid"), bad.reject_reason
+    assert not good.rejected
+    e_direct = float(model.energy(params, jnp.asarray(good.species),
+                                  jnp.asarray(np.asarray(good.pos,
+                                                         np.float32))))
+    assert abs(good.energy - e_direct) < 1e-4 * max(1.0, abs(e_direct))
+
+
 def test_serve_step_runs_resident_and_sharded():
     """The continuous-batching step keeps basis residency under a sharded
     config (PR 4: no more resident/sharded fork): a shard_data=True,

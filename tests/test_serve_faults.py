@@ -1,0 +1,477 @@
+"""Fault-tolerant serving (DESIGN.md §11): deterministic fault injection,
+step-level recovery (idempotent retries, structured rejection past the
+budget), non-finite quarantine that spares bucket-mates, warmup-time fault
+handling, replica failover that preserves (priority, FIFO) order — and the
+subprocess acceptance proof: a cordoned replica's requests complete on the
+survivor with zero mid-serve autotune timing runs on a warm cache."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.gaunt_ff import gaunt_mace_ff
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.models.equivariant import MaceGaunt
+from repro.serve.engine import EquivariantRequest, EquivariantServeEngine
+from repro.serve.faults import FaultPlan, InjectedFault, fire, injected
+from repro.serve.replicas import ReplicaSet
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(gaunt_mace_ff, channels=8, n_layers=1, L=1,
+                              L_edge=1, n_species=4)
+    model = MaceGaunt(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _mol(n, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 4, n),
+            (rng.normal(size=(n, 3)) * 1.5).astype(np.float32))
+
+
+def _reqs(n_req=6, steps=2, step_size=0.01, max_retries=8):
+    return [EquivariantRequest(*_mol(3 + (i % 3), seed=i), rid=i,
+                               steps=steps, step_size=step_size,
+                               max_retries=max_retries)
+            for i in range(n_req)]
+
+
+def _direct_energy(model, params, r):
+    return float(model.energy(params, jnp.asarray(r.species),
+                              jnp.asarray(np.asarray(r.pos, np.float32))))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism (no model needed)
+# ---------------------------------------------------------------------------
+
+
+def test_same_seed_same_schedule():
+    """Satellite (a): two plans with the same seed realize the SAME fault
+    schedule over the same invocation stream — chaos runs replay exactly."""
+    def drive(plan):
+        with injected(plan):
+            for _ in range(200):
+                fire("step_raise", n_active=2)
+                fire("step_nonfinite", n_active=2)
+        return plan.schedule_keys(), [s.payload for s in plan.fired]
+
+    a = drive(FaultPlan(seed=7, rates={"step_raise": 0.1,
+                                       "step_nonfinite": 0.1}))
+    b = drive(FaultPlan(seed=7, rates={"step_raise": 0.1,
+                                       "step_nonfinite": 0.1}))
+    assert a == b and a[0], "same seed must fire identically (and fire)"
+    c = drive(FaultPlan(seed=8, rates={"step_raise": 0.1,
+                                       "step_nonfinite": 0.1}))
+    assert a[0] != c[0], "different seeds should realize different schedules"
+
+
+def test_point_streams_are_independent():
+    """A point's schedule is a pure function of (seed, its own invocation
+    index): adding traffic on OTHER points does not shift it."""
+    p1 = FaultPlan(seed=3, rates={"step_raise": 0.2})
+    with injected(p1):
+        for _ in range(100):
+            fire("step_raise", n_active=1)
+    p2 = FaultPlan(seed=3, rates={"step_raise": 0.2, "step_timeout": 0.5})
+    with injected(p2):
+        for _ in range(100):
+            fire("step_timeout", n_active=1)   # interleaved other-point noise
+            fire("step_raise", n_active=1)
+    assert [k for k in p1.schedule_keys()] == \
+        [k for k in p2.schedule_keys() if k[0] == "step_raise"]
+
+
+def test_scope_gates_without_advancing_counter():
+    """Out-of-scope invocations neither fire nor consume invocation indices:
+    the scoped stream sees the same schedule as an unscoped run of only the
+    in-scope calls."""
+    scoped = FaultPlan(seed=5, at={"step_raise": (0, 2)},
+                       scope=lambda ctx: ctx.get("tag") == "replica1")
+    with injected(scoped):
+        for i in range(6):
+            fire("step_raise", tag=f"replica{i % 2}", n_active=1)
+    # replica1 sees in-scope invocations 0,1,2 -> fires at its 0 and 2
+    assert scoped.schedule_keys() == [("step_raise", 0), ("step_raise", 2)]
+
+
+def test_unknown_point_rejected():
+    with pytest.raises(ValueError):
+        FaultPlan(rates={"not_a_point": 1.0})
+    plan = FaultPlan()
+    with pytest.raises(ValueError):
+        plan.check("not_a_point")
+
+
+def test_no_plan_fire_is_noop():
+    assert fire("step_raise", n_active=1) is None
+
+
+# ---------------------------------------------------------------------------
+# step-level recovery on the real engine
+# ---------------------------------------------------------------------------
+
+
+def test_faulted_results_match_fault_free(small_model):
+    """Satellite (b): under injected raises + NaNs + timeouts, every request
+    still completes and every completed result — including multi-step
+    relaxations — is IDENTICAL to the fault-free run (retries restart from
+    the admission snapshot, so recovery never changes numbers)."""
+    model, params = small_model
+    base = EquivariantServeEngine(model, params, buckets=[(6, 2)]) \
+        .run(_reqs())
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 2)])
+    plan = FaultPlan(seed=1, rates={"step_raise": 0.15,
+                                    "step_nonfinite": 0.15,
+                                    "step_timeout": 0.1})
+    with injected(plan):
+        out = eng.run(_reqs())
+    assert plan.fired, "the plan must actually have injected faults"
+    assert eng.metrics.counters["step_failures"] > 0
+    for b, o in zip(base, out):
+        assert o.done and not o.rejected, (o.rid, o.reject_reason)
+        assert o.energy == b.energy, o.rid
+        np.testing.assert_array_equal(o.forces, b.forces)
+        np.testing.assert_array_equal(o.pos, b.pos)
+
+
+def test_retry_exhaustion_rejects_structurally(small_model):
+    """A request whose every attempt fails is rejected with the structured
+    ``step_failed:*`` reason, not lost or left hanging."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)])
+    req = _reqs(1, max_retries=2)[0]
+    with injected(FaultPlan(seed=0, rates={"step_raise": 1.0})):
+        out = eng.run([req])[0]
+    assert out.done and out.rejected
+    assert out.reject_reason == "step_failed:step_raised"
+    assert out.energy is None and out.forces is None
+    s = eng.metrics.summary()
+    assert s["rejected:step_failed"] == 1
+    assert s["retries"] == 2        # budget honored exactly
+    assert s["step_failures"] == 3  # initial attempt + 2 retries
+
+
+def test_quarantine_spares_bucket_mates(small_model):
+    """Satellite (c): a non-finite slot is quarantined ALONE — its bucket-
+    mate retires in the same step with its normal (fault-free) energy."""
+    model, params = small_model
+    base = EquivariantServeEngine(model, params, buckets=[(6, 2)]) \
+        .run(_reqs(2, steps=1, step_size=0.0))
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 2)])
+    plan = FaultPlan(seed=0, at={"step_nonfinite": (0,)},
+                     payload={"step_nonfinite": {"slots": [0]}})
+    with injected(plan):
+        out = eng.run(_reqs(2, steps=1, step_size=0.0))
+    assert all(o.done and not o.rejected for o in out)
+    assert eng.metrics.counters["quarantined"] == 1
+    # the mate (slot 1) retired on the FIRST step, untouched by recovery
+    assert out[1].energy == base[1].energy
+    assert out[0].energy == base[0].energy   # retried to the same number
+    assert eng.metrics.counters["retries"] == 1
+
+
+def test_collective_nonfinite_bisects_to_retry(small_model):
+    """slots='all' poisons the whole batch: the pool bisects, finds every
+    slot individually finite (batch-level corruption), and retries them all
+    without quarantine accounting — results still match fault-free."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 2)])
+    plan = FaultPlan(seed=0, at={"step_nonfinite": (0,)},
+                     payload={"step_nonfinite": {"slots": "all"}})
+    with injected(plan):
+        out = eng.run(_reqs(2, steps=1, step_size=0.0))
+    assert all(o.done and not o.rejected for o in out)
+    s = eng.metrics.summary()
+    assert s["nonfinite_bisects"] == 1
+    assert s["quarantined"] == 0
+    assert s["step_failures:nonfinite_collective"] == 1
+    base = EquivariantServeEngine(model, params, buckets=[(6, 2)]) \
+        .run(_reqs(2, steps=1, step_size=0.0))
+    assert [o.energy for o in out] == [b.energy for b in base]
+
+
+def test_real_watchdog_timeout(small_model):
+    """The non-injected watchdog: with ``step_timeout_s=0.0`` every step
+    exceeds its deadline against the real clock, so the request burns its
+    retry budget and is rejected as ``step_failed:step_timeout``."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)],
+                                 step_timeout_s=0.0)
+    out = eng.run(_reqs(1, max_retries=1))[0]
+    assert out.rejected and out.reject_reason == "step_failed:step_timeout"
+    assert eng.metrics.counters["step_failures:step_timeout"] == 2
+
+
+def test_recovery_time_recorded(small_model):
+    """Time-to-recovery samples land in the metrics (first failure detection
+    -> next successful finish) and surface as p50/p99 in summary()."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)])
+    with injected(FaultPlan(seed=0, at={"step_raise": (0,)})):
+        eng.run(_reqs(1))
+    assert len(eng.metrics.recovery_s) == 1
+    s = eng.metrics.summary()
+    assert s["recovery_p99_ms"] >= s["recovery_p50_ms"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# warmup-time faults
+# ---------------------------------------------------------------------------
+
+
+def test_compile_fail_warmup_retries(small_model):
+    """A transient warmup compile failure is retried (counted), and the
+    engine then serves normally."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)])
+    with injected(FaultPlan(seed=0, at={"compile_fail": (0,)})):
+        eng.warmup()
+    assert eng.metrics.counters["warmup_retries"] == 1
+    out = eng.run(_reqs(1))[0]
+    assert out.done and not out.rejected
+
+
+def test_compile_fail_persistent_raises(small_model):
+    """Three consecutive compile failures exhaust warmup's retry budget and
+    surface the error — a host that cannot compile must not claim warm."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)])
+    with injected(FaultPlan(seed=0, at={"compile_fail": (0, 1, 2)})):
+        with pytest.raises(InjectedFault):
+            eng.warmup()
+    assert eng.metrics.counters["warmup_retries"] == 3
+
+
+def test_autotune_cache_unreadable_degrades(small_model):
+    """An unreadable persistent autotune cache at warmup is survivable:
+    the engine counts the degradation and still serves correctly."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)])
+    with injected(FaultPlan(seed=0, at={"autotune_cache_load": (0,)})):
+        eng.warmup()
+    assert eng.metrics.counters["autotune_cache_load_failed"] == 1
+    out = eng.run(_reqs(1))[0]
+    assert out.done and not out.rejected
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor (satellite: capped memory + summary fold)
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_flagged_is_capped():
+    mon = StragglerMonitor(window=20, factor=2.0, max_flagged=8)
+    for i in range(10):
+        mon.record(i, 1.0)            # build the baseline
+    for i in range(100):
+        mon.record(100 + i, 10.0)     # everything after is a straggler
+    assert len(mon.flagged) == 8      # bounded on a long-lived host
+    assert mon.total_flagged > 8      # but the count is not lost
+
+
+def test_straggler_count_in_serve_summary(small_model):
+    """Step durations feed the metrics' straggler monitor; the summary
+    reports the total."""
+    model, params = small_model
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)])
+    # prime a fast baseline, then a slow outlier via the metrics layer
+    for i in range(12):
+        eng.metrics.observe_step("b6", 1, 1, 3, 6, dur_s=1e-3)
+    eng.metrics.observe_step("b6", 1, 1, 3, 6, dur_s=1.0)
+    s = eng.metrics.summary()
+    assert s["straggler_steps"] == 1
+    assert eng.metrics.per_pool["b6"]["straggler_steps"] == 1
+
+
+# ---------------------------------------------------------------------------
+# replica failover
+# ---------------------------------------------------------------------------
+
+
+def _factory(model, params, **kw):
+    def make(i, metrics):
+        return EquivariantServeEngine(model, params, buckets=[(6, 1)],
+                                      metrics=metrics, tag=f"replica{i}",
+                                      **kw)
+    return make
+
+
+def test_failover_preserves_priority_fifo_order(small_model):
+    """Satellite (d): a cordoned replica's in-flight request rejoins the
+    queue at its ORIGINAL (priority, _seq) standing — it is re-served ahead
+    of lower-priority work that was queued after it, and completes with its
+    fault-free numbers."""
+    model, params = small_model
+    rset = ReplicaSet(_factory(model, params), n_replicas=2,
+                      max_fail_streak=2, restart_backoff_s=60.0)
+    doomed = EquivariantRequest(*_mol(4, seed=0), rid=0, priority=-1,
+                                steps=2, step_size=0.01, max_retries=10)
+    rest = [EquivariantRequest(*_mol(3 + i, seed=10 + i), rid=1 + i,
+                               steps=2, step_size=0.01, max_retries=10)
+            for i in range(3)]
+    # replica0 (which top-priority `doomed` is admitted to first) always
+    # fails; the survivor must serve everything
+    plan = FaultPlan(seed=0, rates={"step_raise": 1.0},
+                     scope=lambda ctx: ctx.get("tag") == "replica0")
+    with injected(plan):
+        out = rset.run([doomed] + rest)
+    assert all(r.done and not r.rejected for r in out)
+    m = rset.metrics.summary()
+    assert m["failovers"] >= 1
+    assert m["requeued_on_failover"] >= 1
+    assert doomed._seq == 0, "failover must not re-sequence the request"
+    order = list(rset.metrics.completed_order)
+    # priority -1 work completes before the lowest-standing priority-0 work
+    # it was requeued ahead of
+    assert order.index(0) < order.index(3)
+    # numbers are the single-engine fault-free numbers
+    base_eng = EquivariantServeEngine(model, params, buckets=[(6, 2)])
+    base = base_eng.run([EquivariantRequest(*_mol(4, seed=0), rid=0,
+                                            steps=2, step_size=0.01)])[0]
+    assert doomed.energy == base.energy
+
+
+def test_cordoned_replica_restarts_with_backoff(small_model):
+    """After the backoff elapses the cordoned replica rejoins the fleet
+    (same engine, fresh health state) and serves new work."""
+    model, params = small_model
+    rset = ReplicaSet(_factory(model, params), n_replicas=2,
+                      max_fail_streak=1, restart_backoff_s=0.0)
+    plan = FaultPlan(seed=0, rates={"step_raise": 1.0}, max_fires=1,
+                     scope=lambda ctx: ctx.get("tag") == "replica0")
+    with injected(plan):
+        out = rset.run(_reqs(4))
+    assert all(r.done and not r.rejected for r in out)
+    m = rset.metrics.summary()
+    assert m["failovers:step_failures"] == 1
+    assert m["replica_restarts"] == 1
+    assert all(r.live for r in rset.replicas)
+
+
+def test_heartbeat_stale_cordons(small_model, tmp_path):
+    """A replica whose heartbeat FILE is stale (the cluster health-checker
+    signal, wall-time based) is cordoned even if it never observably failed
+    a step in-process."""
+    import json as _json
+    import time as _time
+    model, params = small_model
+    rset = ReplicaSet(_factory(model, params), n_replicas=2,
+                      stale_after_s=30.0, restart_backoff_s=60.0,
+                      heartbeat_dir=str(tmp_path))
+    # age replica0's heartbeat far past the staleness horizon
+    hb = rset.replicas[0].heartbeat.path
+    with open(hb, "w") as f:
+        _json.dump({"step": 0, "t": _time.time() - 1e4, "pid": 0}, f)
+    out = rset.run(_reqs(3))
+    assert all(r.done and not r.rejected for r in out)
+    m = rset.metrics.summary()
+    assert m["failovers:heartbeat_stale"] == 1
+    assert not rset.replicas[0].live
+
+
+def test_replicaset_through_scheduler_attaches_queue(small_model):
+    """Scheduler construction hands its AdmissionQueue to the ReplicaSet
+    (the failover requeue path), without the single-engine stack changing."""
+    model, params = small_model
+    rset = ReplicaSet(_factory(model, params), n_replicas=2)
+    sched = Scheduler(rset)
+    assert rset._queue is sched.queue
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)])
+    Scheduler(eng)   # engines without attach_queue are untouched
+
+
+# ---------------------------------------------------------------------------
+# acceptance: failover in a subprocess on a warm autotune cache
+# ---------------------------------------------------------------------------
+
+_FAILOVER_CHILD = r"""
+import dataclasses, os
+import numpy as np
+import jax
+from repro.configs.gaunt_ff import gaunt_mace_ff
+from repro.models.equivariant import MaceGaunt
+from repro.serve.engine import EquivariantRequest, EquivariantServeEngine
+from repro.serve.faults import FaultPlan, injected
+from repro.serve.replicas import ReplicaSet
+from repro.core import engine as ce
+
+cfg = dataclasses.replace(gaunt_mace_ff, channels=4, n_layers=1, L=1,
+                          L_edge=1, n_species=4, chain_tune="measure",
+                          autotune_cache=os.environ["CACHE_PATH"])
+model = MaceGaunt(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+def factory(i, metrics):
+    eng = EquivariantServeEngine(model, params, buckets=[(6, 1)],
+                                 metrics=metrics, tag=f"replica{i}")
+    eng.warmup()
+    return eng
+
+rset = ReplicaSet(factory, n_replicas=2, max_fail_streak=2,
+                  restart_backoff_s=60.0)
+g = ce.get_engine()
+warm_runs = g.timing_runs
+rng = np.random.default_rng(0)
+reqs = [EquivariantRequest(species=rng.integers(0, 4, 3 + i % 3),
+                           pos=(rng.normal(size=(3 + i % 3, 3)) * 1.5)
+                           .astype(np.float32), rid=i, steps=2,
+                           step_size=0.01, max_retries=10)
+        for i in range(4)]
+plan = FaultPlan(seed=0, rates={"step_raise": 1.0},
+                 scope=lambda ctx: ctx.get("tag") == "replica0")
+with injected(plan):
+    rset.run(reqs)
+assert all(r.done and not r.rejected for r in reqs), reqs
+m = rset.metrics.summary()
+assert m["failovers"] >= 1, m
+assert not rset.replicas[0].live, "the failing replica must be cordoned"
+g.flush_autotune_cache()
+print("RUNS=" + str(g.timing_runs))
+print("MIDSERVE=" + str(g.timing_runs - warm_runs))
+print("FAILOVER_OK")
+"""
+
+
+def _subprocess_env() -> dict:
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+        __file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    return env
+
+
+def test_failover_completes_on_survivor_with_warm_cache(tmp_path):
+    """ISSUE acceptance: in a fresh process, one replica of a ReplicaSet
+    fails every step, is cordoned, and its requests complete on the
+    survivor; on the second (warm-cache) process the ENTIRE run — warmup
+    included — performs zero autotune timing runs, and neither process ever
+    time-measures mid-serve (failover re-staging must not re-autotune)."""
+    env = _subprocess_env()
+    env["CACHE_PATH"] = str(tmp_path / "failover_cache.json")
+    out = []
+    for _ in range(2):
+        r = subprocess.run([sys.executable, "-c", _FAILOVER_CHILD],
+                           capture_output=True, text=True, env=env,
+                           timeout=900)
+        assert "FAILOVER_OK" in r.stdout, (r.stdout[-2000:],
+                                           r.stderr[-2000:])
+        vals = dict(ln.split("=", 1) for ln in r.stdout.splitlines()
+                    if "=" in ln)
+        out.append((int(vals["RUNS"]), int(vals["MIDSERVE"])))
+    (cold_runs, cold_mid), (warm_runs, warm_mid) = out
+    assert cold_runs > 0, "cold process should have measured something"
+    assert cold_mid == 0 and warm_mid == 0, \
+        "failover recovery must never trigger mid-serve timing runs"
+    assert warm_runs == 0, \
+        f"warm process ran {warm_runs} timing passes (cache not consulted)"

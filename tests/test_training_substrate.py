@@ -241,6 +241,30 @@ def test_serve_engine_budget_one_stops_at_one_token():
     assert out[0].output == [int(jnp.argmax(logits[0, -1]))]
 
 
+def test_serve_engine_budget_one_leaves_cache_clean():
+    """Fast-retire regression: a max_new_tokens=1 request retires at
+    admission WITHOUT occupying a slot, so its prefill must not leave that
+    slot's cache rows dirty — the cache after the fast-retire is exactly
+    the cache before it (a later tenant of the slot starts from the same
+    state it would have without the fast-retire)."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    eng = ServeEngine(m, params, n_slots=1, max_len=32)
+    before = jax.tree.map(np.asarray, eng.cache)
+    eng.run([Request(prompt=[1, 2, 3], max_new_tokens=1, rid=0)])
+    after = jax.tree.map(np.asarray, eng.cache)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b)
+    # and a normal request through the same slot afterwards decodes exactly
+    # as it would on a fresh engine
+    req = Request(prompt=[4, 5], max_new_tokens=3, rid=1)
+    eng.run([req])
+    fresh = Request(prompt=[4, 5], max_new_tokens=3, rid=1)
+    ServeEngine(m, params, n_slots=1, max_len=32).run([fresh])
+    assert req.output == fresh.output
+
+
 def test_serve_sampling_reproducible_across_admission_order():
     """Sampled outputs derive from (engine seed, rid, token index): the
     same request sampled at temperature>0 produces the SAME tokens no
